@@ -1,0 +1,24 @@
+"""Flit-level simulator vs analytic closed forms (Appendix Fig 13 +
+validation of eqs 3/14/20)."""
+from __future__ import annotations
+
+from benchmarks.common import time_us
+from repro.core.flitsim import (
+    ANALYTIC, SIMULATORS, simulate_lpddr6_pipelining,
+)
+
+
+def run(rows: list):
+    for key, sim in SIMULATORS.items():
+        worst = 0.0
+        for (x, y) in [(1, 0), (2, 1), (1, 1), (1, 2), (0, 1)]:
+            a = float(ANALYTIC[key].bw_eff(x, y))
+            s = sim(x, y)
+            worst = max(worst, abs(a - s) / a)
+        us = time_us(lambda: sim(2, 1), iters=3)
+        rows.append((f"flitsim/{key}", us,
+                     f"worst_err_vs_analytic={worst:.4%}"))
+    for k in (1, 2, 3, 4):
+        u = simulate_lpddr6_pipelining(k)
+        rows.append((f"flitsim/lpddr6_pipelining_k{k}", 0.0,
+                     f"link_utilization={u:.3f}"))

@@ -1,0 +1,98 @@
+"""Paper tables/figures reproduced from the core models.
+
+  table1   — UCIe key metrics (Table 1)
+  fig10    — BW density (linear/areal), UCIe-A approaches vs HBM4/LPDDR6
+  fig11    — BW density, UCIe-S approaches vs HBM4/LPDDR6
+  fig12    — power efficiency (pJ/b), UCIe-A and UCIe-S vs HBM4
+  latency  — §IV.A round-trip latency comparison
+  cost     — relative cost model ranking (§I/§V cost claims)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_us
+from repro.core import (
+    ALL_APPROACHES, HBM4, LPDDR6, MEASURED_FRONTEND_LATENCY_NS, PAPER_MIXES,
+    UCIE_A_32G_55U, UCIE_S_32G, cost, latency_speedup, mixes_named, table1,
+)
+
+
+def bench_table1(rows):
+    t1 = table1()
+    for variant, metrics in t1.items():
+        derived = (f"rate_max={max(metrics['data_rates_gtps'])}GT/s;"
+                   f"width={metrics['width_per_direction']};"
+                   f"latency={metrics['latency_roundtrip_ns']}ns")
+        rows.append((f"table1/{variant}", 0.0, derived))
+
+
+def _mix_table(phy, tag, rows):
+    x, y, names = mixes_named(PAPER_MIXES)
+    for key, proto in ALL_APPROACHES.items():
+        lin_fn = jax.jit(lambda a, b, p=proto: p.bw_density_linear(a, b, phy))
+        us = time_us(lin_fn, x, y)
+        lin = lin_fn(x, y)
+        areal = proto.bw_density_areal(x, y, phy)
+        best = float(jnp.max(lin))
+        vs_hbm4 = best / HBM4.linear_density_gbs_mm
+        vs_lp6 = best / LPDDR6.linear_density_gbs_mm
+        derived = (f"best_lin={best:.0f}GB/s/mm;x{vs_hbm4:.2f}_vs_HBM4;"
+                   f"x{vs_lp6:.1f}_vs_LPDDR6;"
+                   f"best_areal={float(jnp.max(areal)):.0f}")
+        rows.append((f"{tag}/{key}", us, derived))
+    rows.append((f"{tag}/baseline_HBM4", 0.0,
+                 f"lin={HBM4.linear_density_gbs_mm:.1f};"
+                 f"areal={HBM4.areal_density_gbs_mm2:.1f}"))
+    rows.append((f"{tag}/baseline_LPDDR6", 0.0,
+                 f"lin={LPDDR6.linear_density_gbs_mm:.1f};"
+                 f"areal={LPDDR6.areal_density_gbs_mm2:.1f}"))
+
+
+def bench_fig10(rows):
+    _mix_table(UCIE_A_32G_55U, "fig10_ucie_a", rows)
+
+
+def bench_fig11(rows):
+    _mix_table(UCIE_S_32G, "fig11_ucie_s", rows)
+
+
+def bench_fig12(rows):
+    x, y, names = mixes_named(PAPER_MIXES)
+    for phy, tag in ((UCIE_A_32G_55U, "A"), (UCIE_S_32G, "S")):
+        for key, proto in ALL_APPROACHES.items():
+            fn = jax.jit(lambda a, b, p=proto: p.power_pj_per_bit(a, b, phy))
+            us = time_us(fn, x, y)
+            pj = fn(x, y)
+            derived = (f"min={float(jnp.min(pj)):.3f}pJ/b;"
+                       f"max={float(jnp.max(pj)):.3f};"
+                       f"HBM4=0.9;best_vs_HBM4=x"
+                       f"{0.9 / float(jnp.min(pj)):.2f}")
+            rows.append((f"fig12_{tag}/{key}", us, derived))
+
+
+def bench_latency(rows):
+    sp = latency_speedup()
+    for name, ns in MEASURED_FRONTEND_LATENCY_NS.items():
+        d = f"{ns}ns" + (f";speedup=x{sp[name]:.2f}"
+                         if name in sp else ";(ours)")
+        rows.append((f"latency/{name}", 0.0, d))
+
+
+def bench_cost(rows):
+    systems = cost.reference_systems()
+    ranked = sorted(systems, key=lambda s: s.cost_per_gbs())
+    for i, s in enumerate(ranked):
+        rows.append((f"cost/{s.name}", 0.0,
+                     f"rank={i};rel_cost={s.relative_cost():.1f};"
+                     f"per_gbs={s.cost_per_gbs():.4f}"))
+
+
+def run(rows: list):
+    bench_table1(rows)
+    bench_fig10(rows)
+    bench_fig11(rows)
+    bench_fig12(rows)
+    bench_latency(rows)
+    bench_cost(rows)

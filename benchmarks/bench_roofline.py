@@ -1,0 +1,50 @@
+"""Roofline + memsys tables from the dry-run artifacts.
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+emits one row per (arch × shape × mesh) cell: the three roofline terms,
+the dominant bottleneck, and the paper bridge — the best UCIe-Memory
+system for the cell's traffic mix vs the HBM baseline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run(rows: list):
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        rows.append(("roofline/none", 0.0,
+                     "run `python -m repro.launch.dryrun --all` first"))
+        return
+    for f in files:
+        with open(f) as fh:
+            d = json.load(fh)
+        r = d["roofline"]
+        cell = f"{d['arch']}__{d['shape']}__{d['mesh']}"
+        # best UCIe system for this workload's mix
+        br = d.get("memsys_bridge", {})
+        best_key, best = None, None
+        for key, sysd in br.get("systems", {}).items():
+            if "UCIe" not in key and key not in ("HBM4", "LPDDR6"):
+                continue
+            if "/" not in key:
+                continue
+            if best is None or sysd["memory_term_s"] < best:
+                best, best_key = sysd["memory_term_s"], key
+        hbm_t = br.get("hbm_baseline_memory_s", r["memory_s"])
+        derived = (f"compute={r['compute_s']*1e3:.1f}ms;"
+                   f"memory={r['memory_s']*1e3:.1f}ms;"
+                   f"collective={r['collective_s']*1e3:.1f}ms;"
+                   f"dominant={r['dominant']};"
+                   f"useful={r['useful_flops_ratio']:.2f};"
+                   f"mix={br.get('mix', '?')}")
+        if best_key is not None and hbm_t:
+            derived += (f";best_memsys={best_key}"
+                        f";memsys_gain=x{hbm_t / best:.2f}")
+        rows.append((f"roofline/{cell}", float(d.get("compile_s", 0)) * 1e6,
+                     derived))

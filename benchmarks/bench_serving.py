@@ -1,0 +1,31 @@
+"""Serving engine throughput benchmark (reduced model, CPU)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.models import ShardingCtx, build
+from repro.serve import Request, ServingEngine
+
+
+def run(rows: list):
+    ctx = ShardingCtx()
+    cfg = get("smollm-360m").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, ctx, batch_slots=4, max_len=96)
+    n_req, new_tok = 8, 12
+    for i in range(n_req):
+        eng.submit(Request(rid=i, prompt=np.arange(5 + i % 3) % 50,
+                           max_new_tokens=new_tok))
+    t0 = time.perf_counter()
+    done = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    total_tokens = sum(len(r.generated) for r in done)
+    rows.append(("serving/continuous_batching",
+                 dt / max(total_tokens, 1) * 1e6,
+                 f"requests={n_req};tokens={total_tokens};"
+                 f"tok_per_s={total_tokens / dt:.1f}(cpu)"))

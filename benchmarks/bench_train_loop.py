@@ -1,0 +1,30 @@
+"""End-to-end train-step wall time on CPU (reduced configs) — the
+framework-integration benchmark (data pipeline + train step + optimizer)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import time_us
+from repro.configs import get
+from repro.configs.shapes import ShapeSpec
+from repro.models import ShardingCtx, build
+from repro.train import (
+    AdamW, SyntheticLM, constant_schedule, init_state, make_train_step,
+)
+
+
+def run(rows: list):
+    ctx = ShardingCtx()
+    for arch in ("smollm-360m", "mamba2-2.7b", "olmoe-1b-7b"):
+        cfg = get(arch).reduced()
+        model = build(cfg)
+        opt = AdamW(learning_rate=constant_schedule(1e-3))
+        state = init_state(model, jax.random.PRNGKey(0), opt)
+        step = jax.jit(make_train_step(model, opt, ctx, num_microbatches=2))
+        src = SyntheticLM(cfg, ShapeSpec("bench", 64, 8, "train"))
+        batch = src.place(src.batch_for_step(0), ctx)
+        us = time_us(lambda s, b: step(s, b)[1]["loss"], state, batch,
+                     warmup=1, iters=3)
+        tok_s = 8 * 64 / (us * 1e-6)
+        rows.append((f"train_loop/{arch}-reduced", us,
+                     f"tokens_per_s={tok_s:.0f}(cpu)"))

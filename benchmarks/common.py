@@ -1,0 +1,24 @@
+"""Benchmark harness utilities: timing + CSV rows."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+Row = Tuple[str, float, str]     # name, us_per_call, derived
+
+
+def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(rows: List[Row]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")

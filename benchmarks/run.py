@@ -1,0 +1,40 @@
+# One function per paper table/figure + framework benchmarks.
+# Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+
+def main() -> None:
+    rows = []
+    from benchmarks import (
+        bench_flitsim, bench_kernels, bench_paper_figures, bench_roofline,
+        bench_serving, bench_train_loop,
+    )
+    suites = [
+        ("paper_figures", bench_paper_figures.run),
+        ("flitsim", bench_flitsim.run),
+        ("kernels", bench_kernels.run),
+        ("train_loop", bench_train_loop.run),
+        ("serving", bench_serving.run),
+        ("roofline", bench_roofline.run),
+    ]
+    failed = []
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        try:
+            fn(rows)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    emit(rows)
+    if failed:
+        print(f"FAILED_SUITES: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

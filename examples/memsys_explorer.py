@@ -1,0 +1,60 @@
+"""Memory-system explorer: the paper bridge end-to-end.
+
+Takes a compiled workload cell from the dry-run artifacts (or computes a
+fresh one for a reduced config), derives its xRyW traffic mix from the
+HLO byte counts, and reports what every UCIe-Memory approach would
+deliver for that workload — bandwidth, power, latency — vs today's HBM.
+
+    PYTHONPATH=src python examples/memsys_explorer.py [cell.json]
+"""
+import glob
+import json
+import os
+import sys
+
+from repro.core import TrafficMix, rank, SelectionConstraints
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "dryrun")
+
+
+def explore(d: dict):
+    r = d["roofline"]
+    br = d["memsys_bridge"]
+    print(f"cell: {d['arch']} × {d['shape']} × {d['mesh']} "
+          f"({d['chips']} chips)")
+    print(f"  traffic mix (from HLO bytes): {br['mix']} "
+          f"(read fraction {br['read_fraction']:.2f})")
+    print(f"  roofline: compute {r['compute_s']*1e3:.1f} ms | "
+          f"memory {r['memory_s']*1e3:.1f} ms | "
+          f"collective {r['collective_s']*1e3:.1f} ms  "
+          f"-> {r['dominant']}-bound")
+    print(f"\n  memory systems for this workload "
+          f"(8 mm shoreline; HBM-baseline memory term "
+          f"{br['hbm_baseline_memory_s']*1e3:.1f} ms):")
+    rows = sorted(br["systems"].items(),
+                  key=lambda kv: kv[1]["memory_term_s"])
+    for key, s in rows:
+        print(f"    {key:32s} {s['bandwidth_gbs']:8.0f} GB/s  "
+              f"{s['pj_per_bit']:.3f} pJ/b  {s['latency_ns']:4.1f} ns  "
+              f"memory term {s['memory_term_s']*1e3:8.2f} ms  "
+              f"{s['interconnect_energy_j_per_step']:.2f} J/step")
+
+
+def main():
+    if len(sys.argv) > 1:
+        files = [sys.argv[1]]
+    else:
+        files = sorted(glob.glob(os.path.join(DRYRUN, "*.json")))[:3]
+    if not files:
+        print("no dry-run artifacts; run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun --all` first")
+        return
+    for f in files:
+        with open(f) as fh:
+            explore(json.load(fh))
+        print()
+
+
+if __name__ == "__main__":
+    main()

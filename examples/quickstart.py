@@ -1,0 +1,61 @@
+"""Quickstart: the paper's models in five minutes.
+
+Evaluates every UCIe-Memory approach (A-E) against the HBM4/LPDDR6
+incumbents across traffic mixes, validates the closed forms against the
+flit-level simulator, and picks the best memory system for a workload —
+the paper's §IV in one script.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core import (
+    ALL_APPROACHES, HBM4, LPDDR6, PAPER_MIXES, TrafficMix, UCIE_A_32G_55U,
+    UCIE_S_32G, best, latency_speedup, rank,
+)
+from repro.core.flitsim import ANALYTIC, SIMULATORS
+
+
+def main():
+    print("=" * 72)
+    print("UCIe-Memory (approaches A-E) vs HBM4 / LPDDR6 — paper Figs 10-12")
+    print("=" * 72)
+    hdr = f"{'approach':26s} " + " ".join(f"{m.name:>8s}" for m in PAPER_MIXES)
+    print("\nLinear bandwidth density (GB/s/mm), UCIe-A @55um:")
+    print(hdr)
+    for key, proto in ALL_APPROACHES.items():
+        vals = [float(proto.bw_density_linear(m.x, m.y, UCIE_A_32G_55U))
+                for m in PAPER_MIXES]
+        print(f"{key:26s} " + " ".join(f"{v:8.0f}" for v in vals))
+    print(f"{'HBM4 (optimistic bus)':26s} " + " ".join(
+        f"{HBM4.linear_density_gbs_mm:8.0f}" for _ in PAPER_MIXES))
+    print(f"{'LPDDR6 (optimistic bus)':26s} " + " ".join(
+        f"{LPDDR6.linear_density_gbs_mm:8.0f}" for _ in PAPER_MIXES))
+
+    print("\nPower efficiency (pJ/b), UCIe-S vs HBM4=0.9:")
+    print(hdr)
+    for key, proto in ALL_APPROACHES.items():
+        vals = [float(proto.power_pj_per_bit(m.x, m.y, UCIE_S_32G))
+                for m in PAPER_MIXES]
+        print(f"{key:26s} " + " ".join(f"{v:8.3f}" for v in vals))
+
+    print("\nLatency speedups vs incumbents:", latency_speedup())
+
+    print("\nFlit-level simulator vs closed forms (2R1W):")
+    for key, sim in SIMULATORS.items():
+        a = float(ANALYTIC[key].bw_eff(2, 1))
+        s = sim(2, 1)
+        print(f"  {key:14s} analytic={a:.4f} simulated={s:.4f} "
+              f"err={abs(a - s) / a:.3%}")
+
+    print("\nBest memory system for a 2R1W workload, 8mm shoreline:")
+    for r in rank(TrafficMix(2, 1))[:5]:
+        print(f"  {r.key:32s} {r.bandwidth_gbs:8.0f} GB/s  "
+              f"{r.pj_per_bit:.3f} pJ/b  {r.latency_ns:.0f} ns")
+    b = best(TrafficMix(2, 1), objective="gbs_per_watt")
+    print(f"\npaper conclusion check — best power-efficient performance: "
+          f"{b.key} ({b.gbs_per_watt:.1f} GB/s per W)")
+
+
+if __name__ == "__main__":
+    main()

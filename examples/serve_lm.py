@@ -1,0 +1,46 @@
+"""Batched serving example: continuous batching over mixed-length
+requests, with per-request correctness vs single-request decoding.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.models import ShardingCtx, build
+from repro.serve import Request, ServingEngine
+
+
+def main():
+    cfg = get("smollm-360m").reduced()
+    model = build(cfg)
+    ctx = ShardingCtx()
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"serving {cfg.name} ({model.param_count():,} params)")
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, rng.integers(4, 12))
+               .astype(np.int32) for _ in range(10)]
+
+    eng = ServingEngine(model, params, ctx, batch_slots=4, max_len=96)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=12))
+    t0 = time.perf_counter()
+    done = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    total = sum(len(r.generated) for r in done)
+    print(f"{len(done)} requests, {total} tokens, {total / dt:.1f} tok/s")
+
+    # correctness: batched output == single-request output
+    ref = ServingEngine(model, params, ctx, batch_slots=1, max_len=96)
+    ref.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=12))
+    r0 = ref.run_until_drained()[0]
+    b0 = [r for r in done if r.rid == 0][0]
+    assert r0.generated == b0.generated, "continuous batching changed output"
+    print("continuous-batching correctness check passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Elastic scaling: restore any checkpoint onto any mesh.
+
+The checkpoint format is mesh-agnostic (shards carry global indices), so
+elasticity is: build the new mesh, derive fresh shardings from the model's
+logical-axis schema, and restore with re-placement.  This module adds the
+driver-level helpers: pick a mesh for the devices that are actually
+healthy, and produce the (state_shardings, restore) pair in one call.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.models.model import Model
+from repro.models.sharding import ShardingCtx, from_mesh
+
+
+def mesh_for_devices(n_devices: int, model_axis: int = 1):
+    """Largest (data, model) mesh that fits n_devices (model fixed)."""
+    data = n_devices // model_axis
+    devs = np.array(jax.devices()[: data * model_axis]).reshape(
+        data, model_axis)
+    return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+def restore_elastic(directory: str, model: Model, ctx: ShardingCtx,
+                    make_state_specs, step: Optional[int] = None):
+    """Restore a TrainState saved under ANY mesh onto ctx.mesh.
+
+    make_state_specs: fn(model, ctx) -> pytree of PartitionSpec (e.g.
+    repro.train.train_step.state_specs).
+    """
+    from jax.sharding import NamedSharding
+
+    specs = make_state_specs(model, ctx)
+    shardings = (jax.tree.map(
+        lambda s: NamedSharding(ctx.mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        if ctx.enabled else None)
+    target = jax.tree.map(lambda s: s, specs,
+                          is_leaf=lambda x: isinstance(
+                              x, jax.sharding.PartitionSpec))
+    # build abstract target with shapes from a fresh eval_shape of init
+    return ckpt.restore(directory, target=_abstract_state(model, ctx),
+                        step=step, shardings=shardings)
+
+
+def _abstract_state(model: Model, ctx: ShardingCtx):
+    import jax.numpy as jnp
+    from repro.train.optimizer import AdamW, constant_schedule
+    from repro.train.train_step import TrainState, init_state
+    opt = AdamW(learning_rate=constant_schedule(1e-3))
+    return jax.eval_shape(
+        lambda k: init_state(model, k, opt), jax.random.PRNGKey(0))

@@ -1,0 +1,6 @@
+from repro.configs.base import ModelConfig
+from repro.configs.registry import all_configs, arch_ids, get
+from repro.configs.shapes import (
+    ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K, SHAPES, TRAIN_4K,
+    ShapeSpec, applicable, microbatches_for,
+)

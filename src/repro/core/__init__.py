@@ -1,0 +1,20 @@
+# The paper's primary contribution: analytical models of on-package memory
+# over UCIe (approaches A-E), incumbent-bus baselines, latency/power/cost
+# models, and a flit-level discrete-event simulator that validates the
+# closed forms.
+from repro.core.ucie import (
+    UCIePhy, Packaging, UCIE_S_32G, UCIE_A_32G_55U, UCIE_A_32G_45U,
+    IDLE_POWER_FRACTION, table1,
+)
+from repro.core.traffic import TrafficMix, PAPER_MIXES, mix_grid, mixes_named
+from repro.core.protocols import (
+    MemoryProtocol, APPROACH_A, APPROACH_A_NATIVE, APPROACH_B, APPROACH_C,
+    APPROACH_D, APPROACH_E, ALL_APPROACHES, BASELINES,
+    LPDDR5, LPDDR6, HBM3, HBM4,
+)
+from repro.core.latency import (
+    UCIeMemoryLatency, MEASURED_FRONTEND_LATENCY_NS, latency_speedup,
+)
+from repro.core.memsys import MemorySystem, standard_catalog
+from repro.core.selector import SelectionConstraints, RankedSystem, rank, best
+from repro.core import cost, flitsim

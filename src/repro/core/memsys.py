@@ -1,0 +1,75 @@
+"""MemorySystem — compose a protocol mapping with a UCIe PHY (or a bus
+baseline) into a deployable on-package memory model.
+
+This is the object the roofline bridge consumes: given a workload's traffic
+mix it answers "what data bandwidth, pJ/b and latency does this memory
+system deliver, for a given shoreline budget?".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.core import latency as latency_mod
+from repro.core.protocols import (
+    ALL_APPROACHES, BASELINES, BidirectionalBusMemory, MemoryProtocol,
+)
+from repro.core.ucie import UCIE_A_32G_55U, UCIE_S_32G, UCIePhy
+
+
+@dataclasses.dataclass(frozen=True)
+class MemorySystem:
+    name: str
+    protocol: MemoryProtocol
+    phy: Optional[UCIePhy] = None          # None for bus baselines
+    latency_ns: float = 3.0
+    #: relative $/bit of the DRAM behind the interface (LPDDR=1, HBM=7.5)
+    relative_bit_cost: float = 1.0
+
+    def _is_bus(self) -> bool:
+        return isinstance(self.protocol, BidirectionalBusMemory)
+
+    def bw_eff(self, x, y):
+        return self.protocol.bw_eff(x, y)
+
+    def linear_density(self, x, y):
+        return self.protocol.bw_density_linear(x, y, self.phy)
+
+    def areal_density(self, x, y):
+        return self.protocol.bw_density_areal(x, y, self.phy)
+
+    def pj_per_bit(self, x, y):
+        return self.protocol.power_pj_per_bit(x, y, self.phy)
+
+    def bandwidth_gbs(self, x, y, shoreline_mm: float):
+        """Deliverable cache-line GB/s for a shoreline budget."""
+        return self.linear_density(x, y) * shoreline_mm
+
+    def power_w(self, x, y, shoreline_mm: float):
+        """Interconnect power (W) at full utilization of the shoreline."""
+        gbs = self.bandwidth_gbs(x, y, shoreline_mm)
+        return gbs * 8.0 * self.pj_per_bit(x, y) / 1000.0   # GB/s * pJ/b -> W
+
+
+def standard_catalog() -> Dict[str, MemorySystem]:
+    """Every (approach x packaging) the paper evaluates + the baselines."""
+    cat: Dict[str, MemorySystem] = {}
+    lat = latency_mod.MEASURED_FRONTEND_LATENCY_NS
+    for key, proto in ALL_APPROACHES.items():
+        for phy, tag in ((UCIE_A_32G_55U, "UCIe-A"), (UCIE_S_32G, "UCIe-S")):
+            bit_cost = 7.5 if "hbm" in key else 1.0
+            cat[f"{key}/{tag}"] = MemorySystem(
+                name=f"{proto.name}/{tag}",
+                protocol=proto, phy=phy,
+                latency_ns=lat["UCIe-Memory"],
+                relative_bit_cost=bit_cost,
+            )
+    for bname, bus in BASELINES.items():
+        cat[bname] = MemorySystem(
+            name=bus.name, protocol=bus, phy=None,
+            latency_ns=lat.get(bname, 6.0),
+            relative_bit_cost=7.5 if "HBM" in bname else 1.0,
+        )
+    return cat

@@ -1,0 +1,34 @@
+"""The paper's five protocol mappings (A-E) + incumbent bus baselines."""
+from repro.core.protocols.base import MemoryProtocol
+from repro.core.protocols.lpddr6_ucie import LPDDR6OnUCIe, LPDDR6NativeUCIe
+from repro.core.protocols.hbm_ucie import HBMOnUCIe
+from repro.core.protocols.chi_ucie import CHIOnUCIe
+from repro.core.protocols.cxl_mem import CXLMemOnUCIe
+from repro.core.protocols.cxl_mem_opt import CXLMemOptOnUCIe
+from repro.core.protocols.baselines import (
+    BidirectionalBusMemory, LPDDR5, LPDDR6, HBM3, HBM4,
+)
+
+#: The paper's approaches, instantiated (A, B, C, D, E).
+APPROACH_A = LPDDR6OnUCIe()
+APPROACH_A_NATIVE = LPDDR6NativeUCIe()
+APPROACH_B = HBMOnUCIe()
+APPROACH_C = CHIOnUCIe()
+APPROACH_D = CXLMemOnUCIe()
+APPROACH_E = CXLMemOptOnUCIe()
+
+ALL_APPROACHES = {
+    "A:lpddr6-asym": APPROACH_A,
+    "A2:lpddr6-native": APPROACH_A_NATIVE,
+    "B:hbm-asym": APPROACH_B,
+    "C:chi-sym": APPROACH_C,
+    "D:cxl-mem": APPROACH_D,
+    "E:cxl-mem-opt": APPROACH_E,
+}
+
+BASELINES = {
+    "LPDDR5": LPDDR5,
+    "LPDDR6": LPDDR6,
+    "HBM3": HBM3,
+    "HBM4": HBM4,
+}

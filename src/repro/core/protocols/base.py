@@ -1,0 +1,68 @@
+"""Protocol-mapping interface shared by approaches A-E and the bus baselines.
+
+Every protocol model is a pair of pure functions over the traffic mix
+(x reads : y writes of 64 B lines):
+
+  * ``bw_eff(x, y)``   — fraction of the PHY's raw (bump-limited) bandwidth
+    that carries cache-line *data* (CRC/ECC/header/credit/command/address are
+    overhead, matching the LPDDR/HBM DQ-only efficiency methodology §IV.B).
+  * ``p_data(x, y)``   — data-power ratio: data bits over power-weighted
+    bit-slots, with idle lane groups burning ``p`` (=0.15) of peak power.
+
+Both accept scalars or jnp arrays (vectorized mix sweeps).  Derived metrics:
+
+  * bandwidth density (linear / areal)   = bw_eff * PHY published density
+  * realizable power efficiency (pJ/b)   = PHY pJ/b / p_data
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.ucie import IDLE_POWER_FRACTION, UCIePhy
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryProtocol:
+    """Base class; subclasses override ``bw_eff`` and ``p_data``."""
+
+    name: str = "base"
+    #: idle-lane power fraction (paper: p = 0.15)
+    p_idle: float = IDLE_POWER_FRACTION
+    #: True when each direction has independently-sized lane groups that can
+    #: be gated separately (asymmetric UCIe); symmetric links gate all-or-none
+    #: per direction.  Informational — the math lives in each subclass.
+    asymmetric: bool = False
+
+    # -- overridables --------------------------------------------------------
+    def bw_eff(self, x, y):
+        raise NotImplementedError
+
+    def p_data(self, x, y):
+        raise NotImplementedError
+
+    # -- derived metrics -----------------------------------------------------
+    def bw_density_linear(self, x, y, phy: UCIePhy):
+        """GB/s per mm of die shoreline for mix xRyW."""
+        return self.bw_eff(x, y) * phy.linear_density_gbs_mm
+
+    def bw_density_areal(self, x, y, phy: UCIePhy):
+        """GB/s per mm^2 for mix xRyW."""
+        return self.bw_eff(x, y) * phy.areal_density_gbs_mm2
+
+    def power_pj_per_bit(self, x, y, phy: UCIePhy):
+        """Realizable pJ per *data* bit for mix xRyW (eq 10 / 17 / 23)."""
+        return phy.power_pj_per_bit / self.p_data(x, y)
+
+    def effective_bandwidth_gbs(self, x, y, phy: UCIePhy,
+                                shoreline_mm: Optional[float] = None):
+        """Deliverable data GB/s for a given shoreline budget (or one block)."""
+        if shoreline_mm is None:
+            return self.bw_eff(x, y) * phy.raw_bandwidth_gbs
+        return self.bw_density_linear(x, y, phy) * shoreline_mm
+
+
+def _as_f32(v):
+    return jnp.asarray(v, dtype=jnp.float32)

@@ -1,0 +1,69 @@
+"""Approach E — CXL.Mem with optimization on Symmetric UCIe.
+
+256 B flit = 15 G-slots (16 B) + 1 HS-slot (10 B, headers only) + 2 B HDR
++ 2 B Credit + 2 B CRC (trailing header; protocol-ID parked from previous
+flit).  Optimized commands (Table 2, "Opt"):
+
+    request  : 62 bits -> 1 per HS-slot (2-per-G-slot possible, not modeled,
+               matching the paper's performance analysis)
+    response : 16 bits -> 4 per slot
+
+Per 15 G-slots of payload there is 1 HS-slot of free header capacity:
+
+    Slots_S2M = (16/15)*4y + max((x+y)   - 4y/15, 0)    (eq 17)
+    Slots_M2S = (16/15)*4x + max((x+y)/4 - 4x/15, 0)    (eq 18)
+    BW_eff    = 4(x+y) / (2*Slots_max)                  (eq 20; no 15/16 loss)
+
+The (16/15) factor accounts the HS-slot time that rides along with every
+15 G-slots; the max() term adds G-slots when headers overflow the free HS
+capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.protocols.base import MemoryProtocol, _as_f32
+
+
+@dataclasses.dataclass(frozen=True)
+class CXLMemOptOnUCIe(MemoryProtocol):
+    name: str = "CXL.Mem-opt-on-UCIe(sym)"
+    asymmetric: bool = False
+
+    g_slots_per_flit: int = 15
+    data_slots_per_line: int = 4
+    requests_per_hs: float = 1.0
+    responses_per_slot: float = 4.0
+
+    def slots_s2m(self, x, y):
+        x, y = _as_f32(x), _as_f32(y)
+        data = self.data_slots_per_line * y                  # 4y
+        hdr_need = (x + y) / self.requests_per_hs
+        hs_free = data / self.g_slots_per_flit               # 4y/15
+        return (16.0 / 15.0) * data + jnp.maximum(hdr_need - hs_free, 0.0)
+
+    def slots_m2s(self, x, y):
+        x, y = _as_f32(x), _as_f32(y)
+        data = self.data_slots_per_line * x                  # 4x
+        hdr_need = (x + y) / self.responses_per_slot
+        hs_free = data / self.g_slots_per_flit               # 4x/15
+        return (16.0 / 15.0) * data + jnp.maximum(hdr_need - hs_free, 0.0)
+
+    def slots_max(self, x, y):
+        return jnp.maximum(self.slots_s2m(x, y), self.slots_m2s(x, y))
+
+    def bw_eff(self, x, y):
+        x, y = _as_f32(x), _as_f32(y)
+        return 4.0 * (x + y) / (2.0 * self.slots_max(x, y))  # eq (20)
+
+    def p_data(self, x, y):
+        """eq (22): like eq (16) but no slot lost to CRC/FEC/Hdr/Credit."""
+        x, y = _as_f32(x), _as_f32(y)
+        p = self.p_idle
+        s2m = self.slots_s2m(x, y)
+        m2s = self.slots_m2s(x, y)
+        smax = self.slots_max(x, y)
+        denom = s2m + m2s + (2.0 * smax - s2m - m2s) * p
+        return 4.0 * (x + y) / denom

@@ -1,0 +1,71 @@
+"""Approach B — HBM3/4 protocol mapped on Asymmetric UCIe.
+
+The paper uses a 138-lane UCIe module (2:1 read:write bandwidth ratio) and
+omits the equations "due to page limits"; we derive them with the same
+method as Approach A (see DESIGN.md §6.1).  Lane accounting from Fig 5b:
+
+    SoC->Logic : 24 cmd + 36 DRAM data + 4 write-mask + 1 CRC = 65 (data) / 69
+    Logic->SoC : 72 DRAM data + 1 CRC                         = 73 (data) / 77
+
+("Total (Data)" 65 + 73 = 138 counted lanes; clock/track/valid excluded.)
+
+Cache-line transfer times from Fig 5b: 16 UI SoC->Logic (writes over 36
+lanes: 576/36), 8 UI Logic->SoC (reads over 72 lanes: 576/72), i.e.
+
+    t_xRyW = max(8x, 16y)
+
+Commands are serialized over the 24 command lanes; per access we charge 96
+command bits (ACT + RD/WR, mirroring eq (6)'s LPDDR6 value) -> 4 UI/access.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.protocols.base import MemoryProtocol, _as_f32
+
+
+@dataclasses.dataclass(frozen=True)
+class HBMOnUCIe(MemoryProtocol):
+    name: str = "HBM3/4-on-UCIe(asym)"
+    asymmetric: bool = True
+
+    total_lanes: int = 138
+    read_lanes: int = 72            # Logic->SoC data
+    write_lanes: int = 36           # SoC->Logic data
+    wmask_lanes: int = 4
+    cmd_lanes: int = 24
+    cmd_bits_per_access: int = 96
+    access_bits: int = 576          # 512 + ECC/meta, as in Approach A
+
+    def read_ui(self, x):
+        return _as_f32(x) * self.access_bits / self.read_lanes     # 8x
+
+    def write_ui(self, y):
+        return _as_f32(y) * self.access_bits / self.write_lanes    # 16y
+
+    def t_xryw(self, x, y):
+        return jnp.maximum(self.read_ui(x), self.write_ui(y))
+
+    def bw_eff(self, x, y):
+        x, y = _as_f32(x), _as_f32(y)
+        t = self.t_xryw(x, y)
+        return (x + y) * 512.0 / (self.total_lanes * t)
+
+    def p_data(self, x, y):
+        x, y = _as_f32(x), _as_f32(y)
+        p = self.p_idle
+        t = self.t_xryw(x, y)
+        w_ui = self.write_ui(y)
+        r_ui = self.read_ui(x)
+        dq_wmask = self.write_lanes + self.wmask_lanes          # 40
+        p_s2m_dq = dq_wmask * (w_ui + (t - w_ui) * p)
+        cmd_bits = self.cmd_bits_per_access * (x + y)
+        p_s2m_cmd = cmd_bits + (self.cmd_lanes * t - cmd_bits) * p
+        cmd_ui = cmd_bits / self.cmd_lanes                      # 4(x+y)
+        p_s2m_crc = jnp.maximum(w_ui, cmd_ui) * (1 - p) + t * p
+        m2s_lanes = self.read_lanes + 1                         # 73
+        p_m2s = m2s_lanes * (r_ui * (1 - p) + t * p)
+        total = p_s2m_dq + p_s2m_cmd + p_s2m_crc + p_m2s
+        return 512.0 * (x + y) / total

@@ -1,0 +1,95 @@
+"""Approach A — LPDDR6 protocol mapped on Asymmetric (Enhanced) UCIe.
+
+Implements eqs (1)-(10) of the paper exactly, for the 74-lane module
+(double-stacked Fig 4 module): per direction,
+
+    SoC->Mem : 24 data + 2 write-mask + 8 CA + 2 CS (=10 cmd) + 1 CRC = 37
+    Mem->SoC : 36 data                                 + 1 CRC       = 37
+
+Transfer granularity is 288 bits (256 data + 32 meta/ECC) per half cache
+line with the x12 device arrangement, i.e. 576 bits per 64 B access:
+
+    reads :  576 / 36 lanes = 16 UI each        (eq 1)
+    writes:  576 / 24 lanes = 24 UI each        (eq 1)
+    t_xRyW = max(16x, 24y) = 8*max(2x, 3y)      (eq 2)
+
+The memory controller resides in the SoC; requests carry no responses.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.protocols.base import MemoryProtocol, _as_f32
+
+
+@dataclasses.dataclass(frozen=True)
+class LPDDR6OnUCIe(MemoryProtocol):
+    name: str = "LPDDR6-on-UCIe(asym)"
+    asymmetric: bool = True
+
+    total_lanes: int = 74          # counted data lanes, both directions
+    read_lanes: int = 36           # Mem->SoC data
+    write_lanes: int = 24          # SoC->Mem data
+    wmask_lanes: int = 2
+    cmd_lanes: int = 10            # 8 CA + 2 CS
+    cmd_bits_per_access: int = 96  # eq (6)
+    access_bits: int = 576         # 512 data + 64 meta/ECC (2x 288b beats)
+
+    # -- timing ---------------------------------------------------------------
+    def read_ui(self, x):
+        return _as_f32(x) * self.access_bits / self.read_lanes      # 16x
+
+    def write_ui(self, y):
+        return _as_f32(y) * self.access_bits / self.write_lanes     # 24y
+
+    def t_xryw(self, x, y):
+        """eq (2): link is full duplex — reads and writes stream concurrently."""
+        return jnp.maximum(self.read_ui(x), self.write_ui(y))
+
+    # -- eq (3): bandwidth efficiency -----------------------------------------
+    def bw_eff(self, x, y):
+        x, y = _as_f32(x), _as_f32(y)
+        t = self.t_xryw(x, y)
+        return (x + y) * 512.0 / (self.total_lanes * t)
+
+    # -- eqs (5)-(9): data-power ratio ------------------------------------------
+    def p_data(self, x, y):
+        x, y = _as_f32(x), _as_f32(y)
+        p = self.p_idle
+        t = self.t_xryw(x, y)
+        w_ui = self.write_ui(y)            # 24y
+        r_ui = self.read_ui(x)             # 16x
+        dq_wmask = self.write_lanes + self.wmask_lanes        # 26
+        # eq (5): write data + mask lanes active for 24y UI, else idle
+        p_s2m_dq = dq_wmask * (w_ui + (t - w_ui) * p)
+        # eq (6): command lanes carry 96 bits per access
+        cmd_bits = self.cmd_bits_per_access * (x + y)
+        p_s2m_cmd = cmd_bits + (self.cmd_lanes * t - cmd_bits) * p
+        # eq (7): S2M CRC lane active while write data or commands flow
+        cmd_ui = cmd_bits / self.cmd_lanes                    # 9.6(x+y)
+        p_s2m_crc = jnp.maximum(w_ui, cmd_ui) * (1 - p) + t * p
+        # eq (8): Mem->SoC — 36 data + 1 CRC active for 16x UI
+        m2s_lanes = self.read_lanes + 1                       # 37
+        p_m2s = m2s_lanes * (r_ui * (1 - p) + t * p)
+        total = p_s2m_dq + p_s2m_cmd + p_s2m_crc + p_m2s
+        return 512.0 * (x + y) / total                        # eq (9)
+
+
+@dataclasses.dataclass(frozen=True)
+class LPDDR6NativeUCIe(LPDDR6OnUCIe):
+    """Fig 4b variant: LPDDR6 die with native UCIe PHY (single module).
+
+    Module is 43-45 data lanes optimized 2:1 read:write (24 read data,
+    12 write data per x12 device pair, 4 cmd).  Same equations with the
+    single-module lane counts from Fig 4d.
+    """
+
+    name: str = "LPDDR6-native-UCIe(asym)"
+    total_lanes: int = 43          # 18 S2M + 25 M2S (Fig 4d data totals)
+    read_lanes: int = 24
+    write_lanes: int = 12
+    wmask_lanes: int = 1
+    cmd_lanes: int = 4
+    cmd_bits_per_access: int = 48  # half of the double-stacked module

@@ -1,0 +1,87 @@
+"""Best-approach selection — the paper's conclusion, automated.
+
+Given a traffic mix (typically derived from a compiled workload's HLO byte
+counts), rank the catalog of memory systems on bandwidth density / power /
+latency / cost, under optional constraints (shoreline budget, packaging,
+power cap).  §IV.C's conclusion — "CXL.Mem with optimization on symmetric
+UCIe offers the best power-efficient performance" — falls out of this
+ranking, and the tests assert it does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+from repro.core.memsys import MemorySystem, standard_catalog
+from repro.core.traffic import TrafficMix
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectionConstraints:
+    shoreline_mm: float = 8.0              # available die edge for memory I/O
+    packaging: Optional[str] = None        # "UCIe-A" | "UCIe-S" | None (any)
+    max_power_w: Optional[float] = None
+    max_relative_bit_cost: Optional[float] = None
+    required_bandwidth_gbs: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class RankedSystem:
+    key: str
+    name: str
+    bandwidth_gbs: float
+    pj_per_bit: float
+    power_w: float
+    latency_ns: float
+    relative_bit_cost: float
+    #: bandwidth per watt — the paper's central figure of merit
+    gbs_per_watt: float
+
+
+def rank(mix: TrafficMix,
+         constraints: SelectionConstraints = SelectionConstraints(),
+         catalog: Optional[Dict[str, MemorySystem]] = None,
+         objective: str = "bandwidth") -> List[RankedSystem]:
+    """Rank all memory systems for a traffic mix.
+
+    objective: "bandwidth" | "power" (pJ/b) | "gbs_per_watt" | "latency".
+    """
+    catalog = catalog if catalog is not None else standard_catalog()
+    out: List[RankedSystem] = []
+    for key, ms in catalog.items():
+        if constraints.packaging and ms.phy is not None:
+            if constraints.packaging not in key:
+                continue
+        bw = float(ms.bandwidth_gbs(mix.x, mix.y, constraints.shoreline_mm))
+        pjb = float(ms.pj_per_bit(mix.x, mix.y))
+        pw = bw * 8.0 * pjb / 1000.0
+        if constraints.max_power_w is not None and pw > constraints.max_power_w:
+            continue
+        if (constraints.max_relative_bit_cost is not None
+                and ms.relative_bit_cost > constraints.max_relative_bit_cost):
+            continue
+        if (constraints.required_bandwidth_gbs is not None
+                and bw < constraints.required_bandwidth_gbs):
+            continue
+        out.append(RankedSystem(
+            key=key, name=ms.name, bandwidth_gbs=bw, pj_per_bit=pjb,
+            power_w=pw, latency_ns=ms.latency_ns,
+            relative_bit_cost=ms.relative_bit_cost,
+            gbs_per_watt=bw / pw if pw > 0 else float("inf"),
+        ))
+    keyfn = {
+        "bandwidth": lambda r: -r.bandwidth_gbs,
+        "power": lambda r: r.pj_per_bit,
+        "gbs_per_watt": lambda r: -r.gbs_per_watt,
+        "latency": lambda r: r.latency_ns,
+    }[objective]
+    return sorted(out, key=keyfn)
+
+
+def best(mix: TrafficMix, **kw) -> RankedSystem:
+    ranked = rank(mix, **kw)
+    if not ranked:
+        raise ValueError("no memory system satisfies the constraints")
+    return ranked[0]

@@ -1,0 +1,86 @@
+"""Traffic-mix abstraction: ``xRyW`` — x reads, y writes of 64 B lines.
+
+The paper evaluates every approach over representative read/write mixes
+(x >= 0, y >= 0, not both 0); data transferred for xRyW is 512*(x+y) bits.
+All model functions accept jnp arrays for x and y, so whole mix grids are
+evaluated in one vectorized call (and are differentiable, which the
+selector exploits).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+CACHE_LINE_BYTES = 64
+CACHE_LINE_BITS = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficMix:
+    """x reads : y writes (64-byte cache lines)."""
+
+    x: float
+    y: float
+
+    def __post_init__(self):
+        if self.x < 0 or self.y < 0 or (self.x == 0 and self.y == 0):
+            raise ValueError(f"invalid mix x={self.x} y={self.y}")
+
+    @property
+    def name(self) -> str:
+        def fmt(v: float) -> str:
+            return f"{v:g}"
+        return f"{fmt(self.x)}R{fmt(self.y)}W"
+
+    @property
+    def read_fraction(self) -> float:
+        return self.x / (self.x + self.y)
+
+    @property
+    def data_bits(self) -> float:
+        return CACHE_LINE_BITS * (self.x + self.y)
+
+    @classmethod
+    def from_bytes(cls, read_bytes: float, write_bytes: float) -> "TrafficMix":
+        """Bridge from HLO byte counts to the paper's unit (64 B lines).
+
+        Normalized so x + y == 100 (keeps the closed forms well-scaled).
+        """
+        rx = max(read_bytes, 0.0) / CACHE_LINE_BYTES
+        wy = max(write_bytes, 0.0) / CACHE_LINE_BYTES
+        tot = rx + wy
+        if tot <= 0:
+            return cls(1.0, 0.0)
+        return cls(100.0 * rx / tot, 100.0 * wy / tot)
+
+
+# The representative mixes used across Figures 10-12 style sweeps
+# (100%R ... 100%W).  Keys are read-percentages.
+PAPER_MIXES: Tuple[TrafficMix, ...] = (
+    TrafficMix(1, 0),   # 100% reads
+    TrafficMix(4, 1),   # 80/20
+    TrafficMix(3, 1),   # 75/25
+    TrafficMix(2, 1),   # 67/33 (the paper's canonical "predominant" mix)
+    TrafficMix(1, 1),   # 50/50
+    TrafficMix(1, 2),   # 33/67
+    TrafficMix(1, 3),   # 25/75
+    TrafficMix(0, 1),   # 100% writes
+)
+
+
+def mix_grid(n: int = 101):
+    """(x, y) arrays sweeping read fraction 0..1 — for vectorized evaluation."""
+    r = jnp.linspace(0.0, 1.0, n)
+    # keep x + y = 100; clamp the endpoints away from (0, 0)
+    x = 100.0 * r
+    y = 100.0 - x
+    return x, y
+
+
+def mixes_named(mixes: Sequence[TrafficMix] = PAPER_MIXES):
+    x = jnp.array([m.x for m in mixes], dtype=jnp.float32)
+    y = jnp.array([m.y for m in mixes], dtype=jnp.float32)
+    names = [m.name for m in mixes]
+    return x, y, names

@@ -1,0 +1,134 @@
+"""Flash-attention forward — Pallas TPU kernel.
+
+Grid: (B, K, G, num_q_blocks, num_kv_blocks); the kv dimension is the
+innermost, sequential ("arbitrary") axis, carrying the streaming-softmax
+state (running max m, denominator l, accumulator acc) in VMEM scratch.
+
+BlockSpec tiling (VMEM working set per program):
+  q   : [1,1,1, bq, hd]   — revisited across kv blocks
+  k/v : [1,1,   bk, hd]
+  out : [1,1,1, bq, hd]   — written on the last kv block
+  scratch: m [bq,1] f32, l [bq,1] f32, acc [bq, hd] f32
+
+bq/bk default 512/512 with hd padded to a lane multiple by the wrapper;
+MXU-aligned (multiples of 128) for the score matmuls [bq,hd]x[hd,bk].
+Causal + local-window masking by absolute positions (q_offset supports
+continuation chunks).  Fully-masked kv blocks are skipped via @pl.when.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, window: int, q_offset: int, bq: int, bk: int,
+            n_kv: int, skv: int):
+    ik = pl.program_id(4)
+    iq = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + q_offset
+    kv_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # skip blocks that are entirely masked out (causal/window pruning)
+    first_q = iq * bq + q_offset
+    last_q = first_q + bq - 1
+    first_kv = ik * bk
+    last_kv = first_kv + bk - 1
+    live = jnp.asarray(True)
+    if causal:
+        live &= first_kv <= last_q
+    if window > 0:
+        live &= last_kv > first_q - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0, 0].astype(jnp.float32)          # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)             # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+        s = jax.lax.dot_general(q * scale, k,
+                                (((1,), (1,)), ((), ())))   # [bq, bk]
+        mask = kv_pos < skv                              # kv padding
+        if causal:
+            mask &= kv_pos <= q_pos
+        if window > 0:
+            mask &= kv_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                              # [bq, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_offset: int = 0, block_q: int = 512,
+                        block_kv: int = 512, interpret: bool = False):
+    """q: [B, K, G, Sq, hd]; k, v: [B, K, Skv, hd] -> [B, K, G, Sq, hd]."""
+    b, kh, g, sq, hd = q.shape
+    skv = k.shape[2]
+    bq = min(block_q, sq)
+    bk = min(block_kv, skv)
+    # pad to block multiples (masks keep padded kv inert; padded q rows
+    # are dropped after the call)
+    sq_p = -(-sq // bq) * bq
+    skv_p = -(-skv // bk) * bk
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    if skv_p != skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    n_q, n_kv = sq_p // bq, skv_p // bk
+
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, q_offset=q_offset,
+        bq=bq, bk=bk, n_kv=n_kv, skv=skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kh, g, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, bq, hd),
+                         lambda b_, k_, g_, iq, ik: (b_, k_, g_, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b_, k_, g_, iq, ik: (b_, k_, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b_, k_, g_, iq, ik: (b_, k_, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, bq, hd),
+                               lambda b_, k_, g_, iq, ik: (b_, k_, g_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, sq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :, :sq, :]

@@ -1,0 +1,47 @@
+"""jit'd wrapper: Pallas flash attention on TPU, jnp oracle elsewhere.
+
+The backward pass uses the oracle via jax.custom_vjp (forward-optimized
+deployment: serving/prefill hot path runs the kernel; training gradients
+recompute with the XLA path, which remat makes the default anyway).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    q_offset: int = 0):
+    """q: [B, K, G, Sq, hd]; k, v: [B, K, Skv, hd] -> [B, K, G, Sq, hd]."""
+    if _use_pallas():
+        return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset)
+    return attention_ref(q, k, v, causal=causal, window=window,
+                         q_offset=q_offset)
+
+
+def _fwd(q, k, v, causal, window, q_offset):
+    out = flash_attention(q, k, v, causal, window, q_offset)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, q_offset, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         window=window, q_offset=q_offset),
+        q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,21 @@
+"""jit'd wrapper for flit packing: Pallas on TPU, jnp elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flit_pack.kernel import pack_flits as _pallas_pack
+from repro.kernels.flit_pack.ref import (
+    flits_needed, pack_flits_ref, unpack_flits_ref,
+)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pack(lines, headers, hdr_meta):
+    if jax.default_backend() == "tpu":
+        return _pallas_pack(lines, headers, hdr_meta)
+    return pack_flits_ref(lines, headers, hdr_meta)
+
+
+unpack = unpack_flits_ref

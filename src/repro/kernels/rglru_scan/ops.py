@@ -1,0 +1,15 @@
+"""jit'd wrapper for the RG-LRU scan: Pallas on TPU, associative-scan
+(jnp) elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rglru_scan.kernel import rglru_scan as _pallas_lru
+
+
+def lru(log_a, b):
+    """log_a, b: [B, S, C] -> h [B, S, C] fp32."""
+    if jax.default_backend() == "tpu":
+        return _pallas_lru(log_a, b)
+    from repro.models.rglru import lru_scan
+    return lru_scan(log_a.astype("float32"), b.astype("float32"))

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the RG-LRU linear recurrence:
+
+    h_t = exp(log_a_t) * h_{t-1} + b_t
+
+Sequential lax.scan form (the associative-scan form in repro.models.rglru
+is validated against this too)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lru_ref(log_a, b, h0=None):
+    """log_a, b: [B, S, C] fp32 -> h: [B, S, C]."""
+    bsz, s, c = b.shape
+    if h0 is None:
+        h0 = jnp.zeros((bsz, c), jnp.float32)
+
+    def step(h, inp):
+        la, bt = inp
+        h = jnp.exp(la) * h + bt
+        return h, h
+
+    xs = (jnp.moveaxis(log_a.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 1, 0))
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(hs, 0, 1)

@@ -1,0 +1,17 @@
+"""jit'd wrapper for the SSD scan: Pallas on TPU, chunked-jnp elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan as _pallas_ssd
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def ssd(x, dt, b, c, a_log, chunk: int = 128):
+    """x: [B,S,H,P]; dt: [B,S,H]; b,c: [B,S,N]; a_log: [H]."""
+    if jax.default_backend() == "tpu":
+        return _pallas_ssd(x, dt, b, c, a_log, chunk=chunk)
+    from repro.models.ssm import ssd_chunked
+    y, fs = ssd_chunked(x, dt, b[:, :, None, :], c[:, :, None, :],
+                        a_log, chunk=min(chunk, x.shape[1]))
+    return y, fs

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel: the sequential recurrence
+
+    state_t = exp(dt_t * A_h) * state_{t-1} + dt_t * B_t x_t^T
+    y_t     = C_t . state_t + D_h * x_t                       (D applied by caller)
+
+evaluated step-by-step with lax.scan (the slow-but-obviously-correct form;
+the chunked closed form in repro.models.ssm is itself validated against
+this)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, b, c, a_log, init_state=None):
+    """x: [B,S,H,P]; dt: [B,S,H]; b,c: [B,S,N] (G=1); a_log: [H]
+    -> (y [B,S,H,P], final_state [B,H,P,N])."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                     # [B,H,P],[B,H],[B,N],[B,N]
+        decay = jnp.exp(dtt * a)                  # [B,H]
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], bt)
+        state = decay[..., None, None] * state + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c.astype(jnp.float32), 1, 0))
+    s0 = (jnp.zeros((bsz, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), final

@@ -1,0 +1,2 @@
+from repro.models.model import Model, build, cross_entropy
+from repro.models.sharding import ShardingCtx, from_mesh

@@ -1,0 +1,187 @@
+"""Attention: GQA with RoPE, causal / local-window / cross variants.
+
+Two execution paths:
+
+  * ``attend_chunked`` — flash-style streaming softmax over KV chunks
+    (lax.scan, fp32 running max/sum).  Used for training and prefill; keeps
+    the score tensor at [B, Sq, K, G, chunk] instead of [B, Sq, Skv, H].
+    This is also the pure-jnp oracle for the Pallas flash kernel.
+  * ``attend_decode`` — single new token against a KV cache; plain einsum
+    with a length mask (the cache seq dim may be sharded across 'model' for
+    context-parallel decode; XLA partitions the softmax reductions).
+
+Layout: q [B, Sq, K, G, hd] (H = K*G query heads grouped by KV head),
+k/v [B, Skv, K, hd].  GQA never materializes repeated KV.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import COMPUTE_DTYPE, apply_rope, cast, rope_angles
+from repro.models.schema import Leaf
+from repro.models.sharding import ShardingCtx
+
+NEG_INF = -1e30
+
+
+def attn_schema(cfg: ModelConfig, cross: bool = False):
+    d, h, k, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s = {
+        "wq": Leaf((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": Leaf((d, k, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": Leaf((d, k, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": Leaf((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        s["bq"] = Leaf((h, hd), ("heads", "head_dim"), init="zeros")
+        s["bk"] = Leaf((k, hd), ("kv_heads", "head_dim"), init="zeros")
+        s["bv"] = Leaf((k, hd), ("kv_heads", "head_dim"), init="zeros")
+    return s
+
+
+def qkv_project(params, x, cfg: ModelConfig, ctx: ShardingCtx,
+                positions=None, rope_on: bool = True):
+    """x: [B, S, d] -> q [B,S,K,G,hd], k/v [B,S,K,hd]."""
+    h, k, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // k
+    q = jnp.einsum("bsd,dhx->bshx", x, cast(params["wq"]))
+    kk = jnp.einsum("bsd,dkx->bskx", x, cast(params["wk"]))
+    v = jnp.einsum("bsd,dkx->bskx", x, cast(params["wv"]))
+    if "bq" in params:
+        q = q + cast(params["bq"])
+        kk = kk + cast(params["bk"])
+        v = v + cast(params["bv"])
+    if rope_on and positions is not None:
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        kk = apply_rope(kk, cos, sin)
+    # TP layout for attention internals, in preference order:
+    #   1. KV heads divisible by TP      -> shard kv_heads (q, k, v)
+    #   2. total Q heads divisible by TP -> constrain the FLAT head dim;
+    #      the [B,S,H,hd]->[B,S,K,G,hd] reshape lets XLA split the TP axis
+    #      across (K, G) (e.g. 16 -> [8,2]) and partially shard K/V — this
+    #      follows the weight-induced sharding instead of fighting it
+    #      (q-seq constraints here caused involuntary full remat).
+    #   3. fallback: shard the query sequence (full attention per rank
+    #      over replicated K/V) — keeps fp32 score tensors 1/TP-sized.
+    tp = ctx.tp_size()
+    h_total = k * g
+    sq = q.shape[1]
+    if tp > 1 and k % tp == 0:
+        q = q.reshape(q.shape[0], q.shape[1], k, g, hd)
+        q = ctx.constrain(q, "batch", "seq", "kv_heads", None, None)
+        kk = ctx.constrain(kk, "batch", "seq", "kv_heads", None)
+        v = ctx.constrain(v, "batch", "seq", "kv_heads", None)
+    elif tp > 1 and h_total % tp == 0 and not ctx.force_seq_attn:
+        q = ctx.constrain(q, "batch", "seq", "heads", None)
+        q = q.reshape(q.shape[0], q.shape[1], k, g, hd)
+        # k/v left to propagation: XLA partially shards K over the leading
+        # factor of the (K, G) split
+    elif tp > 1 and sq % tp == 0 and sq > 1:
+        q = q.reshape(q.shape[0], q.shape[1], k, g, hd)
+        q = ctx.constrain(q, "batch", "attn_q_seq", None, None, None)
+        kk = ctx.constrain(kk, "batch", None, None, None)
+        v = ctx.constrain(v, "batch", None, None, None)
+    else:
+        q = q.reshape(q.shape[0], q.shape[1], k, g, hd)
+    return q, kk, v
+
+
+def out_project(params, o, cfg: ModelConfig, ctx: ShardingCtx):
+    """o: [B, S, K, G, hd] -> [B, S, d]."""
+    b, s, k, g, hd = o.shape
+    o = o.reshape(b, s, k * g, hd)
+    out = jnp.einsum("bshx,hxd->bsd", o, cast(params["wo"]))
+    return ctx.constrain(out, "batch", "seq", "embed_act")
+
+
+def _chunk_mask(q_pos, kv_pos, causal: bool, window: int):
+    """q_pos: [Sq], kv_pos: [Ck] -> bool [Sq, Ck] (True = attend)."""
+    m = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= kv_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m &= kv_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def attend_chunked(q, k, v, *, causal: bool = True, window: int = 0,
+                   q_offset: int = 0, chunk: int = 1024):
+    """Streaming-softmax attention.
+
+    q: [B, Sq, K, G, hd]; k, v: [B, Skv, K, hd].
+    q_offset: absolute position of q[0] relative to k[0] (prefill: 0 when
+    Sq == Skv; decode chunks: cache length).
+    Returns [B, Sq, K, G, hd].
+    """
+    b, sq, kh, g, hd = q.shape
+    skv = k.shape[1]
+    chunk = min(chunk, skv)
+    assert skv % chunk == 0, (skv, chunk)
+    n_chunks = skv // chunk
+    scale = (1.0 / jnp.sqrt(hd)).astype(jnp.float32)
+
+    q_pos = jnp.arange(sq) + q_offset
+
+    kc = k.reshape(b, n_chunks, chunk, kh, hd)
+    vc = v.reshape(b, n_chunks, chunk, kh, hd)
+    kc = jnp.moveaxis(kc, 1, 0)          # [n, B, chunk, K, hd]
+    vc = jnp.moveaxis(vc, 1, 0)
+
+    def step(carry, inputs):
+        m_run, l_run, acc = carry
+        ki, vi, idx = inputs
+        kv_pos = idx * chunk + jnp.arange(chunk)
+        # dots read bf16 operands directly, accumulating fp32 (TPU-native;
+        # avoids materializing fp32 copies of K/V — §Perf hillclimb)
+        s = jnp.einsum("bqkgx,bckx->bqkgc", q, ki,
+                       preferred_element_type=jnp.float32)
+        s = s * scale
+        mask = _chunk_mask(q_pos, kv_pos, causal, window)     # [Sq, C]
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        acc = (acc * corr[..., None]
+               + jnp.einsum("bqkgc,bckx->bqkgx", p.astype(q.dtype), vi,
+                            preferred_element_type=jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, sq, kh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kh, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, kh, g, hd), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def attend_decode(q, k_cache, v_cache, cache_len=None, valid_mask=None):
+    """One-token attention against a cache.
+
+    q: [B, 1, K, G, hd]; caches: [B, S, K, hd].
+    cache_len: scalar or [B] — number of valid positions (the new token's
+    K/V must already be written, i.e. cache_len INCLUDES it); OR
+    valid_mask: [B, S] bool (ring buffers / arbitrary validity).
+    """
+    b, _, kh, g, hd = q.shape
+    s = k_cache.shape[1]
+    scale = (1.0 / jnp.sqrt(hd)).astype(jnp.float32)
+    # read the cache at its storage dtype; accumulate fp32 in the dot
+    logits = jnp.einsum("bqkgx,bskx->bqkgs", q, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    if valid_mask is None:
+        pos = jnp.arange(s)
+        valid_mask = pos[None, :] < jnp.reshape(
+            jnp.asarray(cache_len), (-1, 1))
+    logits = jnp.where(valid_mask[:, None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bqkgs,bskx->bqkgx", w.astype(q.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

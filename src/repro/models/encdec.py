@@ -1,0 +1,193 @@
+"""Encoder-decoder transformer (seamless-m4t family).
+
+Encoder consumes precomputed modality frame embeddings (the audio frontend
+is a stub per the assignment); decoder is a causal LM with cross-attention
+into the encoder output.  Both stacks are homogeneous -> lax.scan.
+
+Caches for decode: per-decoder-layer self-attention K/V plus
+cross-attention K/V precomputed once from the encoder output at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    cast, mlp, mlp_schema, rmsnorm, rmsnorm_schema, unembed,
+)
+from repro.models.schema import Leaf, stack
+from repro.models.sharding import ShardingCtx
+
+
+def enc_block_schema(cfg: ModelConfig):
+    return {"ln1": rmsnorm_schema(cfg.d_model),
+            "attn": attn.attn_schema(cfg),
+            "ln2": rmsnorm_schema(cfg.d_model),
+            "mlp": mlp_schema(cfg)}
+
+
+def dec_block_schema(cfg: ModelConfig):
+    return {"ln1": rmsnorm_schema(cfg.d_model),
+            "attn": attn.attn_schema(cfg),
+            "lnx": rmsnorm_schema(cfg.d_model),
+            "xattn": attn.attn_schema(cfg, cross=True),
+            "ln2": rmsnorm_schema(cfg.d_model),
+            "mlp": mlp_schema(cfg)}
+
+
+def encdec_schema(cfg: ModelConfig):
+    d = cfg.d_model
+    v = cfg.padded_vocab
+    return {
+        "embedding": {
+            "embed": Leaf((v, d), ("vocab", "embed"), init="normal"),
+            "unembed": Leaf((d, v), ("embed", "vocab")),
+        },
+        "frontend": {"adapter": Leaf((d, d), ("embed", "embed_act"))},
+        "encoder": {"blocks": stack(enc_block_schema(cfg),
+                                    cfg.encoder_layers),
+                    "final_norm": rmsnorm_schema(d)},
+        "decoder": {"blocks": stack(dec_block_schema(cfg), cfg.num_layers)},
+        "final_norm": rmsnorm_schema(d),
+    }
+
+
+def _enc_block(lp, x, cfg, ctx, positions):
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    q, k, v = attn.qkv_project(lp["attn"], h, cfg, ctx, positions=positions)
+    o = attn.attend_chunked(q, k, v, causal=False)
+    x = x + attn.out_project(lp["attn"], o, cfg, ctx)
+    h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    return x + mlp(lp["mlp"], h2, cfg, ctx)
+
+
+def encode(params, frames, cfg: ModelConfig, ctx: ShardingCtx):
+    """frames: [B, Se, d] precomputed frontend embeddings -> [B, Se, d]."""
+    x = jnp.einsum("bsd,de->bse", cast(frames),
+                   cast(params["frontend"]["adapter"]))
+    x = ctx.constrain(x, "batch", "seq", "embed_act")
+    se = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(se)[None, :], (1, se))
+
+    def body(lp, x):
+        return _enc_block(lp, x, cfg, ctx, positions)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(x, lp):
+        return body(lp, x), None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["encoder"]["blocks"])
+    return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def _dec_block(lp, x, enc_or_cross, cfg, ctx, *, mode, positions,
+               self_cache=None):
+    """enc_or_cross: encoder output [B,Se,d] (train/prefill) or
+    precomputed cross (k, v) dict (decode)."""
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    new_cache = None
+    if mode == "decode":
+        b = x.shape[0]
+        pos = positions[:, 0]
+        q, k, v = attn.qkv_project(lp["attn"], h, cfg, ctx,
+                                   positions=positions)
+        kc = self_cache["k"].at[jnp.arange(b), pos].set(k[:, 0])
+        vc = self_cache["v"].at[jnp.arange(b), pos].set(v[:, 0])
+        o = attn.attend_decode(q, kc, vc, cache_len=pos + 1)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        q, k, v = attn.qkv_project(lp["attn"], h, cfg, ctx,
+                                   positions=positions)
+        o = attn.attend_chunked(q, k, v, causal=True)
+        if mode == "prefill":
+            new_cache = {"k": k, "v": v}
+    x = x + attn.out_project(lp["attn"], o, cfg, ctx)
+
+    # cross attention
+    hx = rmsnorm(lp["lnx"], x, cfg.norm_eps)
+    if mode == "decode":
+        xk, xv = enc_or_cross["k"], enc_or_cross["v"]
+        g = cfg.num_heads // cfg.num_kv_heads
+        qx = jnp.einsum("bsd,dhx->bshx", hx, cast(lp["xattn"]["wq"]))
+        qx = qx.reshape(qx.shape[0], qx.shape[1], cfg.num_kv_heads, g,
+                        cfg.head_dim)
+        ox = attn.attend_decode(qx, xk, xv, cache_len=xk.shape[1])
+    else:
+        qx, _, _ = attn.qkv_project(lp["xattn"], hx, cfg, ctx,
+                                    rope_on=False, positions=None)
+        xk = jnp.einsum("bsd,dkx->bskx", enc_or_cross,
+                        cast(lp["xattn"]["wk"]))
+        xv = jnp.einsum("bsd,dkx->bskx", enc_or_cross,
+                        cast(lp["xattn"]["wv"]))
+        ox = attn.attend_chunked(qx, xk, xv, causal=False)
+    x = x + attn.out_project(lp["xattn"], ox, cfg, ctx)
+
+    h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    x = x + mlp(lp["mlp"], h2, cfg, ctx)
+    if mode == "prefill":
+        new_cache = {"self": new_cache,
+                     "cross": {"k": xk, "v": xv}}
+    elif mode == "decode":
+        new_cache = {"self": new_cache, "cross": enc_or_cross}
+    return x, new_cache
+
+
+def forward_encdec(params, inputs: Dict[str, Any], cfg: ModelConfig,
+                   ctx: ShardingCtx, *, mode: str, caches=None,
+                   positions=None):
+    """train: inputs {frames [B,Se,d], tokens [B,St]} -> logits [B,St,V]
+    prefill: same -> (last logits [B,V], caches)
+    decode: inputs {tokens [B,1]}, caches, positions [B,1] -> (logits, caches)
+    """
+    if mode == "decode":
+        x = jnp.take(cast(params["embedding"]["embed"]),
+                     inputs["tokens"], axis=0)
+        x = ctx.constrain(x, "batch", "seq", "embed_act")
+
+        def scan_fn(carry, xs):
+            x, = carry
+            lp, cache_l = xs
+            x2, new_c = _dec_block(lp, x, cache_l["cross"], cfg, ctx,
+                                   mode="decode", positions=positions,
+                                   self_cache=cache_l["self"])
+            return (x2,), new_c
+        (x,), new_caches = jax.lax.scan(
+            scan_fn, (x,), (params["decoder"]["blocks"], caches))
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed(params["embedding"], x, cfg, ctx)[:, 0]
+        return logits, new_caches, jnp.zeros((), jnp.float32)
+
+    enc = encode(params, inputs["frames"], cfg, ctx)
+    tokens = inputs["tokens"]
+    x = jnp.take(cast(params["embedding"]["embed"]), tokens, axis=0)
+    x = ctx.constrain(x, "batch", "seq", "embed_act")
+    st = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(st)[None, :], (1, st))
+
+    def body(lp, x):
+        return _dec_block(lp, x, enc, cfg, ctx, mode=mode,
+                          positions=positions)
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body)
+
+    def scan_fn(carry, lp):
+        x, = carry
+        x2, new_c = body(lp, x)
+        return (x2,), new_c
+
+    (x,), new_caches = jax.lax.scan(scan_fn, (x,),
+                                    params["decoder"]["blocks"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if mode == "train":
+        logits = unembed(params["embedding"], x, cfg, ctx)
+        return logits, None, jnp.zeros((), jnp.float32)
+    last = x[:, -1:, :]
+    logits = unembed(params["embedding"], last, cfg, ctx)[:, 0]
+    return logits, new_caches, jnp.zeros((), jnp.float32)

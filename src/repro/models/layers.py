@@ -1,0 +1,111 @@
+"""Shared building blocks: RMSNorm, embeddings, MLPs, RoPE."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.schema import Leaf
+from repro.models.sharding import ShardingCtx
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast(x):
+    return x.astype(COMPUTE_DTYPE)
+
+
+# -- RMSNorm ------------------------------------------------------------------
+
+def rmsnorm_schema(d: int):
+    return {"scale": Leaf((d,), ("norm",), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# -- Embedding / unembedding --------------------------------------------------
+
+def embedding_schema(cfg: ModelConfig):
+    v = cfg.padded_vocab
+    s = {"embed": Leaf((v, cfg.d_model), ("vocab", "embed"), init="normal")}
+    if not cfg.tie_embeddings:
+        s["unembed"] = Leaf((cfg.d_model, v), ("embed", "vocab"))
+    return s
+
+
+def embed(params, tokens, ctx: ShardingCtx):
+    table = cast(params["embed"])
+    out = jnp.take(table, tokens, axis=0)
+    return ctx.constrain(out, "batch", "seq", "embed_act")
+
+
+def unembed(params, x, cfg: ModelConfig, ctx: ShardingCtx):
+    if cfg.tie_embeddings:
+        w = cast(params["embed"]).T
+    else:
+        w = cast(params["unembed"])
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask padding columns so softmax/argmax never see them
+        vidx = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(vidx < cfg.vocab_size, logits,
+                           jnp.asarray(-1e9, logits.dtype))
+    return ctx.constrain(logits, "batch", "seq", "vocab")
+
+
+# -- MLP ------------------------------------------------------------------------
+
+def mlp_schema(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    s = {"wi": Leaf((d, f), ("embed", "mlp")),
+         "wo": Leaf((f, d), ("mlp", "embed"))}
+    if cfg.mlp_gated:
+        s["wg"] = Leaf((d, f), ("embed", "mlp"))
+    return s
+
+
+def mlp(params, x, cfg: ModelConfig, ctx: ShardingCtx):
+    h = jnp.einsum("bsd,df->bsf", x, cast(params["wi"]))
+    if cfg.mlp_gated:
+        g = jnp.einsum("bsd,df->bsf", x, cast(params["wg"]))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = ctx.constrain(h, "batch", "seq", "mlp")
+    out = jnp.einsum("bsf,fd->bsd", h, cast(params["wo"]))
+    return ctx.constrain(out, "batch", "seq", "embed_act")
+
+
+# -- RoPE -----------------------------------------------------------------------
+
+def rope_angles(positions, hd: int, theta: float = 10000.0):
+    """positions: [B, S] (use [1, S] to share across batch) ->
+    (cos, sin) each [B, S, hd//2]."""
+    assert positions.ndim == 2, "positions must be [B, S]"
+    half = hd // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32)
+                    / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [B, S, <head dims...>, hd]; cos/sin: [B, S, hd//2] or [S, hd//2].
+
+    Head axes are broadcast by inserting singleton dims before the last."""
+    half = x.shape[-1] // 2
+    while cos.ndim < x.ndim:
+        cos = jnp.expand_dims(cos, -2)
+        sin = jnp.expand_dims(sin, -2)
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,134 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+    i_t = sigmoid(W_i x_t)                  (input gate, block-diagonal)
+    r_t = sigmoid(W_r x_t)                  (recurrence gate, block-diagonal)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses jax.lax.associative_scan over the sequence (this is the
+pure-jnp oracle for the Pallas ``rglru_scan`` kernel); decode is a single
+recurrence step carrying h.  The block wraps the LRU with the Griffin
+recurrent-block structure: linear in, short depthwise conv, gated output.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import cast
+from repro.models.schema import Leaf
+from repro.models.sharding import ShardingCtx
+
+RG_LRU_C = 8.0
+
+
+def rglru_schema(cfg: ModelConfig):
+    d = cfg.d_model
+    lru = d                                  # lru width == d_model (RG-2B)
+    hn = max(cfg.lru_heads, 1)
+    bs = lru // hn
+    return {
+        "wx": Leaf((d, lru), ("embed", "lru")),
+        "wgate": Leaf((d, lru), ("embed", "lru")),
+        "conv_w": Leaf((cfg.conv_width, lru), ("conv", "lru"), init="fan_in"),
+        "conv_b": Leaf((lru,), ("lru",), init="zeros"),
+        "gate_i_w": Leaf((hn, bs, bs), ("lru", None, None), fan_axis=1),
+        "gate_i_b": Leaf((hn, bs), ("lru", None), init="zeros"),
+        "gate_r_w": Leaf((hn, bs, bs), ("lru", None, None), fan_axis=1),
+        "gate_r_b": Leaf((hn, bs), ("lru", None), init="zeros"),
+        "lam": Leaf((lru,), ("lru",), init="normal"),
+        "wo": Leaf((lru, d), ("lru", "embed")),
+    }
+
+
+def _block_diag(x, w, b):
+    """x: [B, S, lru], w: [Hn, bs, bs] -> [B, S, lru]."""
+    bsz, s, lru = x.shape
+    hn, blk, _ = w.shape
+    xh = x.reshape(bsz, s, hn, blk)
+    y = jnp.einsum("bshi,hij->bshj", xh, w) + b
+    return y.reshape(bsz, s, lru)
+
+
+def _gates(params, xb):
+    """-> (log_a, gated_input) both [B, S, lru] fp32."""
+    i = jax.nn.sigmoid(_block_diag(xb, cast(params["gate_i_w"]),
+                                   cast(params["gate_i_b"])).astype(jnp.float32))
+    r = jax.nn.sigmoid(_block_diag(xb, cast(params["gate_r_w"]),
+                                   cast(params["gate_r_b"])).astype(jnp.float32))
+    log_a = -RG_LRU_C * jax.nn.softplus(
+        params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * xb.astype(jnp.float32))
+    return log_a, gated
+
+
+def lru_scan(log_a, x):
+    """Associative linear recurrence h_t = a_t h_{t-1} + x_t over axis 1.
+
+    log_a, x: [B, S, C] fp32 -> h: [B, S, C] fp32.
+    """
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 + a2, b1 * jnp.exp(a2) + b2
+
+    la, h = jax.lax.associative_scan(combine, (log_a, x), axis=1)
+    return h
+
+
+def _conv1d(x, w, b, state=None):
+    """Causal depthwise conv, width W.  x: [B, S, C]; w: [W, C].
+
+    state: [B, W-1, C] carried inputs for decode; returns (y, new_state).
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1):, :]
+    return y + b, new_state
+
+
+def rglru_block(params, x, cfg: ModelConfig, ctx: ShardingCtx,
+                state: Tuple = None, decode: bool = False):
+    """Griffin recurrent block.  x: [B, S, d].
+
+    state: (h [B, lru] fp32, conv [B, W-1, lru]) when decoding.
+    Returns (out [B, S, d], new_state).
+    """
+    xb = jnp.einsum("bsd,dl->bsl", x, cast(params["wx"]))
+    gate = jnp.einsum("bsd,dl->bsl", x, cast(params["wgate"]))
+    xb = ctx.constrain(xb, "batch", "seq", "lru")
+
+    conv_state = state[1] if state is not None else None
+    xb, new_conv = _conv1d(xb, cast(params["conv_w"]), cast(params["conv_b"]),
+                           conv_state)
+
+    log_a, gated = _gates(params, xb)
+    if decode:
+        h_prev = state[0]                            # [B, lru] fp32
+        h = jnp.exp(log_a[:, 0]) * h_prev + gated[:, 0]
+        hs = h[:, None, :]
+        new_h = h
+    else:
+        hs = lru_scan(log_a, gated)                  # [B, S, lru]
+        new_h = hs[:, -1]
+    hs = ctx.constrain(hs.astype(x.dtype), "batch", "seq", "lru")
+    out = jax.nn.gelu(gate) * hs
+    out = jnp.einsum("bsl,ld->bsd", out, cast(params["wo"]))
+    out = ctx.constrain(out, "batch", "seq", "embed_act")
+    return out, (new_h, new_conv)
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    lru = cfg.d_model
+    return (jnp.zeros((batch, lru), jnp.float32),
+            jnp.zeros((batch, cfg.conv_width - 1, lru), jnp.float32))

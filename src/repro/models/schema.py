@@ -1,0 +1,81 @@
+"""Parameter schema: one structural source of truth for shapes, logical
+axes, and initializers — ``init_params`` and ``param_specs`` both derive
+from it, so sharding metadata can never drift from the arrays."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sharding import ShardingCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class Leaf:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]         # logical axis names per dim
+    init: str = "fan_in"                    # fan_in | normal | zeros | ones
+    dtype: Any = jnp.float32
+    fan_axis: int = 0                       # which dim is fan-in for scaling
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Schema = Dict[str, Any]          # nested dict of Leaf
+
+
+def stack(schema: Schema, n: int) -> Schema:
+    """Add a leading 'layers' axis of size n to every leaf (scan stacking)."""
+    def _s(leaf: Leaf) -> Leaf:
+        return Leaf((n,) + leaf.shape, ("layers",) + leaf.axes,
+                    leaf.init, leaf.dtype, leaf.fan_axis + 1)
+    return jax.tree.map(_s, schema,
+                        is_leaf=lambda x: isinstance(x, Leaf))
+
+
+def init_params(schema: Schema, key: jax.Array) -> Dict[str, Any]:
+    leaves, treedef = jax.tree.flatten(
+        schema, is_leaf=lambda x: isinstance(x, Leaf))
+    keys = jax.random.split(key, len(leaves))
+
+    def _init(leaf: Leaf, k):
+        if leaf.init == "zeros":
+            return jnp.zeros(leaf.shape, leaf.dtype)
+        if leaf.init == "ones":
+            return jnp.ones(leaf.shape, leaf.dtype)
+        if leaf.init == "normal":
+            return (jax.random.normal(k, leaf.shape) * 0.02).astype(leaf.dtype)
+        # fan_in scaled
+        fan = leaf.shape[leaf.fan_axis] if leaf.shape else 1
+        std = 1.0 / np.sqrt(max(fan, 1))
+        return (jax.random.normal(k, leaf.shape) * std).astype(leaf.dtype)
+
+    return jax.tree.unflatten(treedef, [_init(l, k)
+                                        for l, k in zip(leaves, keys)])
+
+
+def param_specs(schema: Schema, ctx: ShardingCtx):
+    """PartitionSpec pytree matching the schema."""
+    return jax.tree.map(lambda l: ctx.spec(l.axes, l.shape), schema,
+                        is_leaf=lambda x: isinstance(x, Leaf))
+
+
+def param_shardings(schema: Schema, ctx: ShardingCtx):
+    return jax.tree.map(lambda l: ctx.sharding(l.axes, l.shape), schema,
+                        is_leaf=lambda x: isinstance(x, Leaf))
+
+
+def abstract_params(schema: Schema) -> Dict[str, Any]:
+    """ShapeDtypeStructs for dry-run lowering (no allocation)."""
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), schema,
+        is_leaf=lambda x: isinstance(x, Leaf))
+
+
+def param_count(schema: Schema) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=lambda x: isinstance(x, Leaf))
+    return int(sum(np.prod(l.shape) for l in leaves))

@@ -1,0 +1,146 @@
+"""Sharding context + logical-axis rules (MaxText-style).
+
+Parameters and activations carry *logical* axis names; a ``ShardingCtx``
+maps them to mesh axes with divisibility guards.  The same model code runs:
+
+  * unsharded on one CPU device (smoke tests)          — ctx = ShardingCtx()
+  * on the production mesh (16,16) / (2,16,16)          — ctx = from_mesh(mesh)
+
+Mesh contract (DESIGN.md §4):
+  'model' — tensor parallel (heads / ffn / vocab / experts)    [intra-pod ICI]
+  'data'  — FSDP parameter dim + batch                          [intra-pod ICI]
+  'pod'   — pure data parallel (gradient all-reduce only)       [DCN]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axes (None = replicated)
+DEFAULT_RULES: Dict[str, Optional[str]] = {
+    "batch": "__dp__",          # expands to ('pod','data') / ('data',)
+    "seq": "__seq__",           # tp-sharded under sequence-parallelism
+    "seq_kv": "__tp__",         # KV-cache length (context parallel decode)
+    "vocab": "__tp__",
+    "embed": "__fsdp__",        # FSDP parameter dim
+    "embed_act": None,          # activation feature dim stays replicated
+    "heads": "__tp__",
+    "kv_heads": "__tp__",
+    "attn_q_seq": "__tp__",     # q-seq sharding when head counts don't divide
+    "head_dim": None,
+    "mlp": "__tp__",
+    "experts": "__tp__",
+    "expert_mlp": None,
+    "layers": None,
+    "lru": "__tp__",
+    "ssm_inner": "__tp__",
+    "ssm_state": None,
+    "conv": None,
+    "norm": None,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    mesh: Optional[Mesh] = None
+    dp_axes: Tuple[str, ...] = ()           # ('pod','data') or ('data',)
+    tp_axis: Optional[str] = None           # 'model'
+    fsdp_axis: Optional[str] = None         # 'data'
+    rules: Optional[Dict[str, Optional[str]]] = None
+    sequence_parallel: bool = False
+    #: disable the flat-head attention constraint (baseline reproduction)
+    force_seq_attn: bool = False
+
+    @property
+    def enabled(self) -> bool:
+        return self.mesh is not None
+
+    def axis_size(self, name: str) -> int:
+        if not self.enabled:
+            return 1
+        return self.mesh.shape[name]
+
+    def dp_size(self) -> int:
+        return int(np.prod([self.axis_size(a) for a in self.dp_axes])) or 1
+
+    def tp_size(self) -> int:
+        return self.axis_size(self.tp_axis) if self.tp_axis else 1
+
+    def _resolve(self, logical: Optional[str]):
+        """Logical axis -> mesh axis (or tuple), before divisibility checks."""
+        if logical is None or not self.enabled:
+            return None
+        rules = dict(DEFAULT_RULES)
+        if self.rules:
+            rules.update(self.rules)
+        tgt = rules.get(logical)
+        if tgt == "__dp__":
+            return self.dp_axes if self.dp_axes else None
+        if tgt == "__tp__":
+            return self.tp_axis
+        if tgt == "__fsdp__":
+            return self.fsdp_axis
+        if tgt == "__seq__":
+            return self.tp_axis if self.sequence_parallel else None
+        return tgt
+
+    def spec(self, axes: Tuple[Optional[str], ...],
+             shape: Optional[Tuple[int, ...]] = None) -> P:
+        """Build a PartitionSpec from logical axes, dropping non-divisible,
+        over-subscribed, or duplicate-axis assignments to replication."""
+        out = []
+        used: set = set()
+        for i, logical in enumerate(axes):
+            mesh_axes = self._resolve(logical)
+            if mesh_axes is None:
+                out.append(None)
+                continue
+            if isinstance(mesh_axes, str):
+                mesh_axes_t = (mesh_axes,)
+            else:
+                mesh_axes_t = tuple(mesh_axes)
+            if any(a in used for a in mesh_axes_t):
+                out.append(None)            # a mesh axis may appear once
+                continue
+            if shape is not None:
+                total = int(np.prod([self.axis_size(a) for a in mesh_axes_t]))
+                if total == 0 or shape[i] % total != 0:
+                    out.append(None)
+                    continue
+            used.update(mesh_axes_t)
+            out.append(mesh_axes_t[0] if len(mesh_axes_t) == 1 else mesh_axes_t)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def sharding(self, axes, shape=None) -> Optional[NamedSharding]:
+        if not self.enabled:
+            return None
+        return NamedSharding(self.mesh, self.spec(axes, shape))
+
+    def constrain(self, x, *axes):
+        """with_sharding_constraint by logical axes (no-op when disabled)."""
+        if not self.enabled:
+            return x
+        spec = self.spec(tuple(axes), tuple(x.shape))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def from_mesh(mesh: Mesh, sequence_parallel: bool = False,
+              rules: Optional[Dict[str, Optional[str]]] = None,
+              force_seq_attn: bool = False) -> ShardingCtx:
+    names = mesh.axis_names
+    if "pod" in names:
+        dp_axes: Tuple[str, ...] = ("pod", "data")
+    else:
+        dp_axes = ("data",)
+    return ShardingCtx(mesh=mesh, dp_axes=dp_axes,
+                       tp_axis="model" if "model" in names else None,
+                       fsdp_axis="data" if "data" in names else None,
+                       rules=rules, sequence_parallel=sequence_parallel,
+                       force_seq_attn=force_seq_attn)

@@ -1,0 +1,188 @@
+"""Mamba2 block — SSD (state-space duality), chunked algorithm.
+
+Per head h with scalar decay a_t = exp(dt_t * A_h)  (A_h = -exp(A_log)):
+
+    state_t = a_t * state_{t-1} + dt_t * B_t  x_t^T      ([N, P] outer)
+    y_t     = C_t . state_t + D_h * x_t
+
+Training/prefill uses the chunked SSD form (arXiv:2405.21060 §6, the
+"minimal" formulation): intra-chunk quadratic attention-like term with the
+decay kernel L, plus an inter-chunk recurrence over per-chunk states via
+lax.scan.  This is the pure-jnp oracle for the Pallas ``ssd_scan`` kernel.
+Decode carries (conv_state, ssm_state [B, H, P, N]).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import cast, rmsnorm
+from repro.models.schema import Leaf
+from repro.models.sharding import ShardingCtx
+
+
+def ssm_schema(cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, n, nh = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    d_conv = di + 2 * g * n
+    d_proj = 2 * di + 2 * g * n + nh
+    return {
+        "in_proj": Leaf((d, d_proj), ("embed", "ssm_inner")),
+        "conv_w": Leaf((cfg.conv_width, d_conv), ("conv", "ssm_inner"),
+                       init="fan_in"),
+        "conv_b": Leaf((d_conv,), ("ssm_inner",), init="zeros"),
+        "a_log": Leaf((nh,), (None,), init="ones"),
+        "d_skip": Leaf((nh,), (None,), init="ones"),
+        "dt_bias": Leaf((nh,), (None,), init="zeros"),
+        "norm_scale": Leaf((di,), ("ssm_inner",), init="ones"),
+        "out_proj": Leaf((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _segsum(log_a):
+    """log_a: [..., Q] -> cumulative decay matrix [..., Q, Q]:
+    out[i, j] = sum_{k=j+1..i} log_a[k]  (lower triangular, -inf above)."""
+    q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]        # sum_{j+1..i}
+    idx = jnp.arange(q)
+    mask = idx[:, None] >= idx[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, b, c, a_log_neg, chunk: int,
+                init_state=None):
+    """Chunked SSD scan.
+
+    x:  [B, S, H, P]   (inputs per head)
+    dt: [B, S, H]      (softplus-ed step sizes, fp32)
+    b:  [B, S, G, N]   c: [B, S, G, N]   (G groups broadcast over H)
+    a_log_neg: [H]     (A = -exp(a_log))
+    Returns (y [B, S, H, P], final_state [B, H, P, N]).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    hg = h // g                                # heads per group
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    a = -jnp.exp(a_log_neg.astype(jnp.float32))           # [H] negative
+    da = dtf * a                                          # [B, S, H] log-decay
+    xdt = xf * dtf[..., None]                             # dt-scaled input
+
+    def resh(t, extra):
+        return t.reshape((bsz, nc, chunk) + extra)
+
+    xc = resh(xdt, (h, p))
+    dac = resh(da, (h,))
+    bc = resh(b.astype(jnp.float32), (g, n))
+    cc = resh(c.astype(jnp.float32), (g, n))
+
+    # --- intra-chunk (diagonal block): y = (C B^T . L) x -------------------
+    lmat = jnp.exp(_segsum(jnp.moveaxis(dac, -1, 2)))     # [B, nc, H, Q, Q]
+    # scores[b,l,h,i,j] = C_i . B_j  (broadcast G over H)
+    cbh = jnp.einsum("blqgn,blkgn->blgqk", cc, bc)        # [B,nc,G,Q,Q]
+    cbh = jnp.repeat(cbh, hg, axis=2)                     # [B,nc,H,Q,Q]
+    y_diag = jnp.einsum("blhqk,blhqk,blkhp->blqhp",
+                        cbh, lmat, xc)
+
+    # --- per-chunk final states -------------------------------------------
+    da_cum = jnp.cumsum(dac, axis=2)                      # [B,nc,Q,H]
+    da_tot = da_cum[:, :, -1, :]                          # [B,nc,H]
+    decay_to_end = jnp.exp(da_tot[:, :, None, :] - da_cum)  # [B,nc,Q,H]
+    # states[b,l,h,n,p] = sum_q decay * B_q x_q^T
+    states = jnp.einsum("blqhn,blqh,blqhp->blhnp",
+                        jnp.repeat(bc, hg, axis=3), decay_to_end, xc)
+
+    # --- inter-chunk recurrence over chunk states (lax.scan) ---------------
+    if init_state is None:
+        s0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    else:
+        s0 = jnp.swapaxes(init_state.astype(jnp.float32), -1, -2)
+
+    def chunk_step(carry, inp):
+        st_prev = carry                                   # [B,H,N,P]
+        st_c, da_t = inp                                  # [B,H,N,P], [B,H]
+        st_new = st_c + jnp.exp(da_t)[..., None, None] * st_prev
+        return st_new, st_prev
+
+    states_t = jnp.moveaxis(states, 1, 0)                 # [nc,B,H,N,P]
+    da_tot_t = jnp.moveaxis(da_tot, 1, 0)                 # [nc,B,H]
+    final_state, prev_states = jax.lax.scan(
+        chunk_step, s0, (states_t, da_tot_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # [B,nc,H,N,P]
+
+    # --- inter-chunk contribution: y += C . (decay_in * prev_state) --------
+    decay_in = jnp.exp(da_cum)                            # [B,nc,Q,H]
+    y_off = jnp.einsum("blqgn,blqh,blhnp->blqhp",
+                       cc, decay_in, prev_states) if g == 1 else \
+        jnp.einsum("blqhn,blqh,blhnp->blqhp",
+                   jnp.repeat(cc, hg, axis=3), decay_in, prev_states)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, jnp.swapaxes(final_state, -1, -2)           # [B,H,P,N]
+
+
+def ssm_block(params, x, cfg: ModelConfig, ctx: ShardingCtx,
+              state: Tuple = None, decode: bool = False):
+    """x: [B, S, d] -> (out [B, S, d], new_state (conv, ssm))."""
+    from repro.models.rglru import _conv1d                 # shared causal conv
+
+    di, g, n, nh, p = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                       cfg.ssm_heads, cfg.ssm_head_dim)
+    proj = jnp.einsum("bsd,de->bse", x, cast(params["in_proj"]))
+    proj = ctx.constrain(proj, "batch", "seq", "ssm_inner")
+    z, xbc, dt_raw = jnp.split(proj, [di, di + di + 2 * g * n], axis=-1)
+
+    conv_state = state[0] if state is not None else None
+    xbc, new_conv = _conv1d(xbc, cast(params["conv_w"]),
+                            cast(params["conv_b"]), conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, b, c = jnp.split(xbc, [di, di + g * n], axis=-1)
+    bsz, s = x.shape[0], x.shape[1]
+    xs = xs.reshape(bsz, s, nh, p)
+    b = b.reshape(bsz, s, g, n)
+    c = c.reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    # shard heads over TP: the intra-chunk decay tensor [B,nc,H,Q,Q] is the
+    # memory hot-spot and inherits this sharding through the einsums
+    xs = ctx.constrain(xs, "batch", "seq", "heads", None)
+    dt = ctx.constrain(dt, "batch", "seq", "heads")
+
+    if decode:
+        ssm_state = state[1]                              # [B, H, P, N] fp32
+        a = -jnp.exp(params["a_log"].astype(jnp.float32))
+        da = jnp.exp(dt[:, 0] * a)                        # [B, H]
+        bx = jnp.einsum("bhp,bgn->bhpn",
+                        (xs[:, 0] * dt[:, 0, :, None]).astype(jnp.float32),
+                        b[:, 0].astype(jnp.float32))
+        new_ssm = da[..., None, None] * ssm_state + bx
+        y = jnp.einsum("bhpn,bgn->bhp", new_ssm, c[:, 0].astype(jnp.float32))
+        y = y[:, None]                                    # [B, 1, H, P]
+    else:
+        init = state[1] if state is not None else None
+        y, new_ssm = ssd_chunked(xs, dt, b, c, params["a_log"],
+                                 min(cfg.ssm_chunk, s), init)
+
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xs.astype(jnp.float32)
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)                                 # gated
+    y = rmsnorm({"scale": params["norm_scale"]}, y, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, cast(params["out_proj"]))
+    out = ctx.constrain(out, "batch", "seq", "embed_act")
+    return out, (new_conv, new_ssm)
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    d_conv = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return (jnp.zeros((batch, cfg.conv_width - 1, d_conv), jnp.float32),
+            jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                      jnp.float32))

@@ -1,0 +1,291 @@
+"""Decoder-only LM assembly for dense / MoE / SSM / hybrid / VLM families.
+
+Layers are homogeneous for most archs -> ``lax.scan`` over stacked layer
+params (small HLO, per-layer FSDP all-gather stays inside the loop);
+heterogeneous patterns (RecurrentGemma's rec/rec/attn) use a python loop.
+Per-layer remat (``jax.checkpoint``) keeps saved activations at layer
+boundaries only.
+
+Three modes:
+  train   — full forward, no caches, returns logits (+ MoE aux loss)
+  prefill — builds per-layer caches, returns last-position logits + caches
+  decode  — one token per sequence against caches (pos may vary per batch)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    cast, embed, embedding_schema, mlp, mlp_schema, rmsnorm, rmsnorm_schema,
+    unembed,
+)
+from repro.models.schema import Leaf, init_params, stack
+from repro.models.sharding import ShardingCtx
+
+
+# -- schemas -------------------------------------------------------------------
+
+def block_schema(cfg: ModelConfig, kind: str):
+    d = cfg.d_model
+    s: Dict[str, Any] = {"ln1": rmsnorm_schema(d), "ln2": rmsnorm_schema(d)}
+    if kind == "attn":
+        s["attn"] = attn.attn_schema(cfg)
+        s["mlp"] = mlp_schema(cfg)
+    elif kind == "moe":
+        s["attn"] = attn.attn_schema(cfg)
+        s["moe"] = moe_mod.moe_schema(cfg)
+    elif kind == "rec":
+        s["rec"] = rglru_mod.rglru_schema(cfg)
+        s["mlp"] = mlp_schema(cfg)
+    elif kind == "ssm":
+        s = {"ln1": rmsnorm_schema(d), "ssm": ssm_mod.ssm_schema(cfg)}
+    else:
+        raise ValueError(kind)
+    return s
+
+
+def model_schema(cfg: ModelConfig):
+    s: Dict[str, Any] = {
+        "embedding": embedding_schema(cfg),
+        "final_norm": rmsnorm_schema(cfg.d_model),
+    }
+    if cfg.frontend == "vision":
+        s["frontend"] = {"proj": Leaf((cfg.d_model, cfg.d_model),
+                                      ("embed", "embed_act"))}
+    kinds = cfg.layer_kinds()
+    if cfg.scan_layers and cfg.homogeneous():
+        s["blocks"] = stack(block_schema(cfg, kinds[0]), cfg.num_layers)
+    else:
+        s["blocks"] = {f"layer_{i:02d}": block_schema(cfg, k)
+                       for i, k in enumerate(kinds)}
+    return s
+
+
+# -- per-block apply -----------------------------------------------------------
+
+def _attn_cache_init(cfg: ModelConfig, batch: int, max_len: int):
+    k = cfg.num_kv_heads
+    hd = cfg.head_dim
+    length = min(max_len, cfg.window) if cfg.attention == "local" else max_len
+    shape = (batch, length, k, hd)
+    from repro.models.layers import COMPUTE_DTYPE
+    return {"k": jnp.zeros(shape, COMPUTE_DTYPE),
+            "v": jnp.zeros(shape, COMPUTE_DTYPE)}
+
+
+def _ring_gather(kv, window: int):
+    """kv: [B, S, K, hd] -> ring cache [B, W, K, hd]: slot j holds the
+    newest position p <= S-1 with p % W == j."""
+    s = kv.shape[1]
+    if s <= window:
+        pad = jnp.zeros((kv.shape[0], window - s) + kv.shape[2:], kv.dtype)
+        return jnp.concatenate([kv, pad], axis=1)
+    j = jnp.arange(window)
+    p = (s - 1) - ((s - 1 - j) % window)
+    return jnp.take(kv, p, axis=1)
+
+
+def attn_block(lp, x, cfg: ModelConfig, ctx: ShardingCtx, *,
+               mode: str, positions, cache=None):
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    causal = True
+    window = cfg.window if cfg.attention == "local" else 0
+    new_cache = None
+
+    if mode == "decode":
+        b = x.shape[0]
+        pos = positions[:, 0]                              # [B]
+        q, k, v = attn.qkv_project(lp["attn"], h, cfg, ctx,
+                                   positions=positions)
+        if window > 0:
+            slot = pos % window
+            kc = cache["k"].at[jnp.arange(b), slot].set(k[:, 0])
+            vc = cache["v"].at[jnp.arange(b), slot].set(v[:, 0])
+            j = jnp.arange(kc.shape[1])
+            valid = (j[None, :] <= pos[:, None]) | (pos[:, None] >= window - 1)
+            o = attn.attend_decode(q, kc, vc, cache_len=None,
+                                   valid_mask=valid)
+        else:
+            kc = cache["k"].at[jnp.arange(b), pos].set(k[:, 0])
+            vc = cache["v"].at[jnp.arange(b), pos].set(v[:, 0])
+            o = attn.attend_decode(q, kc, vc, cache_len=pos + 1)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        q, k, v = attn.qkv_project(lp["attn"], h, cfg, ctx,
+                                   positions=positions)
+        o = attn.attend_chunked(q, k, v, causal=causal, window=window)
+        if mode == "prefill":
+            if window > 0:
+                new_cache = {"k": _ring_gather(k, window),
+                             "v": _ring_gather(v, window)}
+            else:
+                new_cache = {"k": k, "v": v}
+
+    x = x + attn.out_project(lp["attn"], o, cfg, ctx)
+    h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in lp:
+        m, aux = moe_mod.moe_block(lp["moe"], h2, cfg, ctx)
+    else:
+        m = mlp(lp["mlp"], h2, cfg, ctx)
+    return x + m, new_cache, aux
+
+
+def rec_block(lp, x, cfg: ModelConfig, ctx: ShardingCtx, *,
+              mode: str, positions, cache=None):
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    state = cache if mode == "decode" else None
+    o, new_state = rglru_mod.rglru_block(lp["rec"], h, cfg, ctx,
+                                         state=state,
+                                         decode=(mode == "decode"))
+    x = x + o
+    h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    x = x + mlp(lp["mlp"], h2, cfg, ctx)
+    new_cache = new_state if mode in ("decode", "prefill") else None
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+def ssm_block_apply(lp, x, cfg: ModelConfig, ctx: ShardingCtx, *,
+                    mode: str, positions, cache=None):
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    state = cache if mode == "decode" else None
+    o, new_state = ssm_mod.ssm_block(lp["ssm"], h, cfg, ctx, state=state,
+                                     decode=(mode == "decode"))
+    new_cache = new_state if mode in ("decode", "prefill") else None
+    return x + o, new_cache, jnp.zeros((), jnp.float32)
+
+
+_BLOCK_FNS = {"attn": attn_block, "moe": attn_block, "rec": rec_block,
+              "ssm": ssm_block_apply}
+
+
+def _cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    if kind in ("attn", "moe"):
+        return _attn_cache_init(cfg, batch, max_len)
+    if kind == "rec":
+        return rglru_mod.init_state(cfg, batch)
+    if kind == "ssm":
+        return ssm_mod.init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+# -- model forward --------------------------------------------------------------
+
+def _inputs_to_embeds(params, inputs: Dict[str, Any], cfg: ModelConfig,
+                      ctx: ShardingCtx):
+    x = embed(params["embedding"], inputs["tokens"], ctx)
+    if cfg.frontend == "vision" and "patch_embeds" in inputs:
+        pe = jnp.einsum("bpd,de->bpe", cast(inputs["patch_embeds"]),
+                        cast(params["frontend"]["proj"]))
+        x = jnp.concatenate([pe, x], axis=1)
+        x = ctx.constrain(x, "batch", "seq", "embed_act")
+    return x
+
+
+def forward(params, inputs: Dict[str, Any], cfg: ModelConfig,
+            ctx: ShardingCtx, *, mode: str, caches=None, positions=None):
+    """Shared forward.  Returns (hidden or logits info, caches, aux).
+
+    train:   (logits [B,S,V], None, aux)
+    prefill: (last_logits [B,V], caches, aux)
+    decode:  (logits [B,V], caches, aux)   — inputs["tokens"]: [B, 1],
+             positions [B, 1] = current absolute position per sequence.
+    """
+    kinds = cfg.layer_kinds()
+    if mode == "decode":
+        x = embed(params["embedding"], inputs["tokens"], ctx)
+    else:
+        x = _inputs_to_embeds(params, inputs, cfg, ctx)
+    b, s = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (1, s))
+
+    aux_total = jnp.zeros((), jnp.float32)
+    scanned = cfg.scan_layers and cfg.homogeneous()
+
+    if scanned:
+        kind = kinds[0]
+        block_fn = _BLOCK_FNS[kind]
+
+        def body(lp, x, cache):
+            return block_fn(lp, x, cfg, ctx, mode=mode, positions=positions,
+                            cache=cache)
+
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(body)
+
+        if mode == "train":
+            def scan_fn(carry, lp):
+                x, aux = carry
+                x2, _, a = body(lp, x, None)
+                return (x2, aux + a), None
+            (x, aux_total), _ = jax.lax.scan(scan_fn, (x, aux_total),
+                                             params["blocks"])
+            new_caches = None
+        elif mode == "prefill":
+            def scan_fn(carry, lp):
+                x, aux = carry
+                x2, new_c, a = body(lp, x, None)
+                return (x2, aux + a), new_c
+            (x, aux_total), new_caches = jax.lax.scan(
+                scan_fn, (x, aux_total), params["blocks"])
+        else:                                   # decode: caches required
+            def scan_fn(carry, xs):
+                x, aux = carry
+                lp, cache_l = xs
+                x2, new_c, a = body(lp, x, cache_l)
+                return (x2, aux + a), new_c
+            (x, aux_total), new_caches = jax.lax.scan(
+                scan_fn, (x, aux_total), (params["blocks"], caches))
+    else:
+        new_caches = {}
+        for i, kind in enumerate(kinds):
+            lp = params["blocks"][f"layer_{i:02d}"]
+            block_fn = _BLOCK_FNS[kind]
+            fn = functools.partial(block_fn, cfg=cfg, ctx=ctx, mode=mode,
+                                   positions=positions)
+            if cfg.remat and mode == "train":
+                fn = jax.checkpoint(fn)
+            cache_l = None
+            if mode == "decode":
+                cache_l = caches[f"layer_{i:02d}"]
+            elif mode == "prefill":
+                cache_l = None
+            x, new_c, a = fn(lp, x, cache=cache_l)
+            aux_total = aux_total + a
+            if mode in ("prefill", "decode"):
+                new_caches[f"layer_{i:02d}"] = new_c
+        if mode == "train":
+            new_caches = None
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+    if mode == "train":
+        logits = unembed(params["embedding"], x, cfg, ctx)
+        return logits, None, aux_total
+    if mode == "prefill":
+        last = x[:, -1:, :]
+        logits = unembed(params["embedding"], last, cfg, ctx)[:, 0]
+        return logits, new_caches, aux_total
+    logits = unembed(params["embedding"], x, cfg, ctx)[:, 0]
+    return logits, new_caches, aux_total
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Zero caches for decode-only lowering (the dry-run's decode shapes)."""
+    kinds = cfg.layer_kinds()
+    if cfg.scan_layers and cfg.homogeneous():
+        c0 = _cache_init(cfg, kinds[0], batch, max_len)
+        return jax.tree.map(
+            lambda t: jnp.zeros((cfg.num_layers,) + t.shape, t.dtype), c0)
+    return {f"layer_{i:02d}": _cache_init(cfg, k, batch, max_len)
+            for i, k in enumerate(kinds)}

@@ -1,0 +1,3 @@
+from repro.roofline.analysis import RooflineReport, analyze, memsys_bridge
+from repro.roofline.hlo_parse import HloCostModel, loop_weighted_metrics
+from repro.roofline.hw import V5E, ChipSpec

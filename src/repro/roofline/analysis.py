@@ -1,0 +1,250 @@
+"""Roofline analysis from compiled artifacts (no real hardware).
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+``cost_analysis()`` supplies FLOPs/bytes (per-partition SPMD module —
+multiplied back to global by ``chips``... it reports the per-device
+program, so per-chip seconds = value / peak directly; we keep the formulas
+of the assignment by treating HLO_FLOPs as global = per_device × chips).
+
+collective_bytes comes from parsing the post-SPMD HLO: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+operand, with while-loop bodies multiplied by their trip counts
+(best-effort: the loop bound constant from the condition computation).
+
+The paper bridge: HLO byte counts -> xRyW traffic mix -> each UCIe-Memory
+approach's delivered bandwidth/power for this workload (EXPERIMENTS.md
+§Memsys).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.roofline.hw import V5E, ChipSpec
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"=\s+[a-z0-9\[\],{}() ]*?\b(" + "|".join(
+    _COLLECTIVES) + r")(?:-(?:start|done))?\(")
+_CALLED_RE = re.compile(
+    r"(?:condition|body|to_apply)=%?([\w.\-]+)")
+_WHILE_RE = re.compile(r"\bwhile\(")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every dtype[dims] shape literal in `text`."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, str]:
+    """computation name -> body text."""
+    comps: Dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{", stripped)
+        if m and not stripped.startswith(("ROOT", "//")) and "= " not in \
+                stripped.split("(")[0]:
+            cur_name = m.group(1)
+            cur_lines = []
+            comps[cur_name] = ""
+            continue
+        if stripped.startswith("}"):
+            if cur_name is not None:
+                comps[cur_name] = "\n".join(cur_lines)
+            cur_name = None
+            continue
+        if cur_name is not None:
+            cur_lines.append(line)
+    return comps
+
+
+def _loop_trip_count(cond_text: str) -> int:
+    """Best-effort loop bound: the largest integer constant compared in the
+    condition computation."""
+    cands = [int(x) for x in re.findall(r"constant\((\d+)\)", cond_text)]
+    return max(cands) if cands else 1
+
+
+def collective_bytes(hlo: str) -> Tuple[float, Dict[str, float]]:
+    """Total collective operand bytes per device program (loop-weighted),
+    plus a per-op-kind breakdown."""
+    comps = _split_computations(hlo)
+    memo: Dict[str, Tuple[float, Dict[str, float]]] = {}
+
+    def walk(name: str, depth: int = 0) -> Tuple[float, Dict[str, float]]:
+        if name in memo:
+            return memo[name]
+        if depth > 32 or name not in comps:
+            return 0.0, {}
+        total = 0.0
+        by_kind: Dict[str, float] = {}
+        body = comps[name]
+        memo[name] = (0.0, {})          # cycle guard
+        for line in body.splitlines():
+            im = _INSTR_RE.search(line)
+            if im:
+                kind = im.group(1)
+                # operand shapes: everything inside the call parens
+                call = line[im.end():]
+                operand_bytes = _shape_bytes(call.split(")")[0])
+                total += operand_bytes
+                by_kind[kind] = by_kind.get(kind, 0.0) + operand_bytes
+            if _WHILE_RE.search(line) and "= " in line:
+                called = _CALLED_RE.findall(line)
+                trip = 1
+                inner_total, inner_kinds = 0.0, {}
+                for cname in called:
+                    if "cond" in cname or "condition" in cname:
+                        trip = _loop_trip_count(comps.get(cname, ""))
+                for cname in called:
+                    t, k = walk(cname, depth + 1)
+                    inner_total += t
+                    for kk, vv in k.items():
+                        inner_kinds[kk] = inner_kinds.get(kk, 0.0) + vv
+                total += trip * inner_total
+                for kk, vv in inner_kinds.items():
+                    by_kind[kk] = by_kind.get(kk, 0.0) + trip * vv
+            elif ("call(" in line or "conditional(" in line
+                  or "fusion(" in line) and "= " in line:
+                for cname in _CALLED_RE.findall(line):
+                    t, k = walk(cname, depth + 1)
+                    total += t
+                    for kk, vv in k.items():
+                        by_kind[kk] = by_kind.get(kk, 0.0) + vv
+        memo[name] = (total, by_kind)
+        return memo[name]
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: sum every computation once
+        tot, kinds = 0.0, {}
+        for name in comps:
+            t, k = walk(name)
+            tot += t
+            for kk, vv in k.items():
+                kinds[kk] = kinds.get(kk, 0.0) + vv
+        return tot, kinds
+    return walk(entry)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float                     # 6 N D (active N for MoE)
+    useful_flops_ratio: float              # model_flops / global HLO flops
+    read_bytes_per_chip: float = 0.0
+    write_bytes_per_chip: float = 0.0
+    peak_memory_bytes: float = 0.0
+    notes: str = ""
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def analyze(arch: str, shape_name: str, mesh_desc: str, chips: int,
+            cost: Dict[str, float], hlo: str, model_flops: float,
+            chip: ChipSpec = V5E, peak_memory_bytes: float = 0.0,
+            notes: str = "") -> RooflineReport:
+    """All counts are per-device.  ``cost`` (XLA's cost_analysis) counts
+    while-loop bodies once, so the loop-weighted HLO cost model supplies
+    flops/bytes/collectives; the raw XLA numbers are kept by the caller
+    for reference."""
+    from repro.roofline.hlo_parse import loop_weighted_metrics
+    m = loop_weighted_metrics(hlo)
+    flops = m.flops
+    bytes_total = m.bytes_accessed
+    coll_bytes = m.collective_bytes
+
+    # read/write split from XLA's (loop-unweighted) output fraction
+    xla_total = float(cost.get("bytes accessed", 0.0))
+    xla_out = float(cost.get("bytes accessedout{}",
+                             cost.get("bytes accessed out{}", 0.0)))
+    w_frac = (xla_out / xla_total) if xla_total > 0 else 0.33
+    out_bytes = bytes_total * w_frac
+    read_bytes = bytes_total - out_bytes
+
+    compute_s = flops / chip.peak_bf16_flops
+    memory_s = bytes_total / chip.hbm_bandwidth
+    collective_s = coll_bytes / chip.ici_link_bandwidth
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    global_flops = flops * chips
+    return RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_desc, chips=chips,
+        hlo_flops_per_chip=flops, hlo_bytes_per_chip=bytes_total,
+        collective_bytes_per_chip=coll_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops,
+        useful_flops_ratio=(model_flops / global_flops
+                            if global_flops else 0.0),
+        read_bytes_per_chip=read_bytes, write_bytes_per_chip=out_bytes,
+        peak_memory_bytes=peak_memory_bytes, notes=notes)
+
+
+def memsys_bridge(report: RooflineReport, shoreline_mm: float = 8.0,
+                  chip: ChipSpec = V5E) -> Dict[str, Any]:
+    """The paper bridge: this workload's traffic mix under every memory
+    system the paper models -> memory-term seconds + interconnect power."""
+    from repro.core import TrafficMix, standard_catalog
+    mix = TrafficMix.from_bytes(report.read_bytes_per_chip,
+                                report.write_bytes_per_chip)
+    out = {"mix": mix.name,
+           "read_fraction": mix.read_fraction,
+           "hbm_baseline_memory_s": report.memory_s,
+           "systems": {}}
+    for key, ms in standard_catalog().items():
+        bw = float(ms.bandwidth_gbs(mix.x, mix.y, shoreline_mm)) * 1e9
+        pj = float(ms.pj_per_bit(mix.x, mix.y))
+        mem_s = report.hlo_bytes_per_chip / bw if bw > 0 else float("inf")
+        out["systems"][key] = {
+            "bandwidth_gbs": bw / 1e9,
+            "pj_per_bit": pj,
+            "memory_term_s": mem_s,
+            "interconnect_energy_j_per_step":
+                report.hlo_bytes_per_chip * 8.0 * pj * 1e-12,
+            "latency_ns": ms.latency_ns,
+        }
+    return out

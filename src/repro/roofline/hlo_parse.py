@@ -1,0 +1,441 @@
+"""Loop-weighted HLO cost model.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+undercounts scanned-layer/microbatch programs by ~L×.  This module parses
+the post-SPMD HLO text and computes, with bodies weighted by their
+``known_trip_count`` backend config:
+
+    flops            — 2 * out_elems * contraction for every dot
+    bytes accessed   — per-instruction result + operand bytes (fusions
+                       count boundary buffers only, XLA-style)
+    collective bytes — operand bytes of all-reduce / all-gather /
+                       reduce-scatter / all-to-all / collective-permute
+                       (+ their -start async forms), by kind
+
+Everything is per-device (the HLO is the per-partition SPMD module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_COLLECTIVE_OPS = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "ragged-all-to-all",
+}
+
+# opcodes whose result/operands we exclude from bytes-accessed accounting
+_BYTES_SKIP = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "custom-call",
+    "all-reduce-done", "all-gather-done", "collective-permute-done",
+    "copy-done", "opt-barrier", "partition-id", "replica-id", "domain",
+    "add-dependency",
+}
+
+# Elementwise / layout ops a TPU-style fusion pass would fold into their
+# consumers — their intermediates never reach HBM.  The CPU-backend HLO we
+# analyze is barely fused, so byte accounting must emulate fusion: a
+# fusible op's result is only materialized when a non-fusible consumer
+# reads it (or it is a root/carried value).
+_FUSIBLE = {
+    "add", "subtract", "multiply", "divide", "power", "exponential",
+    "exponential-minus-one", "log", "log-plus-one", "tanh", "negate",
+    "abs", "maximum", "minimum", "compare", "select", "and", "or", "not",
+    "xor", "convert", "broadcast", "iota", "reshape", "sqrt", "rsqrt",
+    "cbrt", "sign", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "clamp", "remainder", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "is-finite",
+    "reduce-precision", "logistic", "sine", "cosine", "tan", "atan2",
+    "erf", "pad", "real", "imag", "expand", "bitcast-convert",
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([a-z][a-z0-9\-]*)\((.*)$")
+_TRIP_RE = re.compile(r'known_trip_count"?:\s*\{"?n"?:\s*"?(\d+)')
+_CALLED_RE = re.compile(r"(?:condition|body|calls|to_apply)=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    """Total (elements, bytes) over every array shape in a type string
+    (handles tuples by summing)."""
+    elems = 0
+    byts = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str                    # raw text after the opening paren
+    operands: List[str]
+    called: List[str]
+    trip: int = 1
+
+
+@dataclasses.dataclass
+class Metrics:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Metrics", scale: float = 1.0):
+        self.flops += scale * other.flops
+        self.bytes_accessed += scale * other.bytes_accessed
+        self.collective_bytes += scale * other.collective_bytes
+        for k, v in other.by_kind.items():
+            self.by_kind[k] = self.by_kind.get(k, 0.0) + scale * v
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, Metrics] = {}
+        # CPU XLA wraps single ops in fusion(...) calls=%wrapped_X — a
+        # fusion whose body is purely elementwise behaves like a fusible
+        # elementwise op for TPU-fusion emulation
+        self._body_fusible = {
+            name: all(i.opcode in _FUSIBLE or i.opcode == "parameter"
+                      for i in instrs)
+            for name, instrs in self.comps.items()}
+        # "transparent" ops move no bytes on TPU: dtype converts, layout
+        # copies, bitcasts (XLA CPU materializes f32 copies of bf16 tensors
+        # around every dot — pure CPU-backend artifacts)
+        _transp = {"convert", "bitcast", "copy", "parameter", "reshape"}
+        self._body_transparent = {
+            name: all(i.opcode in _transp for i in instrs)
+            for name, instrs in self.comps.items()}
+
+    def _eff_opcode(self, ins: Instr) -> str:
+        if ins.opcode == "fusion" and ins.called and all(
+                self._body_fusible.get(c, False) for c in ins.called):
+            return "add"          # any _FUSIBLE member: "elementwise"
+        return ins.opcode
+
+    def _is_transparent(self, ins: Instr) -> bool:
+        if ins.opcode in ("convert", "bitcast", "copy", "reshape"):
+            return True
+        if ins.opcode == "fusion" and ins.called:
+            return all(self._body_transparent.get(c, False)
+                       for c in ins.called)
+        return False
+
+    def _inplace_update_operand(self, ins: Instr) -> Optional[int]:
+        """If a fusion's only real op is a dynamic-update-slice (possibly
+        convert/bitcast-wrapped), return the index of the fusion operand
+        feeding the DUS *update*, else None."""
+        _transp = {"convert", "bitcast", "copy", "parameter", "reshape",
+                   "constant"}
+        for cname in ins.called:
+            body = self.comps.get(cname, [])
+            real = [i for i in body if i.opcode not in _transp]
+            if len(real) != 1 or real[0].opcode != "dynamic-update-slice":
+                return None
+            dus = real[0]
+            if len(dus.operands) < 2:
+                return None
+            by_name = {i.name: i for i in body}
+            # resolve the update operand back to a parameter index
+            cur = dus.operands[1]
+            for _ in range(16):
+                i2 = by_name.get(cur)
+                if i2 is None:
+                    return None
+                if i2.opcode == "parameter":
+                    # Instr.rest holds the text after "parameter(" -> "N)..."
+                    m = re.match(r"(\d+)", i2.rest or "")
+                    if m:
+                        return int(m.group(1))
+                    pm = re.match(r"param_(\d+)", i2.name)
+                    if pm:
+                        return int(pm.group(1))
+                    return None
+                if not i2.operands:
+                    return None
+                cur = i2.operands[0]
+        return None
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if cur is None:
+                m = _COMP_RE.match(line.strip())
+                if m:
+                    cur = m.group(2)
+                    self.comps[cur] = []
+                    if m.group(1):
+                        self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            name, type_str, opcode, rest = im.groups()
+            args = rest.split(")")[0]
+            operands = _OPERAND_RE.findall(args)
+            called = _CALLED_RE.findall(rest)
+            trip = 1
+            tm = _TRIP_RE.search(rest)
+            if tm:
+                trip = int(tm.group(1))
+            self.comps[cur].append(Instr(name, type_str, opcode, rest,
+                                         operands, called, trip))
+
+    # -- per-computation metrics (one execution) ---------------------------
+    def metrics(self, comp: Optional[str] = None) -> Metrics:
+        comp = comp or self.entry or next(iter(self.comps))
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = Metrics()          # cycle guard
+        out = Metrics()
+        instrs = self.comps.get(comp, [])
+        by_name = {i.name: i for i in instrs}
+        shapes = {i.name: i.type_str for i in instrs}
+
+        # fusion emulation: a fusible op materializes only when some
+        # non-fusible consumer reads it (or nothing in this computation
+        # consumes it — root / loop-carried value)
+        consumers: Dict[str, List[str]] = {}
+        consumers_i: Dict[str, List[Instr]] = {}
+        for i in instrs:
+            for op in i.operands:
+                consumers.setdefault(op, []).append(self._eff_opcode(i))
+                consumers_i.setdefault(op, []).append(i)
+
+        def _narrowing(ins: Instr, by_name, direct: List[Instr]) -> float:
+            """1.0, or the dtype-size ratio if every real consumer of a
+            collective result (through GTE/copy) is a narrowing convert."""
+            src_m = _SHAPE_RE.search(ins.type_str)
+            if not src_m:
+                return 1.0
+            src_sz = _DTYPE_BYTES.get(src_m.group(1), 4)
+            frontier = list(direct)
+            real: List[Instr] = []
+            for _ in range(64):
+                if not frontier:
+                    break
+                nxt = []
+                for c in frontier:
+                    if c.opcode in ("get-tuple-element", "copy", "bitcast",
+                                    "tuple"):
+                        nxt.extend(consumers_i.get(c.name, []))
+                    else:
+                        real.append(c)
+                frontier = nxt
+            if not real:
+                return 1.0
+            sizes = []
+            for c in real:
+                body_ok = c.opcode == "convert"
+                if c.opcode == "fusion" and c.called:
+                    body_ok = all(self._body_transparent.get(cc, False)
+                                  for cc in c.called)
+                if not body_ok:
+                    return 1.0
+                mm = _SHAPE_RE.search(c.type_str)
+                if not mm:
+                    return 1.0
+                sizes.append(_DTYPE_BYTES.get(mm.group(1), 4))
+            narrow = max(sizes)
+            return min(1.0, narrow / src_sz)
+
+        def resolve(name: str, depth: int = 16) -> str:
+            """Follow transparent producers (convert/copy/bitcast chains)
+            to the underlying data source."""
+            while depth > 0:
+                ins = by_name.get(name)
+                if ins is None or not self._is_transparent(ins) \
+                        or not ins.operands:
+                    return name
+                name = ins.operands[0]
+                depth -= 1
+            return name
+
+        def materialized(name: str) -> bool:
+            ins = by_name.get(name)
+            if ins is None:
+                return False
+            if self._is_transparent(ins):
+                return False
+            eff = self._eff_opcode(ins)
+            if eff in _BYTES_SKIP:
+                return eff == "parameter"
+            if eff not in _FUSIBLE:
+                return True
+            cons = consumers.get(name)
+            if not cons:
+                return True                     # root or carried out
+            return any(c not in _FUSIBLE for c in cons)
+
+        def op_bytes(names: List[str]) -> float:
+            """Collective payload bytes: operand element count at the
+            dtype of the resolved (pre-convert) source."""
+            total = 0.0
+            for n in names:
+                t = shapes.get(n)
+                if t is None or t.startswith("("):
+                    continue
+                elems = _shape_elems_bytes(t)[0]
+                src_t = shapes.get(resolve(n), t)
+                if src_t.startswith("("):
+                    src_t = t
+                m = _SHAPE_RE.search(src_t)
+                dtype_size = _DTYPE_BYTES.get(m.group(1), 4) if m else 4
+                total += elems * dtype_size
+            return total
+
+        def read_bytes(names: List[str]) -> float:
+            """Operand reads, resolved through transparent chains to the
+            true producer; fused (non-materialized) producers were already
+            charged at their own inputs."""
+            total = 0.0
+            for n in names:
+                t = shapes.get(n)
+                if t is None or t.startswith("("):
+                    continue
+                src = resolve(n)
+                if materialized(src):
+                    st = shapes.get(src, t)
+                    if not st.startswith("("):
+                        total += _shape_elems_bytes(st)[1]
+            return total
+
+        for ins in instrs:
+            oc = ins.opcode
+            if oc == "while":
+                body_cond = Metrics()
+                for cname in ins.called:
+                    if cname in self.comps:
+                        body_cond.add(self.metrics(cname))
+                out.add(body_cond, scale=max(ins.trip, 1))
+                continue
+            if oc in ("call", "conditional"):
+                for cname in ins.called:
+                    if cname in self.comps:
+                        out.add(self.metrics(cname))
+                continue
+            if oc == "fusion":
+                # flops/collectives: descend (dots may live inside)
+                for cname in ins.called:
+                    if cname in self.comps:
+                        inner = self.metrics(cname)
+                        out.flops += inner.flops
+                        out.collective_bytes += inner.collective_bytes
+                        for k, v in inner.by_kind.items():
+                            out.by_kind[k] = out.by_kind.get(k, 0.0) + v
+                # in-place updates: a fusion that is just a (convert-
+                # wrapped) dynamic-update-slice writes only the updated
+                # region when the buffer is donated/aliased (scan ys,
+                # KV-cache token writes) — charge 2x the update operand
+                upd_idx = self._inplace_update_operand(ins)
+                if upd_idx is not None and upd_idx < len(ins.operands):
+                    t = shapes.get(ins.operands[upd_idx])
+                    if t and not t.startswith("("):
+                        out.bytes_accessed += 2.0 * _shape_elems_bytes(t)[1]
+                    continue
+                # bytes: boundary accounting with TPU-fusion emulation —
+                # purely-elementwise fusions materialize only when a
+                # non-fusible consumer reads them
+                if materialized(ins.name):
+                    out.bytes_accessed += _shape_elems_bytes(
+                        ins.type_str)[1]
+                out.bytes_accessed += read_bytes(ins.operands)
+                continue
+            if oc in ("dynamic-update-slice", "scatter"):
+                upd = ins.operands[1 if oc == "dynamic-update-slice" else 2] \
+                    if len(ins.operands) > 1 else None
+                t = shapes.get(upd) if upd else None
+                if t and not t.startswith("("):
+                    out.bytes_accessed += 2.0 * _shape_elems_bytes(t)[1]
+                continue
+
+            if oc == "dot":
+                res_elems = _shape_elems_bytes(ins.type_str)[0]
+                lhs_t = shapes.get(ins.operands[0], "") if ins.operands \
+                    else ""
+                ldims = _dims(lhs_t)
+                cm = _CONTRACT_RE.search(ins.rest)
+                contraction = 1
+                if cm and cm.group(1) and ldims:
+                    for i in cm.group(1).split(","):
+                        ii = int(i)
+                        if ii < len(ldims):
+                            contraction *= ldims[ii]
+                out.flops += 2.0 * res_elems * contraction
+            elif oc == "convolution":
+                # rough: 2 * out_elems * (in_ch * kernel_spatial)
+                res_elems = _shape_elems_bytes(ins.type_str)[0]
+                k_t = shapes.get(ins.operands[1], "") if len(
+                    ins.operands) > 1 else ""
+                kd = _dims(k_t)
+                out.flops += 2.0 * res_elems * (
+                    float(np.prod(kd[:-1])) if kd else 1.0)
+
+            if oc in _COLLECTIVE_OPS:
+                cb = op_bytes(ins.operands)
+                # XLA-CPU float normalization upcasts bf16 dots AND the
+                # partial-sum collectives around them to f32; TPU runs
+                # these collectives natively in bf16.  Charge at the
+                # jax-level dtype: if every real consumer narrows the
+                # result, scale the payload accordingly.
+                cb *= _narrowing(ins, by_name, consumers_i.get(ins.name, []))
+                kind = oc.replace("-start", "")
+                out.collective_bytes += cb
+                out.by_kind[kind] = out.by_kind.get(kind, 0.0) + cb
+
+            if oc not in _BYTES_SKIP:
+                # fused elementwise intermediates never reach HBM: charge
+                # writes only for materialized results, reads only from
+                # materialized producers
+                if materialized(ins.name):
+                    out.bytes_accessed += _shape_elems_bytes(
+                        ins.type_str)[1]
+                out.bytes_accessed += read_bytes(ins.operands)
+
+        self._memo[comp] = out
+        return out
+
+
+def loop_weighted_metrics(hlo_text: str) -> Metrics:
+    return HloCostModel(hlo_text).metrics()

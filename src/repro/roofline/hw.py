@@ -1,0 +1,27 @@
+"""Target hardware model: TPU v5e chip + pod constants (+ the paper's
+UCIe-Memory alternatives for the memory system).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str = "tpu-v5e"
+    peak_bf16_flops: float = 197e12        # per chip
+    hbm_bandwidth: float = 819e9           # bytes/s
+    hbm_capacity: float = 16e9             # bytes
+    ici_link_bandwidth: float = 50e9       # bytes/s per link (~50 GB/s)
+    ici_links: int = 4
+    dcn_bandwidth: float = 25e9            # bytes/s per host across pods
+
+
+V5E = ChipSpec()
+
+
+def memsys_alternatives(shoreline_mm: float = 8.0):
+    """The paper's memory systems sized to the v5e die shoreline — what the
+    HBM term becomes if the chip's memory were attached via UCIe-Memory."""
+    from repro.core import TrafficMix, standard_catalog
+    return standard_catalog(), shoreline_mm

@@ -1,0 +1,2 @@
+from repro.runtime.fault import DriverConfig, RunReport, SimulatedFailure, run
+from repro.runtime.straggler import StragglerMonitor, StragglerEvent

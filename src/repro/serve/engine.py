@@ -1,0 +1,125 @@
+"""Batched serving engine with continuous batching.
+
+Fixed-slot decode batch: requests queue up, free slots are prefilled (one
+request at a time — prefill and decode are separate compiled programs, as
+on a real serving stack), and every engine tick decodes one token for all
+active slots.  Completed sequences (EOS or max tokens) free their slot.
+
+Per-slot absolute positions let sequences of different lengths share one
+decode batch (the decode path takes positions [B, 1]).  KV caches live
+packed per slot in one [*, B, max_len, ...] buffer set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.models.sharding import ShardingCtx
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # [T] int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, ctx: ShardingCtx,
+                 batch_slots: int = 4, max_len: int = 256,
+                 greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.ctx = ctx
+        self.b = batch_slots
+        self.max_len = max_len
+        self.greedy = greedy
+        cfg = model.cfg
+
+        self.caches = model.init_decode_caches(batch_slots, max_len)
+        self.positions = np.zeros((batch_slots,), np.int32)
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self.last_token = np.zeros((batch_slots,), np.int32)
+        self.queue: deque = deque()
+        self.finished: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, t, c, pos: model.decode_step(p, t, c, pos, ctx))
+
+    # -- request lifecycle ------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _prefill_into_slot(self, slot: int, req: Request):
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, caches = self.model.prefill(
+            self.params, {"tokens": prompt}, self.ctx,
+            pad_cache_to=self.max_len)
+        tok = int(jnp.argmax(logits[0]))
+        req.generated.append(tok)
+        # splice this request's caches into the batch buffers
+        def splice(batch_c, one_c):
+            # batch dim is axis 1 for stacked caches [L, B, ...], else 0
+            axis = 1 if batch_c.ndim == one_c.ndim and batch_c.ndim >= 2 \
+                and batch_c.shape[0] == one_c.shape[0] else 0
+            idx = [slice(None)] * batch_c.ndim
+            idx[axis] = slice(slot, slot + 1)
+            return batch_c.at[tuple(idx)].set(one_c)
+        self.caches = jax.tree.map(splice, self.caches, caches)
+        self.active[slot] = req
+        self.positions[slot] = len(req.prompt)
+        self.last_token[slot] = tok
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    # -- engine tick --------------------------------------------------------
+    def step(self) -> int:
+        """Admit + decode one token for all active slots.  Returns the
+        number of active sequences processed."""
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            self._prefill_into_slot(slot, self.queue.popleft())
+
+        active_idx = [i for i, r in enumerate(self.active) if r is not None]
+        if not active_idx:
+            return 0
+
+        tokens = jnp.asarray(self.last_token, jnp.int32)[:, None]
+        positions = jnp.asarray(self.positions, jnp.int32)[:, None]
+        logits, self.caches = self._decode(self.params, tokens,
+                                           self.caches, positions)
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+
+        for i in active_idx:
+            req = self.active[i]
+            self.positions[i] += 1
+            tok = int(next_tokens[i])
+            req.generated.append(tok)
+            self.last_token[i] = tok
+            if ((req.eos_id is not None and tok == req.eos_id)
+                    or len(req.generated) >= req.max_new_tokens
+                    or self.positions[i] >= self.max_len - 1):
+                req.done = True
+                self.finished.append(req)
+                self.active[i] = None
+        return len(active_idx)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        ticks = 0
+        while (self.queue or any(r is not None for r in self.active)):
+            self.step()
+            ticks += 1
+            if ticks > max_ticks:
+                raise RuntimeError("engine did not drain")
+        return self.finished

@@ -1,0 +1,4 @@
+from repro.train.optimizer import AdamW, AdamWState, cosine_schedule, constant_schedule, global_norm
+from repro.train.train_step import TrainState, init_state, make_train_step, state_specs, state_shardings
+from repro.train.data import DataConfig, SyntheticLM, Prefetcher
+from repro.train import grad_compress

@@ -1,0 +1,65 @@
+"""Gradient compression with error feedback (cross-pod DCN optimization).
+
+int8 per-tensor-scaled quantization.  The quantize->(all-reduce)->dequantize
+transform is convergent under error feedback: the residual e is carried in
+the optimizer-side state and re-added before the next quantization
+(1-bit-Adam / EF-SGD family).
+
+Two entry points:
+  * ``compress_tree`` / paired state — drop-in transform on the grad pytree
+    inside train_step (what crosses the pod axis in a real deployment is
+    the int8 payload; the dry-run's collective-bytes accounting uses this
+    to size the cross-pod all-reduce).
+  * ``compressed_psum`` — explicit shard_map demonstration of an int8
+    all-reduce over a mesh axis, used by the tests to show numerics.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress_tree(grads, error_state):
+    """Quantize-dequantize each gradient leaf with error feedback.
+
+    Returns (decompressed grads, new error state).  The quantized payload
+    is what would transit the DCN; numerically this function is the
+    round-trip the receiving side sees.
+    """
+    corrected = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
+                             grads, error_state)
+    deq = jax.tree.map(lambda cg: _dequantize(*_quantize(cg)), corrected)
+    err = jax.tree.map(lambda cg, dg: cg - dg, corrected, deq)
+    return deq, err
+
+
+def compression_ratio() -> float:
+    """Payload bytes ratio vs fp32 all-reduce (int8 + one fp32 scale)."""
+    return 0.25
+
+
+def compressed_psum(x, axis_name: str):
+    """int8 all-reduce over a mesh axis (call inside shard_map):
+    quantize locally, sum int32 payloads, dequantize with the max scale."""
+    q, scale = _quantize(x)
+    # consistent scale across the axis so the sum is well-defined
+    scale_max = jax.lax.pmax(scale, axis_name)
+    q2 = jnp.clip(jnp.round(x / scale_max), -127, 127).astype(jnp.int32)
+    total = jax.lax.psum(q2, axis_name)
+    return total.astype(jnp.float32) * scale_max

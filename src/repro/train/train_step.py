@@ -1,0 +1,143 @@
+"""Train step: microbatched gradient accumulation + AdamW + optional
+gradient compression.
+
+Memory discipline for the large dense archs (DESIGN.md §4):
+  * params fp32 master, FSDP+TP sharded; cast to bf16 once per step
+    (hoisted out of the microbatch scan by XLA)
+  * grads accumulated fp32 at param sharding (XLA reduce-scatters instead
+    of all-reducing, because grad sharding == param sharding)
+  * per-layer remat inside the model: saved activations = layer inputs of
+    the current microbatch only
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+from repro.models.sharding import ShardingCtx
+from repro.train import grad_compress
+from repro.train.optimizer import AdamW, AdamWState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    error_fb: Optional[Any]          # grad-compression error feedback
+
+
+def init_state(model: Model, key, optimizer: AdamW,
+               compress: bool = False) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=optimizer.init(params),
+                      error_fb=(grad_compress.init_error_state(params)
+                                if compress else None))
+
+
+def _split_microbatches(batch: Dict[str, Any], n_micro: int,
+                        ctx: ShardingCtx):
+    """[GB, ...] -> [n_micro, GB/n_micro, ...] with microbatch dim
+    replicated and the batch dim re-constrained onto dp."""
+    def split(x):
+        gb = x.shape[0]
+        assert gb % n_micro == 0, (gb, n_micro)
+        xm = x.reshape(n_micro, gb // n_micro, *x.shape[1:])
+        if ctx.enabled:
+            spec = ctx.spec((None, "batch") + (None,) * (x.ndim - 1),
+                            xm.shape)
+            xm = jax.lax.with_sharding_constraint(
+                xm, jax.sharding.NamedSharding(ctx.mesh, spec))
+        return xm
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(model: Model, optimizer: AdamW, ctx: ShardingCtx,
+                    num_microbatches: int = 1, compress: bool = False,
+                    constrain_grads: bool = True):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    constrain_grads: re-constrain each microbatch's gradients to the
+    parameter sharding at the point of production, so XLA lowers the
+    cross-data-parallel reduction as reduce-scatter instead of a
+    full-tensor all-reduce (§Perf hillclimb: 16x less DP collective
+    volume on the FSDP axis).
+    """
+    grad_shardings = None
+    if constrain_grads and ctx.enabled:
+        grad_shardings = model.param_shardings(ctx)
+
+    def _constrain(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s)
+            if s is not None else g, grads, grad_shardings)
+
+    def loss_fn(params, microbatch):
+        loss, metrics = model.loss(params, microbatch, ctx)
+        return loss, metrics
+
+    def train_step(state: TrainState, batch: Dict[str, Any]):
+        params = state.params
+
+        if num_microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads = _constrain(grads)
+        else:
+            micro = _split_microbatches(batch, num_microbatches, ctx)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def mb_step(carry, mb):
+                acc, loss_sum = carry
+                (loss, _), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                grads = _constrain(grads)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads)
+                return (acc, loss_sum + loss), None
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                mb_step, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = loss_sum / num_microbatches
+            metrics = {}
+
+        error_fb = state.error_fb
+        if compress and error_fb is not None:
+            grads, error_fb = grad_compress.compress_tree(grads, error_fb)
+
+        new_params, opt_state, opt_metrics = optimizer.update(
+            grads, state.opt, params)
+        out_metrics = {"loss": loss, **opt_metrics}
+        return TrainState(new_params, opt_state, error_fb), out_metrics
+
+    return train_step
+
+
+def state_specs(model: Model, ctx: ShardingCtx, compress: bool = False):
+    """PartitionSpec pytree for TrainState (for jit in/out shardings)."""
+    p = model.param_specs(ctx)
+    from jax.sharding import PartitionSpec as P
+    return TrainState(
+        params=p,
+        opt=AdamWState(step=P(), mu=jax.tree.map(lambda s: s, p),
+                       nu=jax.tree.map(lambda s: s, p)),
+        error_fb=jax.tree.map(lambda s: s, p) if compress else None,
+    )
+
+
+def state_shardings(model: Model, ctx: ShardingCtx, compress: bool = False):
+    from jax.sharding import NamedSharding
+    specs = state_specs(model, ctx, compress)
+    if not ctx.enabled:
+        return None
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(
+                            x, jax.sharding.PartitionSpec))

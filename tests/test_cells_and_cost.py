@@ -1,0 +1,122 @@
+"""Coverage for the cell machinery (arch × shape matrix) and the cost
+model — no compilation, pure metadata."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (
+    ALL_SHAPES, SHAPES, arch_ids, applicable, get, microbatches_for,
+)
+from repro.core import TrafficMix, cost
+from repro.core.selector import SelectionConstraints, best, rank
+from repro.models import ShardingCtx, build
+
+CTX = ShardingCtx()
+
+
+class TestCellMatrix:
+    def test_40_cells_accounted(self):
+        runnable, skipped = 0, 0
+        for arch in arch_ids():
+            cfg = get(arch)
+            for shape in ALL_SHAPES:
+                ok, why = applicable(cfg, shape)
+                if ok:
+                    runnable += 1
+                else:
+                    skipped += 1
+                    assert shape.name == "long_500k"
+                    assert "sub-quadratic" in why
+        assert runnable == 32 and skipped == 8
+        assert runnable + skipped == 40
+
+    def test_long_500k_runs_only_for_subquadratic(self):
+        ok_archs = [a for a in arch_ids()
+                    if applicable(get(a), SHAPES["long_500k"])[0]]
+        assert sorted(ok_archs) == ["mamba2-2.7b", "recurrentgemma-2b"]
+
+    @pytest.mark.parametrize("arch", arch_ids())
+    def test_input_specs_shapes(self, arch):
+        cfg = get(arch)
+        model = build(cfg)
+        for shape in ALL_SHAPES:
+            if not applicable(cfg, shape)[0]:
+                continue
+            specs = model.input_specs(shape)
+            if shape.kind == "train":
+                assert "labels" in specs
+                total = specs["tokens"].shape[1]
+                if cfg.frontend == "vision":
+                    total += specs["patch_embeds"].shape[1]
+                if not cfg.is_encdec:
+                    assert total == shape.seq_len
+            if shape.kind == "decode":
+                assert specs["tokens"].shape == (shape.global_batch, 1)
+                assert "caches" in specs
+                leaves = jax.tree.leaves(specs["caches"])
+                assert leaves, arch
+
+    @pytest.mark.parametrize("arch", arch_ids())
+    def test_decode_cache_budget(self, arch):
+        """Decode caches fit the HBM budget once sharded over 256 chips."""
+        cfg = get(arch)
+        model = build(cfg)
+        specs = model.input_specs(SHAPES["decode_32k"])
+        total = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                    for l in jax.tree.leaves(specs["caches"]))
+        per_chip = total / 256
+        assert per_chip < 12e9, (arch, per_chip / 1e9)
+
+    def test_microbatch_defaults(self):
+        tr = SHAPES["train_4k"]
+        assert microbatches_for(get("mistral-large-123b"), tr, 16) == 16
+        assert microbatches_for(get("smollm-360m"), tr, 16) == 4
+        assert microbatches_for(get("smollm-360m"), SHAPES["decode_32k"],
+                                16) == 1
+
+    def test_active_params_moe(self):
+        cfg = get("olmoe-1b-7b")
+        assert cfg.active_param_count() < cfg.param_count() * 0.35
+
+    def test_paper_flops_scale(self):
+        # mistral train_4k: 6 N D ~ 7.7e17 global
+        cfg = get("mistral-large-123b")
+        d = SHAPES["train_4k"].global_batch * SHAPES["train_4k"].seq_len
+        assert 6.0 * cfg.active_param_count() * d == pytest.approx(
+            7.7e17, rel=0.05)
+
+
+class TestCostModelAndSelector:
+    def test_reference_systems_ranking(self):
+        systems = {s.name: s for s in cost.reference_systems()}
+        # wire-bonded LPDDR6 over UCIe-S is the cheapest per GB/s;
+        # native HBM4 is the most expensive per GB
+        per_gb = {k: s.cost_per_gb() for k, s in systems.items()}
+        assert per_gb["HBM4(native)"] == max(per_gb.values())
+        assert per_gb["LPDDR6(native)"] < per_gb["HBM4(native)"] / 4
+
+    def test_cost_param_sensitivity(self):
+        p_cheap_hbm = cost.CostParams(hbm_bit_cost=5.0)
+        p_dear_hbm = cost.CostParams(hbm_bit_cost=10.0)
+        s = cost.reference_systems()[0]         # HBM4 native
+        assert s.relative_cost(p_dear_hbm) > s.relative_cost(p_cheap_hbm)
+
+    def test_rank_objectives_consistent(self):
+        mix = TrafficMix(2, 1)
+        by_bw = rank(mix, objective="bandwidth")
+        by_pw = rank(mix, objective="power")
+        assert by_bw[0].bandwidth_gbs == max(r.bandwidth_gbs for r in by_bw)
+        assert by_pw[0].pj_per_bit == min(r.pj_per_bit for r in by_pw)
+
+    def test_power_cap_constraint(self):
+        mix = TrafficMix(2, 1)
+        unc = best(mix, objective="bandwidth")
+        capped = best(mix, constraints=SelectionConstraints(
+            max_power_w=unc.power_w * 0.5), objective="bandwidth")
+        assert capped.power_w <= unc.power_w * 0.5
+        assert capped.bandwidth_gbs <= unc.bandwidth_gbs
+
+    def test_latency_objective_prefers_ucie(self):
+        r = best(TrafficMix(1, 1), objective="latency")
+        assert r.latency_ns == 3.0

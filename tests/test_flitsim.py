@@ -1,0 +1,118 @@
+"""Property tests: the discrete-event flit simulator validates every
+closed-form bandwidth-efficiency expression (hypothesis over traffic mixes),
+plus invariant properties of the analytic models themselves."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ALL_APPROACHES, PAPER_MIXES
+from repro.core.flitsim import (
+    ANALYTIC, SIMULATORS, simulate_lpddr6_pipelining,
+)
+
+MIX = st.tuples(st.integers(0, 8), st.integers(0, 8)).filter(
+    lambda t: t[0] + t[1] > 0)
+
+
+def f(v):
+    return float(np.asarray(v))
+
+
+class TestSimulatorMatchesAnalytic:
+    @settings(max_examples=20, deadline=None)
+    @given(MIX)
+    def test_cxl_unopt(self, mix):
+        x, y = mix
+        a, s = f(ANALYTIC["cxl_unopt"].bw_eff(x, y)), SIMULATORS["cxl_unopt"](x, y)
+        assert abs(a - s) / a < 0.02
+
+    @settings(max_examples=20, deadline=None)
+    @given(MIX)
+    def test_cxl_opt(self, mix):
+        x, y = mix
+        a, s = f(ANALYTIC["cxl_opt"].bw_eff(x, y)), SIMULATORS["cxl_opt"](x, y)
+        assert abs(a - s) / a < 0.02
+
+    @settings(max_examples=20, deadline=None)
+    @given(MIX)
+    def test_chi(self, mix):
+        x, y = mix
+        a, s = f(ANALYTIC["chi"].bw_eff(x, y)), SIMULATORS["chi"](x, y)
+        assert abs(a - s) / a < 0.02
+
+    @settings(max_examples=20, deadline=None)
+    @given(MIX)
+    def test_lpddr6_asym(self, mix):
+        x, y = mix
+        a = f(ANALYTIC["lpddr6_asym"].bw_eff(x, y))
+        s = SIMULATORS["lpddr6_asym"](x, y)
+        assert abs(a - s) / a < 0.02
+
+    @settings(max_examples=20, deadline=None)
+    @given(MIX)
+    def test_hbm_asym(self, mix):
+        x, y = mix
+        a = f(ANALYTIC["hbm_asym"].bw_eff(x, y))
+        s = SIMULATORS["hbm_asym"](x, y)
+        assert abs(a - s) / a < 0.02
+
+
+class TestAnalyticInvariants:
+    """Properties every protocol model must satisfy, for any mix."""
+
+    @settings(max_examples=50, deadline=None)
+    @given(MIX)
+    def test_efficiency_bounded(self, mix):
+        x, y = mix
+        for key, proto in ALL_APPROACHES.items():
+            e = f(proto.bw_eff(x, y))
+            assert 0.0 < e <= 1.0, (key, x, y, e)
+
+    @settings(max_examples=50, deadline=None)
+    @given(MIX)
+    def test_power_ratio_bounded(self, mix):
+        x, y = mix
+        for key, proto in ALL_APPROACHES.items():
+            pd = f(proto.p_data(x, y))
+            assert 0.0 < pd <= 1.0, (key, x, y, pd)
+
+    @settings(max_examples=50, deadline=None)
+    @given(MIX, st.integers(1, 7))
+    def test_scale_invariance(self, mix, k):
+        """xRyW and kx R ky W are the same mix — all metrics identical."""
+        x, y = mix
+        for key, proto in ALL_APPROACHES.items():
+            assert f(proto.bw_eff(x, y)) == pytest.approx(
+                f(proto.bw_eff(k * x, k * y)), rel=1e-5), key
+            assert f(proto.p_data(x, y)) == pytest.approx(
+                f(proto.p_data(k * x, k * y)), rel=1e-5), key
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 8))
+    def test_read_monotone_toward_optimum_asym(self, x):
+        """For the 2:1-provisioned asymmetric HBM mapping, adding reads up
+        to the provisioned ratio only helps; beyond it only hurts."""
+        proto = ALL_APPROACHES["B:hbm-asym"]
+        e_balanced = f(proto.bw_eff(2, 1))          # provisioned ratio
+        assert f(proto.bw_eff(x, 1)) <= e_balanced + 1e-6
+
+    def test_power_gating_helps_idle_direction(self):
+        """Read-only traffic should cost less energy/bit than 50/50 on the
+        asymmetric mappings (write lanes gated)."""
+        proto = ALL_APPROACHES["A:lpddr6-asym"]
+        assert f(proto.p_data(1, 0)) > f(proto.p_data(1, 4))
+
+
+class TestLPDDR6Pipelining:
+    """Appendix Fig 13: four x12 LPDDR6 devices saturate the UCIe link."""
+
+    def test_four_devices_saturate(self):
+        assert simulate_lpddr6_pipelining(4) == pytest.approx(1.0, abs=1e-3)
+
+    @pytest.mark.parametrize("k", [1, 2, 3])
+    def test_fewer_devices_proportional(self, k):
+        u = simulate_lpddr6_pipelining(k)
+        assert u == pytest.approx(k / 4, abs=0.01)
+
+    def test_more_devices_no_overdrive(self):
+        assert simulate_lpddr6_pipelining(6) <= 1.0 + 1e-6

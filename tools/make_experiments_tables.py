@@ -1,0 +1,89 @@
+"""Generate the EXPERIMENTS.md tables from dry-run artifacts.
+
+    PYTHONPATH=src python tools/make_experiments_tables.py
+"""
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(dirname):
+    cells = {}
+    for f in sorted(glob.glob(os.path.join(ROOT, "experiments", dirname,
+                                           "*.json"))):
+        d = json.load(open(f))
+        cells[(d["arch"], d["shape"], d["mesh"])] = d
+    return cells
+
+
+def dryrun_table(cells, mesh):
+    out = ["| arch | shape | chips | microbatches | state/args GB/chip | "
+           "temp GB/chip | HLO GFLOP/chip | compile s |",
+           "|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, m), d in sorted(cells.items()):
+        if m != mesh:
+            continue
+        ma = d["memory_analysis"]
+        args = ma.get("argument_size_in_bytes", 0) / 1e9
+        temp = ma.get("temp_size_in_bytes", 0) / 1e9
+        out.append(
+            f"| {arch} | {shape} | {d['chips']} | "
+            f"{d.get('num_microbatches', '-')} | {args:.2f} | {temp:.2f} | "
+            f"{d['roofline']['hlo_flops_per_chip']/1e9:.0f} | "
+            f"{d['compile_s']:.0f} |")
+    return "\n".join(out)
+
+
+def roofline_table(cells, mesh="16x16"):
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| roofline frac | useful FLOPs | mix | best UCIe memsys "
+           "(mem-term gain) |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, m), d in sorted(cells.items()):
+        if m != mesh:
+            continue
+        r = d["roofline"]
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / dom if dom else 0.0
+        br = d["memsys_bridge"]
+        best_k, best_v = None, None
+        for k, s in br["systems"].items():
+            if "/" not in k:
+                continue
+            if best_v is None or s["memory_term_s"] < best_v:
+                best_k, best_v = k, s["memory_term_s"]
+        gain = (br["hbm_baseline_memory_s"] / best_v) if best_v else 0.0
+        rf = br.get("read_fraction")
+        mix = (f"{100*rf:.0f}R{100*(1-rf):.0f}W" if rf is not None
+               else br["mix"])
+        out.append(
+            f"| {arch} | {shape} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {frac:.3f} | "
+            f"{r['useful_flops_ratio']:.2f} | {mix} | "
+            f"{best_k} (x{gain:.1f}) |")
+    return "\n".join(out)
+
+
+def main():
+    final = load("dryrun")
+    base = load("dryrun_baseline")
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### Dry-run (single pod, 16x16 = 256 chips)\n")
+        print(dryrun_table(final or base, "16x16"))
+        print("\n### Dry-run (multi-pod, 2x16x16 = 512 chips)\n")
+        print(dryrun_table(final or base, "2x16x16"))
+    if which in ("all", "roofline"):
+        print("\n### Roofline (single pod)\n")
+        print(roofline_table(final or base))
+    if which in ("all", "baseline"):
+        print("\n### Baseline roofline (pre-hillclimb)\n")
+        print(roofline_table(base))
+
+
+if __name__ == "__main__":
+    main()
