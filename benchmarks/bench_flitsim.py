@@ -1,24 +1,71 @@
 """Flit-level simulator vs analytic closed forms (Appendix Fig 13 +
-validation of eqs 3/14/20)."""
+validation of eqs 3/14/20), via the batched sweep engine.
+
+The validation sweep (all 5 protocols x 5 canonical mixes) runs as ONE
+compiled program per simulator family; a speedup row compares the batched
+path against the legacy per-point loop on a 125-point grid.
+"""
 from __future__ import annotations
 
+import numpy as np
+
 from benchmarks.common import time_us
+from repro.core import flitsim, mix_grid
 from repro.core.flitsim import (
-    ANALYTIC, SIMULATORS, simulate_lpddr6_pipelining,
+    ANALYTIC, SIMULATORS, SYMMETRIC_PARAMS, sweep, sweep_pipelining,
 )
 
 
+def _per_point_grid(mixes):
+    """The pre-batching path: one scalar simulator call per grid point."""
+    out = []
+    for key in SIMULATORS:
+        for (x, y) in mixes:
+            out.append(SIMULATORS[key](x, y))
+    return out
+
+
 def run(rows: list):
-    for key, sim in SIMULATORS.items():
+    flitsim.clear_compile_cache()
+
+    # -- validation sweep: 5 protocols x 5 mixes, one compile per family ----
+    res = sweep()
+    stats = flitsim.compile_cache_stats()
+    assert stats.misses == 2, (
+        f"expected exactly one compile per simulator family, got {stats}")
+    for i, key in enumerate(res.protocols):
         worst = 0.0
-        for (x, y) in [(1, 0), (2, 1), (1, 1), (1, 2), (0, 1)]:
+        for j, (x, y) in enumerate(res.mixes):
             a = float(ANALYTIC[key].bw_eff(x, y))
-            s = sim(x, y)
+            s = float(res.efficiency[i, j])
             worst = max(worst, abs(a - s) / a)
-        us = time_us(lambda: sim(2, 1), iters=3)
-        rows.append((f"flitsim/{key}", us,
+        rows.append((f"flitsim/{key}", 0.0,
                      f"worst_err_vs_analytic={worst:.4%}"))
-    for k in (1, 2, 3, 4):
-        u = simulate_lpddr6_pipelining(k)
+    rows.append(("flitsim/sweep_compiles", 0.0,
+                 f"families_compiled={stats.misses};cache_hits={stats.hits}"))
+
+    # -- batched vs per-point wall clock on a 125-point grid ----------------
+    gx, gy = mix_grid(25)
+    mixes = list(zip(np.asarray(gx).tolist(), np.asarray(gy).tolist()))
+    n_points = len(SIMULATORS) * len(mixes)
+    us_batched = time_us(lambda: sweep(mixes=mixes).efficiency,
+                         warmup=1, iters=5)
+    us_scalar = time_us(lambda: _per_point_grid(mixes), warmup=1, iters=3)
+    speedup = us_scalar / us_batched
+    rows.append((f"flitsim/sweep_batched_{n_points}pt", us_batched,
+                 f"per_point_us={us_scalar:.0f};speedup=x{speedup:.1f}"))
+
+    # -- backlog-sensitivity grid (symmetric family only) -------------------
+    bl = sweep(protocols=tuple(SYMMETRIC_PARAMS), mixes=[(2, 1)],
+               backlogs=[1, 2, 4, 8, 64])
+    for i, key in enumerate(bl.protocols):
+        e = np.asarray(bl.efficiency[i, :, 0])
+        rows.append((f"flitsim/backlog_sensitivity/{key}", 0.0,
+                     f"eff@bl1={e[0]:.3f};eff@bl64={e[-1]:.3f}"))
+
+    # -- Fig 13: pipelining, batched over k in one call ---------------------
+    ks = (1, 2, 3, 4)
+    util = np.asarray(sweep_pipelining(ks))
+    for k, u in zip(ks, util):
         rows.append((f"flitsim/lpddr6_pipelining_k{k}", 0.0,
                      f"link_utilization={u:.3f}"))

@@ -1,6 +1,7 @@
 """Benchmark harness utilities: timing + CSV rows."""
 from __future__ import annotations
 
+import statistics
 import time
 from typing import Callable, List, Tuple
 
@@ -9,14 +10,29 @@ import jax
 Row = Tuple[str, float, str]     # name, us_per_call, derived
 
 
-def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
-    for _ in range(warmup):
+def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 10,
+            reduce: str = "median") -> float:
+    """Time ``fn(*args)`` in microseconds.
+
+    ``warmup`` un-timed calls absorb trace+compile time so the reported
+    number is steady-state execution only; each timed iteration is
+    synchronized (``block_until_ready``) and measured independently, and
+    ``reduce`` picks the statistic: "median" (default, robust to scheduler
+    noise), "mean", or "min".
+    """
+    for _ in range(max(warmup, 0)):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
+    samples: List[float] = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
         out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+        jax.block_until_ready(out)
+        samples.append((time.perf_counter() - t0) * 1e6)
+    try:
+        return {"median": statistics.median, "mean": statistics.fmean,
+                "min": min}[reduce](samples)
+    except KeyError:
+        raise ValueError(f"unknown reduce={reduce!r}") from None
 
 
 def emit(rows: List[Row]):

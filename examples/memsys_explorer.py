@@ -1,16 +1,30 @@
 """Memory-system explorer: the paper bridge end-to-end.
 
-Takes a compiled workload cell from the dry-run artifacts (or computes a
-fresh one for a reduced config), derives its xRyW traffic mix from the
-HLO byte counts, and reports what every UCIe-Memory approach would
-deliver for that workload — bandwidth, power, latency — vs today's HBM.
+Two modes:
 
-    PYTHONPATH=src python examples/memsys_explorer.py [cell.json]
+  * artifact mode (default) — takes a compiled workload cell from the
+    dry-run artifacts (or computes a fresh one for a reduced config),
+    derives its xRyW traffic mix from the HLO byte counts, and reports what
+    every UCIe-Memory approach would deliver for that workload — bandwidth,
+    power, latency — vs today's HBM.
+
+        PYTHONPATH=src python examples/memsys_explorer.py [cell.json]
+
+  * sweep mode — full design-space exploration over a dense 2-D
+    (read-fraction x backlog) grid: the batched flit-simulation sweep
+    engine evaluates every simulated protocol over hundreds of grid points
+    in one compiled call per simulator family, and the batched selector
+    ranks the whole catalog across the read-fraction axis in one more.
+
+        PYTHONPATH=src python examples/memsys_explorer.py --sweep
 """
 import glob
 import json
 import os
 import sys
+import time
+
+import numpy as np
 
 from repro.core import TrafficMix, rank, SelectionConstraints
 
@@ -41,14 +55,76 @@ def explore(d: dict):
               f"{s['interconnect_energy_j_per_step']:.2f} J/step")
 
 
+def sweep_mode(n_fracs: int = 41, backlogs=(1, 2, 4, 8, 16, 32, 64, 128)):
+    """Dense design-space sweep: read-fraction x backlog x protocol."""
+    from repro.core import flitsim, mix_grid
+    from repro.core.selector import rank_grid
+
+    x, y = mix_grid(n_fracs)
+    mixes = list(zip(np.asarray(x).tolist(), np.asarray(y).tolist()))
+    fracs = np.asarray(x) / 100.0
+
+    t0 = time.perf_counter()
+    res = flitsim.sweep(mixes=mixes, backlogs=list(backlogs))
+    eff = np.asarray(res.efficiency)              # [P, B, M]
+    t_sim = time.perf_counter() - t0
+    n_pts = eff.size
+    stats = flitsim.compile_cache_stats()
+    print(f"flit-simulated {n_pts} grid points "
+          f"({len(res.protocols)} protocols x {len(backlogs)} backlogs x "
+          f"{n_fracs} read fractions) in {t_sim:.2f}s "
+          f"[{stats.misses} compiles, {stats.hits} cache hits]")
+
+    bl_ref = list(backlogs).index(64) if 64 in backlogs else len(backlogs) - 1
+    print(f"\nsimulated data efficiency at backlog={backlogs[bl_ref]} "
+          f"(read fraction 0 / 0.5 / 1):")
+    mid = n_fracs // 2
+    for i, key in enumerate(res.protocols):
+        e = eff[i, bl_ref]
+        sens = float(np.max(eff[i, :, mid]) - np.min(eff[i, :, mid]))
+        print(f"    {key:12s} {e[0]:.3f} / {e[mid]:.3f} / {e[-1]:.3f}   "
+              f"backlog sensitivity @50/50: {sens:.3f}")
+
+    print("\nbest simulated protocol per read-fraction regime "
+          f"(backlog={backlogs[bl_ref]}):")
+    best = np.argmax(eff[:, bl_ref, :], axis=0)
+    start = 0
+    for j in range(1, n_fracs + 1):
+        if j == n_fracs or best[j] != best[start]:
+            key = res.protocols[best[start]]
+            print(f"    read fraction {fracs[start]:.2f}-"
+                  f"{fracs[j - 1]:.2f}: {key}")
+            start = j
+
+    # catalog ranking over the same read-fraction axis, one compiled call
+    t0 = time.perf_counter()
+    g = rank_grid(x, y)
+    keys = g.best_keys()
+    t_rank = time.perf_counter() - t0
+    print(f"\ncatalog ranking over {n_fracs} read fractions "
+          f"({len(g.keys)} systems) in {t_rank*1e3:.1f} ms:")
+    start = 0
+    for j in range(1, n_fracs + 1):
+        if j == n_fracs or keys[j] != keys[start]:
+            print(f"    read fraction {fracs[start]:.2f}-"
+                  f"{fracs[j - 1]:.2f}: {keys[start]}")
+            start = j
+
+
 def main():
-    if len(sys.argv) > 1:
-        files = [sys.argv[1]]
+    args = [a for a in sys.argv[1:]]
+    if "--sweep" in args:
+        sweep_mode()
+        return
+    if args:
+        files = [args[0]]
     else:
         files = sorted(glob.glob(os.path.join(DRYRUN, "*.json")))[:3]
     if not files:
         print("no dry-run artifacts; run "
-              "`PYTHONPATH=src python -m repro.launch.dryrun --all` first")
+              "`PYTHONPATH=src python -m repro.launch.dryrun --all` first "
+              "(or try `--sweep` for the design-space sweep, which needs "
+              "no artifacts)")
         return
     for f in files:
         with open(f) as fh:

@@ -4,12 +4,19 @@ baseline) into a deployable on-package memory model.
 This is the object the roofline bridge consumes: given a workload's traffic
 mix it answers "what data bandwidth, pJ/b and latency does this memory
 system deliver, for a given shoreline budget?".
+
+Batched evaluation: :func:`catalog_grid` and :func:`approach_grid` stack
+every system's closed-form metrics into ``[S, ...]`` arrays produced by a
+single jitted (and memoized) program, so a dense traffic-mix grid over the
+whole catalog costs one compiled call instead of a per-system Python loop.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+import functools
+from typing import Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import latency as latency_mod
@@ -73,3 +80,106 @@ def standard_catalog() -> Dict[str, MemorySystem]:
             relative_bit_cost=7.5 if "HBM" in bname else 1.0,
         )
     return cat
+
+
+@functools.lru_cache(maxsize=1)
+def default_catalog_items() -> Tuple[Tuple[str, MemorySystem], ...]:
+    """The standard catalog as a hashable, cached tuple of items — the key
+    the batched-grid compile cache is built on."""
+    return tuple(standard_catalog().items())
+
+
+# -- batched grid evaluation --------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CatalogGrid:
+    """Stacked per-system metrics over a traffic-mix grid.
+
+    Metric arrays are ``[S, *mix_shape]`` where ``S`` follows ``keys``;
+    ``latency_ns`` / ``relative_bit_cost`` are per-system ``[S]`` scalars.
+    """
+
+    keys: Tuple[str, ...]
+    bandwidth_gbs: jnp.ndarray
+    pj_per_bit: jnp.ndarray
+    power_w: jnp.ndarray
+    gbs_per_watt: jnp.ndarray
+    latency_ns: jnp.ndarray
+    relative_bit_cost: jnp.ndarray
+
+
+@functools.lru_cache(maxsize=8)
+def _catalog_grid_fn(items: Tuple[Tuple[str, MemorySystem], ...]):
+    systems = [ms for _, ms in items]
+
+    def fn(x, y, shoreline_mm):
+        bw = jnp.stack([ms.bandwidth_gbs(x, y, shoreline_mm)
+                        for ms in systems])
+        pjb = jnp.stack([jnp.broadcast_to(ms.pj_per_bit(x, y), bw.shape[1:])
+                         for ms in systems])
+        pw = bw * 8.0 * pjb / 1000.0        # GB/s * pJ/b -> W
+        gpw = jnp.where(pw > 0, bw / pw, jnp.inf)
+        return bw, pjb, pw, gpw
+
+    return jax.jit(fn)
+
+
+def catalog_grid(x, y, shoreline_mm: float = 8.0,
+                 catalog: Optional[Dict[str, MemorySystem]] = None,
+                 ) -> CatalogGrid:
+    """Evaluate every catalog system over a mix grid in one compiled call.
+
+    ``x`` / ``y`` may be scalars or arrays of any (matching) shape; the
+    jitted stacked program is memoized per catalog, so repeated grids of
+    the same shape reuse the warm executable.
+    """
+    items = (default_catalog_items() if catalog is None
+             else tuple(catalog.items()))
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    bw, pjb, pw, gpw = _catalog_grid_fn(items)(
+        x, y, jnp.float32(shoreline_mm))
+    return CatalogGrid(
+        keys=tuple(k for k, _ in items),
+        bandwidth_gbs=bw, pj_per_bit=pjb, power_w=pw, gbs_per_watt=gpw,
+        latency_ns=jnp.asarray([ms.latency_ns for _, ms in items],
+                               jnp.float32),
+        relative_bit_cost=jnp.asarray(
+            [ms.relative_bit_cost for _, ms in items], jnp.float32),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ApproachGrid:
+    """Stacked ``[S, *mix_shape]`` density/power metrics for ALL_APPROACHES
+    on a given PHY (the Figs 10-12 sweeps)."""
+
+    keys: Tuple[str, ...]
+    linear: jnp.ndarray
+    areal: jnp.ndarray
+    pj_per_bit: jnp.ndarray
+
+
+@functools.lru_cache(maxsize=8)
+def _approach_grid_fn(phy: UCIePhy):
+    protos = tuple(ALL_APPROACHES.values())
+
+    def fn(x, y):
+        lin = jnp.stack([p.bw_density_linear(x, y, phy) for p in protos])
+        areal = jnp.stack([p.bw_density_areal(x, y, phy) for p in protos])
+        pjb = jnp.stack([jnp.broadcast_to(p.power_pj_per_bit(x, y, phy),
+                                          lin.shape[1:]) for p in protos])
+        return lin, areal, pjb
+
+    return jax.jit(fn)
+
+
+def approach_grid(phy: UCIePhy, x, y) -> ApproachGrid:
+    """All approaches' bandwidth-density and pJ/b over a mix grid, stacked
+    and computed in one compiled call per (phy, grid-shape)."""
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    lin, areal, pjb = _approach_grid_fn(phy)(x, y)
+    return ApproachGrid(keys=tuple(ALL_APPROACHES), linear=lin, areal=areal,
+                        pj_per_bit=pjb)

@@ -6,15 +6,24 @@ latency / cost, under optional constraints (shoreline budget, packaging,
 power cap).  §IV.C's conclusion — "CXL.Mem with optimization on symmetric
 UCIe offers the best power-efficient performance" — falls out of this
 ranking, and the tests assert it does.
+
+Ranking consumes the batched catalog grid (:func:`repro.core.memsys.
+catalog_grid`): every system's metrics come from one stacked, jitted call,
+and :func:`rank_grid` extends the same program to dense mix grids — the
+best system for hundreds of (x, y) points resolves in a single compiled
+evaluation instead of a per-point Python loop.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.memsys import MemorySystem, standard_catalog
+from repro.core.memsys import (
+    CatalogGrid, MemorySystem, catalog_grid, default_catalog_items,
+)
 from repro.core.traffic import TrafficMix
 
 
@@ -40,6 +49,43 @@ class RankedSystem:
     gbs_per_watt: float
 
 
+_OBJECTIVES = ("bandwidth", "power", "gbs_per_watt", "latency")
+
+
+def _catalog_items(catalog: Optional[Dict[str, MemorySystem]]):
+    return default_catalog_items() if catalog is None \
+        else tuple(catalog.items())
+
+
+def _static_mask(items, constraints: SelectionConstraints) -> np.ndarray:
+    """Per-system admissibility that doesn't depend on the mix point:
+    packaging (key substring, UCIe systems only) and relative bit cost."""
+    mask = np.ones(len(items), dtype=bool)
+    for i, (key, ms) in enumerate(items):
+        if constraints.packaging and ms.phy is not None:
+            if constraints.packaging not in key:
+                mask[i] = False
+        if (constraints.max_relative_bit_cost is not None
+                and ms.relative_bit_cost > constraints.max_relative_bit_cost):
+            mask[i] = False
+    return mask
+
+
+def _score(grid: CatalogGrid, objective: str) -> jnp.ndarray:
+    """Lower-is-better score array, broadcast to the metric grid shape."""
+    if objective not in _OBJECTIVES:
+        raise KeyError(objective)
+    if objective == "bandwidth":
+        return -grid.bandwidth_gbs
+    if objective == "power":
+        return grid.pj_per_bit
+    if objective == "gbs_per_watt":
+        return -grid.gbs_per_watt
+    lat = grid.latency_ns.reshape(
+        (len(grid.keys),) + (1,) * (grid.bandwidth_gbs.ndim - 1))
+    return jnp.broadcast_to(lat, grid.bandwidth_gbs.shape)
+
+
 def rank(mix: TrafficMix,
          constraints: SelectionConstraints = SelectionConstraints(),
          catalog: Optional[Dict[str, MemorySystem]] = None,
@@ -48,28 +94,31 @@ def rank(mix: TrafficMix,
 
     objective: "bandwidth" | "power" (pJ/b) | "gbs_per_watt" | "latency".
     """
-    catalog = catalog if catalog is not None else standard_catalog()
+    items = _catalog_items(catalog)
+    grid = catalog_grid(mix.x, mix.y, constraints.shoreline_mm,
+                        dict(items))
+    if objective not in _OBJECTIVES:
+        raise KeyError(objective)
+    bw = np.asarray(grid.bandwidth_gbs, dtype=np.float64)
+    pjb = np.asarray(grid.pj_per_bit, dtype=np.float64)
+    pw = np.asarray(grid.power_w, dtype=np.float64)
+    static_ok = _static_mask(items, constraints)
     out: List[RankedSystem] = []
-    for key, ms in catalog.items():
-        if constraints.packaging and ms.phy is not None:
-            if constraints.packaging not in key:
-                continue
-        bw = float(ms.bandwidth_gbs(mix.x, mix.y, constraints.shoreline_mm))
-        pjb = float(ms.pj_per_bit(mix.x, mix.y))
-        pw = bw * 8.0 * pjb / 1000.0
-        if constraints.max_power_w is not None and pw > constraints.max_power_w:
+    for i, (key, ms) in enumerate(items):
+        if not static_ok[i]:
             continue
-        if (constraints.max_relative_bit_cost is not None
-                and ms.relative_bit_cost > constraints.max_relative_bit_cost):
+        if (constraints.max_power_w is not None
+                and pw[i] > constraints.max_power_w):
             continue
         if (constraints.required_bandwidth_gbs is not None
-                and bw < constraints.required_bandwidth_gbs):
+                and bw[i] < constraints.required_bandwidth_gbs):
             continue
         out.append(RankedSystem(
-            key=key, name=ms.name, bandwidth_gbs=bw, pj_per_bit=pjb,
-            power_w=pw, latency_ns=ms.latency_ns,
+            key=key, name=ms.name, bandwidth_gbs=float(bw[i]),
+            pj_per_bit=float(pjb[i]), power_w=float(pw[i]),
+            latency_ns=ms.latency_ns,
             relative_bit_cost=ms.relative_bit_cost,
-            gbs_per_watt=bw / pw if pw > 0 else float("inf"),
+            gbs_per_watt=float(bw[i] / pw[i]) if pw[i] > 0 else float("inf"),
         ))
     keyfn = {
         "bandwidth": lambda r: -r.bandwidth_gbs,
@@ -85,3 +134,58 @@ def best(mix: TrafficMix, **kw) -> RankedSystem:
     if not ranked:
         raise ValueError("no memory system satisfies the constraints")
     return ranked[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class GridRanking:
+    """Per-point best system over a dense mix grid.
+
+    ``best_index`` indexes ``keys`` per grid point; ``valid`` marks which
+    systems satisfied the constraints at each point; ``grid`` carries the
+    full stacked metrics for downstream plotting/analysis.
+    """
+
+    keys: Tuple[str, ...]
+    best_index: jnp.ndarray            # [*mix_shape] int32; -1 where no
+                                       # system satisfies the constraints
+    score: jnp.ndarray                 # [S, *mix_shape] lower-is-better
+    valid: jnp.ndarray                 # [S, *mix_shape] bool
+    grid: CatalogGrid
+
+    def best_keys(self) -> np.ndarray:
+        """Best-system key per grid point (numpy object array); points with
+        no admissible system read ``"(none)"``."""
+        idx = np.asarray(self.best_index)
+        flat = np.atleast_1d(idx)
+        out = np.asarray(self.keys, dtype=object)[np.maximum(flat, 0)]
+        out[flat < 0] = "(none)"
+        return out.reshape(idx.shape)
+
+
+def rank_grid(x, y,
+              constraints: SelectionConstraints = SelectionConstraints(),
+              catalog: Optional[Dict[str, MemorySystem]] = None,
+              objective: str = "bandwidth") -> GridRanking:
+    """Rank the whole catalog over a dense mix grid in one compiled call.
+
+    ``x`` / ``y`` are arrays of matching shape (e.g. from ``mix_grid``);
+    returns the per-point argbest plus the full masked score grid.
+    """
+    items = _catalog_items(catalog)
+    grid = catalog_grid(x, y, constraints.shoreline_mm, dict(items))
+    score = _score(grid, objective)
+    valid = jnp.asarray(_static_mask(items, constraints)).reshape(
+        (len(items),) + (1,) * (score.ndim - 1))
+    valid = jnp.broadcast_to(valid, score.shape)
+    if constraints.max_power_w is not None:
+        valid = valid & (grid.power_w <= constraints.max_power_w)
+    if constraints.required_bandwidth_gbs is not None:
+        valid = valid & (grid.bandwidth_gbs
+                         >= constraints.required_bandwidth_gbs)
+    masked = jnp.where(valid, score, jnp.inf)
+    # argmin over an all-inf column would silently report system 0; mark
+    # points with no admissible system as -1 (best() raises in that case).
+    best_index = jnp.where(jnp.any(valid, axis=0),
+                           jnp.argmin(masked, axis=0), -1)
+    return GridRanking(keys=grid.keys, best_index=best_index,
+                       score=masked, valid=valid, grid=grid)

@@ -120,3 +120,28 @@ class TestCostModelAndSelector:
     def test_latency_objective_prefers_ucie(self):
         r = best(TrafficMix(1, 1), objective="latency")
         assert r.latency_ns == 3.0
+
+
+class TestRankGrid:
+    """Batched whole-catalog ranking over dense mix grids."""
+
+    def test_matches_scalar_rank_per_point(self):
+        from repro.core.selector import rank_grid
+        from repro.core.traffic import mix_grid
+        x, y = mix_grid(11)
+        g = rank_grid(x, y, objective="bandwidth")
+        keys = g.best_keys()
+        for j in range(11):
+            scalar_best = rank(TrafficMix(float(x[j]), float(y[j])),
+                               objective="bandwidth")[0].key
+            assert keys[j] == scalar_best, j
+
+    def test_infeasible_points_marked_not_misreported(self):
+        from repro.core.selector import rank_grid
+        from repro.core.traffic import mix_grid
+        x, y = mix_grid(5)
+        g = rank_grid(x, y, SelectionConstraints(
+            required_bandwidth_gbs=1e12))
+        assert not bool(jnp.any(g.valid))
+        assert np.all(np.asarray(g.best_index) == -1)
+        assert set(g.best_keys().tolist()) == {"(none)"}

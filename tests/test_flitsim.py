@@ -3,6 +3,11 @@ closed-form bandwidth-efficiency expression (hypothesis over traffic mixes),
 plus invariant properties of the analytic models themselves."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis; the batched "
+                           "sweep regressions in test_flitsim_sweep.py "
+                           "cover the bare environment")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ALL_APPROACHES, PAPER_MIXES
