@@ -4,6 +4,10 @@ Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
 emits one row per (arch × shape × mesh) cell: the three roofline terms,
 the dominant bottleneck, and the paper bridge — the best UCIe-Memory
 system for the cell's traffic mix vs the HBM baseline.
+
+A bridge row times the batched workload->design-space evaluation
+(``bridge_design_space``: one compiled [configs x catalog x mixes x
+shorelines] call) against the equivalent per-workload scalar-bridge loop.
 """
 from __future__ import annotations
 
@@ -15,7 +19,48 @@ DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "dryrun")
 
 
+def _bench_bridge(rows: list, n_workloads: int = 8, n_fracs: int = 41,
+                  shorelines=(2.0, 4.0, 8.0, 16.0)):
+    """Batched design-space bridge vs a per-workload scalar-bridge loop."""
+    from benchmarks.common import time_us
+    from repro.core.memsys import (
+        clear_grid_cache, grid_cache_stats, standard_catalog)
+    from repro.roofline.analysis import (
+        RooflineReport, bridge_design_space, memsys_bridge)
+
+    reports = {}
+    for i in range(n_workloads):
+        read_frac = 0.55 + 0.4 * i / max(n_workloads - 1, 1)
+        hb = 1e10 * (1 + i)
+        reports[f"w{i}"] = RooflineReport(
+            arch=f"w{i}", shape="-", mesh="-", chips=256,
+            hlo_flops_per_chip=1e12, hlo_bytes_per_chip=hb,
+            collective_bytes_per_chip=1e9, compute_s=5e-3,
+            memory_s=hb / 8.192e11, collective_s=2e-2, dominant="memory",
+            model_flops=2e14, useful_flops_ratio=0.8,
+            read_bytes_per_chip=hb * read_frac,
+            write_bytes_per_chip=hb * (1 - read_frac))
+
+    clear_grid_cache()
+    us_batched = time_us(
+        lambda: bridge_design_space(reports, n_fracs=n_fracs,
+                                    shorelines=shorelines),
+        warmup=1, iters=5)
+    stats = grid_cache_stats()
+    assert stats.misses == 1, (
+        f"expected one compile for the design-space grid, got {stats}")
+    us_scalar = time_us(
+        lambda: [memsys_bridge(r) for r in reports.values()],
+        warmup=1, iters=5)
+    n_pts = (n_workloads * len(standard_catalog()) * (n_fracs + 1)
+             * len(shorelines))
+    rows.append((f"roofline/bridge_design_space_{n_pts}pt", us_batched,
+                 f"workloads={n_workloads};compiles={stats.misses};"
+                 f"scalar_bridge_own_mix_only_us={us_scalar:.0f}"))
+
+
 def run(rows: list):
+    _bench_bridge(rows)
     files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
     if not files:
         rows.append(("roofline/none", 0.0,

@@ -1,6 +1,6 @@
 """Memory-system explorer: the paper bridge end-to-end.
 
-Two modes:
+Three modes:
 
   * artifact mode (default) — takes a compiled workload cell from the
     dry-run artifacts (or computes a fresh one for a reduced config),
@@ -17,6 +17,17 @@ Two modes:
     ranks the whole catalog across the read-fraction axis in one more.
 
         PYTHONPATH=src python examples/memsys_explorer.py --sweep
+
+  * bridge mode — the batched workload->design-space bridge: every
+    workload's HLO-derived traffic mix (from dry-run artifacts when
+    present, representative train/prefill/decode workloads otherwise)
+    is stacked as a configs axis on top of the dense mix grid and a
+    shoreline axis, and the whole [configs x catalog x mixes x
+    shorelines] space resolves through ONE compiled catalog evaluation.
+    Each workload reports its frontier: best system, read-fraction
+    crossovers, shoreline sensitivity.
+
+        PYTHONPATH=src python examples/memsys_explorer.py --bridge
 """
 import glob
 import json
@@ -111,10 +122,79 @@ def sweep_mode(n_fracs: int = 41, backlogs=(1, 2, 4, 8, 16, 32, 64, 128)):
             start = j
 
 
+#: Fallback workloads (per-chip bytes) when no dry-run artifacts exist:
+#: training reads weights+activations and writes gradients; prefill is
+#: read-heavy; decode is nearly pure weight streaming.
+REPRESENTATIVE_WORKLOADS = {
+    "train_67R33W": (6.7e9, 3.3e9, 1.0e10),
+    "prefill_85R15W": (1.27e10, 2.3e9, 1.5e10),
+    "decode_95R5W": (1.9e10, 1.0e9, 2.0e10),
+}
+
+
+def bridge_mode(n_fracs: int = 41, shorelines=(2.0, 4.0, 8.0, 16.0)):
+    """Batched workload->design-space bridge over all available cells."""
+    from repro.core.memsys import grid_cache_stats
+    from repro.roofline.analysis import RooflineReport, bridge_design_space
+
+    reports = {}
+    for f in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(f) as fh:
+            d = json.load(fh)
+        reports[f"{d['arch']}__{d['shape']}__{d['mesh']}"] = RooflineReport(
+            **d["roofline"])
+    if reports:
+        print(f"{len(reports)} workload cells from dry-run artifacts")
+    else:
+        print("no dry-run artifacts; using representative workloads")
+        for name, (r, w, hb) in REPRESENTATIVE_WORKLOADS.items():
+            reports[name] = RooflineReport(
+                arch=name, shape="-", mesh="-", chips=256,
+                hlo_flops_per_chip=0.0, hlo_bytes_per_chip=hb,
+                collective_bytes_per_chip=0.0, compute_s=0.0,
+                memory_s=hb / 8.192e11, collective_s=0.0,
+                dominant="memory", model_flops=0.0, useful_flops_ratio=0.0,
+                read_bytes_per_chip=r, write_bytes_per_chip=w)
+
+    t0 = time.perf_counter()
+    ds = bridge_design_space(reports, n_fracs=n_fracs,
+                             shorelines=shorelines)
+    dt = time.perf_counter() - t0
+    stats = grid_cache_stats()
+    n_pts = (len(reports) * len(ds["keys"]) * (n_fracs + 1)
+             * len(shorelines))
+    print(f"design space: {len(reports)} workloads x {len(ds['keys'])} "
+          f"systems x {n_fracs + 1} mixes x {len(shorelines)} shorelines "
+          f"= {n_pts} points in {dt:.2f}s "
+          f"[{stats.misses} compiles, {stats.hits} cache hits]\n")
+    for name, w in ds["workloads"].items():
+        hbm_t = w["hbm_baseline_memory_s"]
+        best_t = w["systems"][w["best"]]["memory_term_s"]
+        print(f"{name}  ({w['mix']}, read fraction "
+              f"{w['read_fraction']:.2f})")
+        print(f"    best @ {ds['reference_shoreline_mm']:g} mm: "
+              f"{w['best']}  memory term {best_t*1e3:.2f} ms "
+              f"(HBM baseline {hbm_t*1e3:.2f} ms, "
+              f"x{hbm_t / best_t:.2f})")
+        regimes = ", ".join(
+            f"{c['read_fraction_lo']:.2f}-{c['read_fraction_hi']:.2f}:"
+            f"{c['best']}" for c in w["crossovers"])
+        print(f"    read-fraction frontier: {regimes}")
+        if w["shoreline_sensitive"]:
+            print(f"    shoreline-SENSITIVE: {w['shoreline_frontier']}")
+        else:
+            budgets = ", ".join(f"{s:g}" for s in ds["shorelines"])
+            print(f"    shoreline-insensitive ({budgets} mm)")
+        print()
+
+
 def main():
     args = [a for a in sys.argv[1:]]
     if "--sweep" in args:
         sweep_mode()
+        return
+    if "--bridge" in args:
+        bridge_mode()
         return
     if args:
         files = [args[0]]

@@ -1,0 +1,49 @@
+"""Version-tolerant aliases for JAX APIs that moved between releases.
+
+Everything in the repo that touches an API whose home changed across JAX
+versions imports it from here, so a version bump is a one-file change:
+
+  * ``tree_flatten_with_path`` / ``tree_map_with_path`` — exposed as
+    ``jax.tree.*_with_path`` only in newer releases; older ones (e.g. the
+    pinned 0.4.37) carry them under ``jax.tree_util`` only.
+  * ``shard_map`` — top-level ``jax.shard_map`` in newer releases; under
+    ``jax.experimental.shard_map`` before, with ``check_rep`` instead of
+    the newer ``check_vma`` keyword.
+
+Importing this module also enables ``jax_threefry_partitionable``.  With
+the legacy (non-partitionable) threefry that 0.4.x defaults to, jitting an
+RNG-consuming program with sharded ``out_shardings`` lets XLA partition
+the counter stream differently per layout, so ``init`` under a (4, 2) mesh
+draws DIFFERENT parameter values than the same key on one device (observed
+0.09 max abs diff on an embedding table).  Partitionable threefry makes
+random draws layout-invariant — sharded-vs-single-device training then
+agrees to float-reassociation noise, which is what the elastic-checkpoint
+and distributed-training tests require.
+"""
+from __future__ import annotations
+
+import jax
+
+# Layout-invariant RNG (see module docstring).  Must be set before any
+# random bits are drawn under a sharded jit.
+jax.config.update("jax_threefry_partitionable", True)
+
+try:
+    tree_flatten_with_path = jax.tree.flatten_with_path
+    tree_map_with_path = jax.tree.map_with_path
+except AttributeError:
+    tree_flatten_with_path = jax.tree_util.tree_flatten_with_path
+    tree_map_with_path = jax.tree_util.tree_map_with_path
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+        """Newer-style signature mapped onto the experimental API
+        (``check_vma`` was called ``check_rep`` there)."""
+        if check_vma is not None:
+            kw.setdefault("check_rep", check_vma)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)

@@ -15,6 +15,11 @@ from repro.core.protocols import (
 from repro.core.latency import (
     UCIeMemoryLatency, MEASURED_FRONTEND_LATENCY_NS, latency_speedup,
 )
-from repro.core.memsys import MemorySystem, standard_catalog
-from repro.core.selector import SelectionConstraints, RankedSystem, rank, best
+from repro.core.memsys import (
+    CatalogGrid, MemorySystem, catalog_grid, grid_cache_stats,
+    standard_catalog,
+)
+from repro.core.selector import (
+    GridRanking, RankedSystem, SelectionConstraints, best, rank, rank_grid,
+)
 from repro.core import cost, flitsim

@@ -548,6 +548,39 @@ def sweep(protocols: Optional[Sequence[str]] = None,
                        backlogs=backlog_vals, efficiency=eff)
 
 
+#: Default queue-depth axis for knee extraction — doubling steps wide
+#: enough to bracket every simulated protocol's saturation cliff.
+KNEE_BACKLOGS: Tuple[float, ...] = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0,
+                                    128.0)
+
+
+def backlog_knees(mixes=None,
+                  backlogs: Sequence[float] = KNEE_BACKLOGS,
+                  knee_frac: float = 0.95,
+                  n_flits: int = 2048) -> Dict[str, float]:
+    """Efficiency-cliff knee per simulated protocol: the smallest request
+    backlog at which simulated data efficiency reaches ``knee_frac`` of
+    that protocol's best efficiency over the backlog axis, maximized over
+    ``mixes`` (conservative: a protocol must hit its knee on every mix).
+
+    One :func:`sweep` call over the ``[P, B, M]`` grid — repeated calls
+    with the same grid shape reuse the warm executable.  Asymmetric
+    protocols are backlog-independent, so their knee is the smallest
+    backlog probed.  The result feeds ``SelectionConstraints.
+    max_backlog_knee``: a queue-depth budget the selector enforces.
+    """
+    res = sweep(mixes=mixes, backlogs=backlogs, n_flits=n_flits)
+    eff = np.asarray(res.efficiency)                    # [P, B, M]
+    b = np.asarray(res.backlogs, dtype=np.float64)
+    knees: Dict[str, float] = {}
+    for i, key in enumerate(res.protocols):
+        e = eff[i]                                      # [B, M]
+        ok = e >= knee_frac * e.max(axis=0, keepdims=True)
+        first = np.argmax(ok, axis=0)                   # per-mix knee index
+        knees[key] = float(b[first].max())
+    return knees
+
+
 def sweep_pipelining(ks: Sequence[int], n_lines: int = 512,
                      ucie_line_ui: float = 16,
                      device_line_ui: float = 64) -> jnp.ndarray:

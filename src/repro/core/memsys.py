@@ -109,11 +109,38 @@ class CatalogGrid:
     relative_bit_cost: jnp.ndarray
 
 
+@dataclasses.dataclass
+class GridCacheStats:
+    """Catalog-grid compile counters: one miss == one trace+compile of the
+    stacked program (new catalog or new grid shape); hits run warm."""
+
+    hits: int = 0
+    misses: int = 0
+
+
+_GRID_STATS = GridCacheStats()
+
+
+def grid_cache_stats() -> GridCacheStats:
+    """Snapshot of the batched catalog-grid compile counters."""
+    return dataclasses.replace(_GRID_STATS)
+
+
+def clear_grid_cache() -> None:
+    """Drop the memoized grid programs and reset the hit/miss counters."""
+    _catalog_grid_fn.cache_clear()
+    _approach_grid_fn.cache_clear()
+    _GRID_STATS.hits = 0
+    _GRID_STATS.misses = 0
+
+
 @functools.lru_cache(maxsize=8)
 def _catalog_grid_fn(items: Tuple[Tuple[str, MemorySystem], ...]):
     systems = [ms for _, ms in items]
 
     def fn(x, y, shoreline_mm):
+        # body runs only while jax traces — i.e. once per compile
+        _GRID_STATS.misses += 1
         bw = jnp.stack([ms.bandwidth_gbs(x, y, shoreline_mm)
                         for ms in systems])
         pjb = jnp.stack([jnp.broadcast_to(ms.pj_per_bit(x, y), bw.shape[1:])
@@ -125,21 +152,27 @@ def _catalog_grid_fn(items: Tuple[Tuple[str, MemorySystem], ...]):
     return jax.jit(fn)
 
 
-def catalog_grid(x, y, shoreline_mm: float = 8.0,
+def catalog_grid(x, y, shoreline_mm=8.0,
                  catalog: Optional[Dict[str, MemorySystem]] = None,
                  ) -> CatalogGrid:
     """Evaluate every catalog system over a mix grid in one compiled call.
 
-    ``x`` / ``y`` may be scalars or arrays of any (matching) shape; the
-    jitted stacked program is memoized per catalog, so repeated grids of
-    the same shape reuse the warm executable.
+    ``x`` / ``y`` may be scalars or arrays of any (matching) shape, and
+    ``shoreline_mm`` a scalar or an array broadcastable against them (e.g.
+    ``x``/``y`` of shape ``[R, 1]`` with shorelines ``[L]`` gives metric
+    grids ``[S, R, L]``).  The jitted stacked program is memoized per
+    catalog, so repeated grids of the same shape reuse the warm executable
+    (``grid_cache_stats()`` exposes hit/miss counters).
     """
     items = (default_catalog_items() if catalog is None
              else tuple(catalog.items()))
     x = jnp.asarray(x, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
+    before = _GRID_STATS.misses
     bw, pjb, pw, gpw = _catalog_grid_fn(items)(
-        x, y, jnp.float32(shoreline_mm))
+        x, y, jnp.asarray(shoreline_mm, jnp.float32))
+    if _GRID_STATS.misses == before:
+        _GRID_STATS.hits += 1
     return CatalogGrid(
         keys=tuple(k for k, _ in items),
         bandwidth_gbs=bw, pj_per_bit=pjb, power_w=pw, gbs_per_watt=gpw,

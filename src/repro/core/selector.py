@@ -16,6 +16,7 @@ evaluation instead of a per-point Python loop.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
@@ -34,6 +35,11 @@ class SelectionConstraints:
     max_power_w: Optional[float] = None
     max_relative_bit_cost: Optional[float] = None
     required_bandwidth_gbs: Optional[float] = None
+    #: queue-depth budget: exclude flit-simulated protocols whose
+    #: efficiency knee (:func:`repro.core.flitsim.backlog_knees`) needs a
+    #: deeper request backlog than this.  Bus baselines have no flit
+    #: simulator and are unaffected.
+    max_backlog_knee: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,17 +63,50 @@ def _catalog_items(catalog: Optional[Dict[str, MemorySystem]]):
         else tuple(catalog.items())
 
 
+#: catalog approach prefix -> flit-simulator family key (for the knee
+#: constraint).  A2 (native LPDDR6 mapping) shares approach A's asymmetric
+#: lane-group simulator; bus baselines have no simulator entry.
+_CATALOG_SIM_KEYS = {
+    "A:lpddr6-asym": "lpddr6_asym",
+    "A2:lpddr6-native": "lpddr6_asym",
+    "B:hbm-asym": "hbm_asym",
+    "C:chi-sym": "chi",
+    "D:cxl-mem": "cxl_unopt",
+    "E:cxl-mem-opt": "cxl_opt",
+}
+
+
+@functools.lru_cache(maxsize=1)
+def _default_knees() -> Dict[str, float]:
+    """Memoized default-grid backlog knees — deterministic constants, so
+    ranking many mixes under a knee budget runs the sweep once."""
+    from repro.core import flitsim
+    return flitsim.backlog_knees()
+
+
 def _static_mask(items, constraints: SelectionConstraints) -> np.ndarray:
     """Per-system admissibility that doesn't depend on the mix point:
-    packaging (key substring, UCIe systems only) and relative bit cost."""
+    packaging, relative bit cost, and the backlog-knee budget.
+
+    A packaging constraint names a UCIe package variant, so it admits only
+    systems actually attached over that package: bus baselines (``ms.phy is
+    None``) are excluded, not waved through.
+    """
     mask = np.ones(len(items), dtype=bool)
+    knees = None
+    if constraints.max_backlog_knee is not None:
+        knees = _default_knees()
     for i, (key, ms) in enumerate(items):
-        if constraints.packaging and ms.phy is not None:
-            if constraints.packaging not in key:
+        if constraints.packaging:
+            if ms.phy is None or constraints.packaging not in key:
                 mask[i] = False
         if (constraints.max_relative_bit_cost is not None
                 and ms.relative_bit_cost > constraints.max_relative_bit_cost):
             mask[i] = False
+        if knees is not None:
+            sim = _CATALOG_SIM_KEYS.get(key.split("/")[0])
+            if sim is not None and knees[sim] > constraints.max_backlog_knee:
+                mask[i] = False
     return mask
 
 
@@ -165,14 +204,23 @@ class GridRanking:
 def rank_grid(x, y,
               constraints: SelectionConstraints = SelectionConstraints(),
               catalog: Optional[Dict[str, MemorySystem]] = None,
-              objective: str = "bandwidth") -> GridRanking:
+              objective: str = "bandwidth",
+              shoreline_mm=None) -> GridRanking:
     """Rank the whole catalog over a dense mix grid in one compiled call.
 
     ``x`` / ``y`` are arrays of matching shape (e.g. from ``mix_grid``);
     returns the per-point argbest plus the full masked score grid.
+
+    ``shoreline_mm`` (default: ``constraints.shoreline_mm``) may itself be
+    an array broadcastable against ``x`` — pass ``x``/``y`` of shape
+    ``[R, 1]`` and shorelines of shape ``[L]`` for a 2-D (read-fraction x
+    shoreline) trade-off map whose metrics come out ``[S, R, L]``, still
+    from a single compiled evaluation.
     """
     items = _catalog_items(catalog)
-    grid = catalog_grid(x, y, constraints.shoreline_mm, dict(items))
+    if shoreline_mm is None:
+        shoreline_mm = constraints.shoreline_mm
+    grid = catalog_grid(x, y, shoreline_mm, dict(items))
     score = _score(grid, objective)
     valid = jnp.asarray(_static_mask(items, constraints)).reshape(
         (len(items),) + (1,) * (score.ndim - 1))

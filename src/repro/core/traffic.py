@@ -71,9 +71,13 @@ PAPER_MIXES: Tuple[TrafficMix, ...] = (
 
 
 def mix_grid(n: int = 101):
-    """(x, y) arrays sweeping read fraction 0..1 — for vectorized evaluation."""
+    """(x, y) arrays sweeping read fraction 0..1 — for vectorized evaluation.
+
+    Every point keeps x + y = 100, so the endpoints are the valid pure-read
+    (100, 0) and pure-write (0, 100) mixes — the degenerate (0, 0) point
+    can never appear and no clamping is needed.
+    """
     r = jnp.linspace(0.0, 1.0, n)
-    # keep x + y = 100; clamp the endpoints away from (0, 0)
     x = 100.0 * r
     y = 100.0 - x
     return x, y

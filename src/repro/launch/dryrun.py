@@ -252,16 +252,36 @@ def main():
         cells = [(args.arch, args.shape)]
 
     failures = []
+    results = []
     for arch, shape_name in cells:
         try:
-            run_cell(arch, shape_name, multi_pod=args.multi_pod,
-                     out_dir=args.out,
-                     num_microbatches=args.microbatches,
-                     sequence_parallel=args.sequence_parallel,
-                     remat=False if args.no_remat else None)
+            results.append(run_cell(
+                arch, shape_name, multi_pod=args.multi_pod,
+                out_dir=args.out,
+                num_microbatches=args.microbatches,
+                sequence_parallel=args.sequence_parallel,
+                remat=False if args.no_remat else None))
         except Exception:
             traceback.print_exc()
             failures.append((arch, shape_name))
+    if results:
+        # one batched [configs x catalog x mix-grid x shoreline] evaluation
+        # over every compiled cell: each workload's design-space frontier
+        reports = {
+            f"{r['arch']}__{r['shape']}__{r['mesh']}":
+                analysis.RooflineReport(**r["roofline"])
+            for r in results}
+        ds = analysis.bridge_design_space(reports)
+        if args.all:
+            # persist the aggregate only for full sweeps — a later
+            # single-cell refresh must not clobber the all-cells space
+            os.makedirs(args.out, exist_ok=True)
+            with open(os.path.join(args.out, "design_space.json"),
+                      "w") as f:
+                json.dump(ds, f, indent=1)
+        for name, w in ds["workloads"].items():
+            print(f"frontier {name}: best={w['best']} ({w['mix']}) "
+                  f"shoreline_sensitive={w['shoreline_sensitive']}")
     if failures:
         print("FAILURES:", failures)
         raise SystemExit(1)

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.models.layers import cast
 from repro.models.schema import Leaf
@@ -160,7 +161,7 @@ def moe_block(params, x, cfg: ModelConfig, ctx: ShardingCtx):
     if gated:
         in_specs.append(P(tp, fsdp, None))
         args.append(wg)
-    fn = jax.shard_map(
+    fn = shard_map(
         _sharded, mesh=mesh, in_specs=tuple(in_specs),
         out_specs=(x_spec, P()), check_vma=False)
     out, aux = fn(*args)

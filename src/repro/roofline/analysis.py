@@ -27,6 +27,8 @@ import json
 import re
 from typing import Any, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.roofline.hw import V5E, ChipSpec
 
 _DTYPE_BYTES = {
@@ -224,27 +226,145 @@ def analyze(arch: str, shape_name: str, mesh_desc: str, chips: int,
         peak_memory_bytes=peak_memory_bytes, notes=notes)
 
 
+def _systems_dict(report: RooflineReport, keys, bw_gbs, pj,
+                  latency_ns) -> Dict[str, Any]:
+    """Per-system bridge metrics from stacked ``[S]`` catalog-grid columns."""
+    out: Dict[str, Any] = {}
+    for i, key in enumerate(keys):
+        bw = float(bw_gbs[i]) * 1e9
+        p = float(pj[i])
+        out[key] = {
+            "bandwidth_gbs": bw / 1e9,
+            "pj_per_bit": p,
+            "memory_term_s": (report.hlo_bytes_per_chip / bw
+                              if bw > 0 else float("inf")),
+            "interconnect_energy_j_per_step":
+                report.hlo_bytes_per_chip * 8.0 * p * 1e-12,
+            "latency_ns": float(latency_ns[i]),
+        }
+    return out
+
+
 def memsys_bridge(report: RooflineReport, shoreline_mm: float = 8.0,
                   chip: ChipSpec = V5E) -> Dict[str, Any]:
     """The paper bridge: this workload's traffic mix under every memory
-    system the paper models -> memory-term seconds + interconnect power."""
-    from repro.core import TrafficMix, standard_catalog
+    system the paper models -> memory-term seconds + interconnect power.
+
+    The whole catalog is evaluated through the stacked, jit-cached
+    :func:`repro.core.memsys.catalog_grid` program — one compiled call,
+    not a per-system Python loop."""
+    from repro.core import TrafficMix
+    from repro.core.memsys import catalog_grid
     mix = TrafficMix.from_bytes(report.read_bytes_per_chip,
                                 report.write_bytes_per_chip)
-    out = {"mix": mix.name,
-           "read_fraction": mix.read_fraction,
-           "hbm_baseline_memory_s": report.memory_s,
-           "systems": {}}
-    for key, ms in standard_catalog().items():
-        bw = float(ms.bandwidth_gbs(mix.x, mix.y, shoreline_mm)) * 1e9
-        pj = float(ms.pj_per_bit(mix.x, mix.y))
-        mem_s = report.hlo_bytes_per_chip / bw if bw > 0 else float("inf")
-        out["systems"][key] = {
-            "bandwidth_gbs": bw / 1e9,
-            "pj_per_bit": pj,
-            "memory_term_s": mem_s,
-            "interconnect_energy_j_per_step":
-                report.hlo_bytes_per_chip * 8.0 * pj * 1e-12,
-            "latency_ns": ms.latency_ns,
+    grid = catalog_grid(mix.x, mix.y, shoreline_mm)
+    return {"mix": mix.name,
+            "read_fraction": mix.read_fraction,
+            "hbm_baseline_memory_s": report.memory_s,
+            "systems": _systems_dict(
+                report, grid.keys, np.asarray(grid.bandwidth_gbs),
+                np.asarray(grid.pj_per_bit), np.asarray(grid.latency_ns))}
+
+
+def bridge_design_space(reports: Dict[str, RooflineReport],
+                        n_fracs: int = 41,
+                        shorelines=(2.0, 4.0, 8.0, 16.0),
+                        constraints=None,
+                        objective: str = "bandwidth") -> Dict[str, Any]:
+    """Per-workload design-space frontier over the full
+    ``[configs x catalog x mix-grid x shoreline]`` space in ONE batched
+    :func:`repro.core.selector.rank_grid` evaluation.
+
+    For every workload (a named :class:`RooflineReport`), the mix axis is
+    the shared dense read-fraction grid with the workload's own HLO-derived
+    mix prepended as column 0 — the configs axis genuinely varies, and the
+    whole space compiles to a single stacked program (one compile per grid
+    shape, warm thereafter).
+
+    Each workload cell reports its whole frontier, not one point:
+
+      * ``systems`` — per-system bridge metrics at its own mix (identical
+        to :func:`memsys_bridge` for the same shoreline),
+      * ``best`` — the winning system at its own mix / reference shoreline,
+      * ``crossovers`` — read-fraction regimes of the winning system along
+        the dense mix axis (where the paper's conclusion flips),
+      * ``shoreline_frontier`` + ``shoreline_sensitive`` — the winner at
+        its own mix per shoreline budget.
+
+    ``constraints`` (default :class:`SelectionConstraints`) applies to the
+    whole space — packaging, power caps, and the flit-simulation-derived
+    ``max_backlog_knee`` queue-depth budget all mask the same grid.
+    """
+    from repro.core import TrafficMix, mix_grid
+    from repro.core.selector import SelectionConstraints, rank_grid
+    if constraints is None:
+        constraints = SelectionConstraints()
+    names = list(reports)
+    mixes = [TrafficMix.from_bytes(reports[n].read_bytes_per_chip,
+                                   reports[n].write_bytes_per_chip)
+             for n in names]
+    gx, gy = np.asarray(mix_grid(n_fracs), dtype=np.float64)
+    n_cfg = len(names)
+    # configs axis on top of the mix axis: column 0 is each workload's own
+    # mix, columns 1: the shared read-fraction grid
+    x = np.concatenate([np.array([[m.x] for m in mixes]),
+                        np.broadcast_to(gx, (n_cfg, n_fracs))], axis=1)
+    y = np.concatenate([np.array([[m.y] for m in mixes]),
+                        np.broadcast_to(gy, (n_cfg, n_fracs))], axis=1)
+    sl = np.asarray(shorelines, dtype=np.float64)
+    # the reference budget (where `best`/`systems` are reported) is always
+    # evaluated exactly — appended to the axis if the caller's shoreline
+    # list doesn't contain it, never silently snapped to a neighbor
+    if not np.any(np.abs(sl - constraints.shoreline_mm) < 1e-9):
+        sl = np.sort(np.append(sl, constraints.shoreline_mm))
+    l_ref = int(np.argmin(np.abs(sl - constraints.shoreline_mm)))
+
+    g = rank_grid(x[:, :, None], y[:, :, None], constraints=constraints,
+                  objective=objective, shoreline_mm=sl)
+    best = np.asarray(g.best_index)                     # [C, M+1, L]
+    best_keys = g.best_keys()
+    bw = np.asarray(g.grid.bandwidth_gbs)               # [S, C, M+1, L]
+    pj = np.asarray(g.grid.pj_per_bit)
+    lat = np.asarray(g.grid.latency_ns)
+    fracs = gx / 100.0
+
+    out: Dict[str, Any] = {
+        "read_fractions": fracs.tolist(),
+        "shorelines": sl.tolist(),
+        "reference_shoreline_mm": float(sl[l_ref]),
+        "objective": objective,
+        "keys": list(g.keys),
+        "workloads": {},
+    }
+    for c, name in enumerate(names):
+        rep = reports[name]
+        # regimes tile [0, 1] contiguously: each boundary is the midpoint
+        # between the last grid point of one winner and the first of the
+        # next (the crossover lies between the two samples)
+        crossovers = []
+        row = best_keys[c, 1:, l_ref]                   # dense mix axis
+        start = 0
+        lo = 0.0
+        for j in range(1, n_fracs + 1):
+            if j == n_fracs or row[j] != row[start]:
+                hi = (1.0 if j == n_fracs
+                      else float((fracs[j - 1] + fracs[j]) / 2.0))
+                crossovers.append({"read_fraction_lo": lo,
+                                   "read_fraction_hi": hi,
+                                   "best": str(row[start])})
+                start, lo = j, hi
+        sl_frontier = {f"{s:g}mm": str(best_keys[c, 0, l])
+                       for l, s in enumerate(sl)}
+        out["workloads"][name] = {
+            "mix": mixes[c].name,
+            "read_fraction": mixes[c].read_fraction,
+            "hbm_baseline_memory_s": rep.memory_s,
+            "best": str(best_keys[c, 0, l_ref]),
+            "feasible": bool(best[c, 0, l_ref] >= 0),
+            "systems": _systems_dict(rep, g.keys, bw[:, c, 0, l_ref],
+                                     pj[:, c, 0, l_ref], lat),
+            "crossovers": crossovers,
+            "shoreline_frontier": sl_frontier,
+            "shoreline_sensitive": len(set(sl_frontier.values())) > 1,
         }
     return out

@@ -31,6 +31,10 @@ def run_sub(body: str, devices: int = 8, timeout: int = 900) -> str:
 
 class TestShardedTraining:
     def test_sharded_train_step_matches_single_device(self):
+        # Requires layout-invariant RNG (jax_threefry_partitionable, enabled
+        # by repro.compat): with legacy threefry, init under sharded
+        # out_shardings draws different embedding values than single-device
+        # init from the same key (0.09 max abs diff BEFORE any train step).
         run_sub("""
         from repro.configs import get
         from repro.configs.shapes import ShapeSpec
@@ -141,6 +145,7 @@ class TestShardedTraining:
     def test_compressed_psum_int8(self):
         run_sub("""
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.train.grad_compress import compressed_psum
         mesh = jax.make_mesh((8,), ("pod",))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
@@ -148,8 +153,8 @@ class TestShardedTraining:
         def f(xb):
             return compressed_psum(xb, "pod")
 
-        y = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod", None),
-                                  out_specs=P("pod", None)))(x)
+        y = jax.jit(shard_map(f, mesh=mesh, in_specs=P("pod", None),
+                              out_specs=P("pod", None)))(x)
         ref = jnp.broadcast_to(x.sum(0), (8, 64))
         rel = float(jnp.max(jnp.abs(np.asarray(y)[0] - np.asarray(ref)[0]))
                     / (jnp.max(jnp.abs(ref)) + 1e-9))

@@ -1,0 +1,251 @@
+"""Regression tests for the batched workload->design-space bridge.
+
+The rebuilt ``memsys_bridge`` (one stacked ``catalog_grid`` call) must
+reproduce the pre-refactor scalar per-system Python loop, the batched
+``bridge_design_space`` configs-axis path must compile exactly once per
+grid shape, and the selector's packaging / backlog-knee constraints must
+actually exclude what they claim to.
+"""
+import numpy as np
+import pytest
+
+from repro.core import flitsim
+from repro.core.memsys import (
+    clear_grid_cache, grid_cache_stats, standard_catalog,
+)
+from repro.core.selector import SelectionConstraints, rank, rank_grid
+from repro.core.traffic import TrafficMix, mix_grid
+from repro.roofline.analysis import (
+    RooflineReport, bridge_design_space, memsys_bridge,
+)
+
+
+def _report(read, write, hlo_bytes):
+    return RooflineReport(
+        arch="golden", shape="s", mesh="16x16", chips=256,
+        hlo_flops_per_chip=1e12, hlo_bytes_per_chip=hlo_bytes,
+        collective_bytes_per_chip=1e9, compute_s=5e-3, memory_s=1.2e-2,
+        collective_s=2e-2, dominant="collective", model_flops=2e14,
+        useful_flops_ratio=0.8, read_bytes_per_chip=read,
+        write_bytes_per_chip=write)
+
+
+# Golden outputs of the SEED (pre-batching) scalar per-system loop in
+# memsys_bridge, captured by executing the original implementation
+# (git 57b9da2) on CPU.  The batched catalog-grid path must reproduce them
+# to <= 1e-6 relative (float reassociation inside the fused program only).
+SEED_GOLDEN_70R30W_8MM = {      # read=7e9 write=3e9 hlo_bytes=1e10
+    "E:cxl-mem-opt/UCIe-A": {
+        "bandwidth_gbs": 3454.111083984375,
+        "pj_per_bit": 0.3360937535762787,
+        "memory_term_s": 0.002895100868749372,
+        "interconnect_energy_j_per_step": 0.026887500286102293,
+    },
+    "A2:lpddr6-native/UCIe-A": {
+        "bandwidth_gbs": 3733.34765625,
+        "pj_per_bit": 0.33082032203674316,
+        "memory_term_s": 0.0026785611522835255,
+    },
+    "C:chi-sym/UCIe-S": {
+        "bandwidth_gbs": 814.5454711914062,
+        "interconnect_energy_j_per_step": 0.07553333282470703,
+    },
+    "HBM4": {"bandwidth_gbs": 1638.4000244140625,
+             "memory_term_s": 0.0061035155340505316,
+             "pj_per_bit": 0.8999999761581421},
+    "LPDDR6": {"bandwidth_gbs": 282.4827575683594,
+               "memory_term_s": 0.03540039075687673},
+}
+SEED_GOLDEN_95R5W_4MM = {       # read=1.9e10 write=1e9 hlo_bytes=2e10
+    "E:cxl-mem-opt/UCIe-A": {
+        "bandwidth_gbs": 1299.5526123046875,
+        "pj_per_bit": 0.3550833761692047,
+        "memory_term_s": 0.015389911736263653,
+    },
+    "B:hbm-asym/UCIe-S": {"bandwidth_gbs": 437.40655517578125},
+    "HBM3": {"bandwidth_gbs": 409.6000061035156,
+             "memory_term_s": 0.04882812427240425},
+}
+
+
+class TestBridgeSeedGolden:
+    """The batched bridge reproduces the ORIGINAL per-system loop."""
+
+    @pytest.mark.parametrize("golden,args,shoreline", [
+        (SEED_GOLDEN_70R30W_8MM, (7e9, 3e9, 1e10), 8.0),
+        (SEED_GOLDEN_95R5W_4MM, (19e9, 1e9, 2e10), 4.0),
+    ])
+    def test_matches_scalar_loop_goldens(self, golden, args, shoreline):
+        br = memsys_bridge(_report(*args), shoreline_mm=shoreline)
+        assert set(br["systems"]) == set(standard_catalog())
+        for key, metrics in golden.items():
+            for m, v in metrics.items():
+                assert br["systems"][key][m] == pytest.approx(
+                    v, rel=1e-6), (key, m)
+
+    def test_mix_metadata(self):
+        br = memsys_bridge(_report(7e9, 3e9, 1e10))
+        assert br["mix"] == "70R30W"
+        assert br["read_fraction"] == pytest.approx(0.7)
+        assert br["hbm_baseline_memory_s"] == pytest.approx(1.2e-2)
+
+    def test_every_system_has_full_metric_set(self):
+        br = memsys_bridge(_report(1e10, 1e10, 1e10))
+        for key, s in br["systems"].items():
+            assert set(s) == {"bandwidth_gbs", "pj_per_bit",
+                              "memory_term_s",
+                              "interconnect_energy_j_per_step",
+                              "latency_ns"}, key
+            assert s["memory_term_s"] > 0
+
+
+class TestDesignSpaceBridge:
+    REPORTS = {
+        "train": _report(6.7e9, 3.3e9, 1e10),
+        "prefill": _report(1.7e10, 3e9, 1.5e10),
+        "decode": _report(1.9e10, 1e9, 2e10),
+    }
+
+    def test_own_mix_column_matches_scalar_bridge(self):
+        """Column 0 of the configs axis is each workload's own mix — its
+        per-system metrics must bit-match the scalar-path memsys_bridge."""
+        ds = bridge_design_space(self.REPORTS, shorelines=(4.0, 8.0))
+        for name, rep in self.REPORTS.items():
+            br = memsys_bridge(rep, shoreline_mm=8.0)
+            w = ds["workloads"][name]
+            assert w["mix"] == br["mix"]
+            for key, s in br["systems"].items():
+                for m, v in s.items():
+                    assert w["systems"][key][m] == pytest.approx(
+                        v, rel=1e-6), (name, key, m)
+
+    def test_configs_axis_compiles_once_per_grid_shape(self):
+        clear_grid_cache()
+        bridge_design_space(self.REPORTS)
+        first = grid_cache_stats()
+        assert first.misses == 1, first
+        bridge_design_space(self.REPORTS)      # same shape -> warm
+        second = grid_cache_stats()
+        assert second.misses == first.misses
+        assert second.hits > first.hits
+        # a different grid shape compiles once more, then caches again
+        bridge_design_space(self.REPORTS, n_fracs=11)
+        bridge_design_space(self.REPORTS, n_fracs=11)
+        third = grid_cache_stats()
+        assert third.misses == 2
+
+    def test_frontier_structure(self):
+        ds = bridge_design_space(self.REPORTS, n_fracs=21)
+        assert len(ds["read_fractions"]) == 21
+        for name, w in ds["workloads"].items():
+            assert w["feasible"]
+            assert w["best"] in ds["keys"]
+            # crossover regimes tile [0, 1] without gaps: every read
+            # fraction falls in exactly one regime
+            cs = w["crossovers"]
+            assert cs[0]["read_fraction_lo"] == 0.0
+            assert cs[-1]["read_fraction_hi"] == 1.0
+            for a, b in zip(cs, cs[1:]):
+                assert b["read_fraction_lo"] == a["read_fraction_hi"]
+                assert b["read_fraction_lo"] < b["read_fraction_hi"]
+            assert set(w["shoreline_frontier"]) == \
+                {f"{s:g}mm" for s in ds["shorelines"]}
+
+    def test_reference_shoreline_never_snapped(self):
+        """A shoreline list missing the constraints' reference budget gets
+        it appended — `best`/`systems` are evaluated at the requested
+        shoreline exactly, not a nearest neighbor."""
+        ds = bridge_design_space(self.REPORTS, n_fracs=5,
+                                 shorelines=(2.0, 5.0))
+        assert ds["reference_shoreline_mm"] == 8.0
+        assert ds["shorelines"] == [2.0, 5.0, 8.0]
+        for name, rep in self.REPORTS.items():
+            br = memsys_bridge(rep, shoreline_mm=8.0)
+            w = ds["workloads"][name]
+            for key, s in br["systems"].items():
+                assert w["systems"][key]["bandwidth_gbs"] == pytest.approx(
+                    s["bandwidth_gbs"], rel=1e-6)
+
+    def test_constraints_flow_through(self):
+        ds = bridge_design_space(
+            self.REPORTS, n_fracs=11,
+            constraints=SelectionConstraints(packaging="UCIe-S"))
+        for w in ds["workloads"].values():
+            assert w["best"].endswith("UCIe-S")
+            for c in w["crossovers"]:
+                assert c["best"].endswith("UCIe-S")
+
+
+class TestRankGrid2D:
+    def test_shoreline_axis_shapes_and_consistency(self):
+        x, y = mix_grid(9)
+        x = np.asarray(x)[:, None]
+        y = np.asarray(y)[:, None]
+        sl = np.array([4.0, 8.0])
+        g = rank_grid(x, y, shoreline_mm=sl)
+        assert g.best_index.shape == (9, 2)
+        assert g.grid.bandwidth_gbs.shape == (len(g.keys), 9, 2)
+        # doubling the shoreline doubles bandwidth, leaves pJ/b unchanged
+        bw = np.asarray(g.grid.bandwidth_gbs)
+        np.testing.assert_allclose(bw[:, :, 1], 2.0 * bw[:, :, 0],
+                                   rtol=1e-6)
+        pj = np.asarray(g.grid.pj_per_bit)
+        np.testing.assert_allclose(pj[:, :, 1], pj[:, :, 0], atol=0)
+
+
+class TestPackagingConstraint:
+    def test_rank_excludes_bus_baselines(self):
+        mix = TrafficMix(2, 1)
+        for pkg in ("UCIe-A", "UCIe-S"):
+            ranked = rank(mix, constraints=SelectionConstraints(
+                packaging=pkg))
+            assert ranked, pkg
+            for r in ranked:
+                assert pkg in r.key, (pkg, r.key)
+
+    def test_rank_grid_excludes_bus_baselines(self):
+        x, y = mix_grid(5)
+        g = rank_grid(x, y, constraints=SelectionConstraints(
+            packaging="UCIe-A"))
+        valid = np.asarray(g.valid)
+        for i, key in enumerate(g.keys):
+            if "UCIe-A" in key:
+                assert valid[i].all(), key
+            else:
+                assert not valid[i].any(), key
+
+    def test_unconstrained_still_admits_baselines(self):
+        ranked = rank(TrafficMix(1, 1))
+        assert any(r.key in ("HBM4", "LPDDR6") for r in ranked)
+
+
+class TestBacklogKneeConstraint:
+    def test_knees_shape_and_families(self):
+        knees = flitsim.backlog_knees()
+        assert set(knees) == set(flitsim.SIMULATORS)
+        # asymmetric protocols are backlog-independent: knee at the floor
+        assert knees["lpddr6_asym"] == min(flitsim.KNEE_BACKLOGS)
+        assert knees["hbm_asym"] == min(flitsim.KNEE_BACKLOGS)
+        # symmetric protocols need a real queue to saturate
+        assert all(knees[k] > min(flitsim.KNEE_BACKLOGS)
+                   for k in flitsim.SYMMETRIC_PARAMS)
+
+    def test_selector_enforces_knee_budget(self):
+        mix = TrafficMix(2, 1)
+        knees = flitsim.backlog_knees()
+        budget = min(knees[k] for k in flitsim.SYMMETRIC_PARAMS) - 1.0
+        ranked = rank(mix, constraints=SelectionConstraints(
+            max_backlog_knee=budget))
+        keys = [r.key for r in ranked]
+        # every symmetric-protocol system is excluded...
+        assert not any(k.startswith(("C:", "D:", "E:")) for k in keys)
+        # ...asymmetric UCIe systems and (un-simulated) baselines remain
+        assert any(k.startswith("A") for k in keys)
+        assert any(k in ("HBM4", "LPDDR6") for k in keys)
+
+    def test_generous_budget_excludes_nothing(self):
+        mix = TrafficMix(2, 1)
+        base = {r.key for r in rank(mix)}
+        roomy = {r.key for r in rank(mix, constraints=SelectionConstraints(
+            max_backlog_knee=max(flitsim.KNEE_BACKLOGS)))}
+        assert roomy == base
