@@ -3,7 +3,11 @@ validation of eqs 3/14/20), via the batched sweep engine.
 
 The validation sweep (all 5 protocols x 5 canonical mixes) runs as ONE
 compiled program per simulator family; a speedup row compares the batched
-path against the legacy per-point loop on a 125-point grid.
+path against the legacy per-point loop on a 125-point grid.  Sensitivity
+rows perturb protocol parameters (slot counts, credit limits) through the
+``protocol_param`` design-space axis, and a joint-pipelining row sweeps
+(k, ucie_line_ui, device_line_ui) — faster DRAM generations behind the
+logic die — in one compiled call.
 """
 from __future__ import annotations
 
@@ -12,7 +16,8 @@ import numpy as np
 from benchmarks.common import time_us
 from repro.core import flitsim, mix_grid
 from repro.core.flitsim import (
-    ANALYTIC, SIMULATORS, SYMMETRIC_PARAMS, sweep, sweep_pipelining,
+    ANALYTIC, SIMULATORS, SYMMETRIC_PARAMS, sweep, sweep_perturbed,
+    sweep_pipelining,
 )
 
 
@@ -63,9 +68,41 @@ def run(rows: list):
         rows.append((f"flitsim/backlog_sensitivity/{key}", 0.0,
                      f"eff@bl1={e[0]:.3f};eff@bl64={e[-1]:.3f}"))
 
+    # -- protocol-parameter sensitivity via the perturbation axis -----------
+    perts = [{}, {"credit_lines": 0.1}, {"g_slots": 0.8},
+             {"reqs_per_g": 0.5, "resps_per_g": 0.5}]
+    sens = sweep_perturbed(perts, protocols=tuple(SYMMETRIC_PARAMS),
+                           mixes=[(2, 1)], backlogs=[4.0, 64.0])
+    eff = sens["sim_efficiency"]        # [pert, protocol, backlog, mix]
+    base = eff.sel(protocol_param="baseline")
+    for q, label in enumerate(eff.coord("protocol_param")):
+        if label == "baseline":
+            continue
+        for i, key in enumerate(eff.coord("protocol")):
+            d4 = float(eff.values[q, i, 0, 0] - base.values[i, 0, 0])
+            d64 = float(eff.values[q, i, 1, 0] - base.values[i, 1, 0])
+            rows.append((f"flitsim/sensitivity/{key}/{label}", 0.0,
+                         f"d_eff@bl4={d4:+.3f};d_eff@bl64={d64:+.3f}"))
+
     # -- Fig 13: pipelining, batched over k in one call ---------------------
     ks = (1, 2, 3, 4)
     util = np.asarray(sweep_pipelining(ks))
     for k, u in zip(ks, util):
         rows.append((f"flitsim/lpddr6_pipelining_k{k}", 0.0,
                      f"link_utilization={u:.3f}"))
+
+    # -- joint (k x ucie_line_ui x device_line_ui) pipelining sweep ---------
+    # smaller device_line_ui models faster DRAM generations; the derived
+    # column reports the smallest k that saturates the link per column
+    us_axis, ds_axis = (8.0, 16.0), (16.0, 32.0, 64.0)
+    joint = np.asarray(sweep_pipelining((1, 2, 3, 4, 6),
+                                        ucie_line_ui=us_axis,
+                                        device_line_ui=ds_axis))
+    for ui, u_line in zip(us_axis, joint.transpose(1, 0, 2)):
+        k_sat = []
+        for d, col in zip(ds_axis, u_line.T):
+            sat = np.nonzero(col >= 0.99)[0]
+            k_sat.append(f"dev{d:g}ui:k="
+                         f"{(1, 2, 3, 4, 6)[sat[0]] if sat.size else '>6'}")
+        rows.append((f"flitsim/pipelining_joint_ucie{ui:g}ui", 0.0,
+                     "saturating_" + ";".join(k_sat)))

@@ -115,6 +115,31 @@ def bench_selector_grid(rows, n: int = 201):
                  f"regimes={transitions + 1};best_by_read_fraction={winners}"))
 
 
+def bench_design_space(rows, n: int = 41):
+    """Axes-first DesignSpace: the [mix x shoreline] catalog space in one
+    compiled call, asserted via the shared design-space cache counters."""
+    from repro.core import DesignSpace, axis
+    from repro.core.memsys import clear_grid_cache, grid_cache_stats
+
+    shorelines = (2.0, 4.0, 8.0, 16.0)
+    space = DesignSpace([axis("read_fraction", np.linspace(0.0, 1.0, n)),
+                         axis("shoreline_mm", shorelines)])
+    metrics = ("bandwidth_gbs", "gbs_per_watt")
+    clear_grid_cache()
+    us = time_us(lambda: space.evaluate(metrics=metrics)["bandwidth_gbs"]
+                 .values)
+    res = space.evaluate(metrics=metrics)
+    stats = grid_cache_stats()
+    assert stats.misses == 1, (
+        f"expected the joint [mix x shoreline] space to compile once, "
+        f"got {stats}")
+    front = res.frontier("gbs_per_watt").sel(shoreline_mm=8.0)
+    winners = ">".join(dict.fromkeys(front.values.tolist()))
+    rows.append((f"design_space/{n}x{len(shorelines)}", us,
+                 f"compiles={stats.misses};cache_hits={stats.hits};"
+                 f"best_gbs_per_watt@8mm={winners}"))
+
+
 def run(rows: list):
     bench_table1(rows)
     bench_fig10(rows)
@@ -123,3 +148,4 @@ def run(rows: list):
     bench_latency(rows)
     bench_cost(rows)
     bench_selector_grid(rows)
+    bench_design_space(rows)

@@ -19,27 +19,32 @@ DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "dryrun")
 
 
+def _synthetic_report(name: str, read_frac: float, hlo_bytes: float):
+    """Synthetic memory-bound workload cell with a chosen read fraction."""
+    from repro.roofline.analysis import RooflineReport
+    return RooflineReport(
+        arch=name, shape="-", mesh="-", chips=256,
+        hlo_flops_per_chip=1e12, hlo_bytes_per_chip=hlo_bytes,
+        collective_bytes_per_chip=1e9, compute_s=5e-3,
+        memory_s=hlo_bytes / 8.192e11, collective_s=2e-2,
+        dominant="memory", model_flops=2e14, useful_flops_ratio=0.8,
+        read_bytes_per_chip=hlo_bytes * read_frac,
+        write_bytes_per_chip=hlo_bytes * (1 - read_frac))
+
+
 def _bench_bridge(rows: list, n_workloads: int = 8, n_fracs: int = 41,
                   shorelines=(2.0, 4.0, 8.0, 16.0)):
     """Batched design-space bridge vs a per-workload scalar-bridge loop."""
     from benchmarks.common import time_us
     from repro.core.memsys import (
         clear_grid_cache, grid_cache_stats, standard_catalog)
-    from repro.roofline.analysis import (
-        RooflineReport, bridge_design_space, memsys_bridge)
+    from repro.roofline.analysis import bridge_design_space, memsys_bridge
 
-    reports = {}
-    for i in range(n_workloads):
-        read_frac = 0.55 + 0.4 * i / max(n_workloads - 1, 1)
-        hb = 1e10 * (1 + i)
-        reports[f"w{i}"] = RooflineReport(
-            arch=f"w{i}", shape="-", mesh="-", chips=256,
-            hlo_flops_per_chip=1e12, hlo_bytes_per_chip=hb,
-            collective_bytes_per_chip=1e9, compute_s=5e-3,
-            memory_s=hb / 8.192e11, collective_s=2e-2, dominant="memory",
-            model_flops=2e14, useful_flops_ratio=0.8,
-            read_bytes_per_chip=hb * read_frac,
-            write_bytes_per_chip=hb * (1 - read_frac))
+    reports = {
+        f"w{i}": _synthetic_report(
+            f"w{i}", 0.55 + 0.4 * i / max(n_workloads - 1, 1),
+            1e10 * (1 + i))
+        for i in range(n_workloads)}
 
     clear_grid_cache()
     us_batched = time_us(
@@ -59,9 +64,33 @@ def _bench_bridge(rows: list, n_workloads: int = 8, n_fracs: int = 41,
                  f"scalar_bridge_own_mix_only_us={us_scalar:.0f}"))
 
 
+def _bench_knee_bridge(rows: list, budget: float = 4.0, n_fracs: int = 11):
+    """Per-mix backlog-knee budget: each workload's OWN HLO-derived mix —
+    not the canonical-mix envelope — decides which simulated protocols
+    survive the queue-depth constraint along the configs axis."""
+    from repro.core.selector import SelectionConstraints
+    from repro.roofline.analysis import bridge_design_space
+
+    reports = {name: _synthetic_report(name, read_frac, 1e10)
+               for name, read_frac in (("decode_pure_read", 1.0),
+                                       ("train_67r33w", 0.67),
+                                       ("balanced_50r50w", 0.5))}
+    ds = bridge_design_space(
+        reports, n_fracs=n_fracs,
+        constraints=SelectionConstraints(max_backlog_knee=budget))
+    bests = ";".join(f"{name}={w['best']}"
+                     for name, w in ds["workloads"].items())
+    rows.append((f"roofline/bridge_knee_budget{budget:g}", 0.0, bests))
+
+
 def run(rows: list):
     _bench_bridge(rows)
-    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    _bench_knee_bridge(rows)
+    # skip the aggregate design-space report — different schema than the
+    # per-cell artifacts this loop consumes
+    from repro.roofline.analysis import DESIGN_SPACE_JSON
+    files = sorted(f for f in glob.glob(os.path.join(DRYRUN_DIR, "*.json"))
+                   if os.path.basename(f) != DESIGN_SPACE_JSON)
     if not files:
         rows.append(("roofline/none", 0.0,
                      "run `python -m repro.launch.dryrun --all` first"))

@@ -9,6 +9,11 @@ import jax
 
 Row = Tuple[str, float, str]     # name, us_per_call, derived
 
+#: set by ``benchmarks/run.py --smoke`` (CI fast mode): clamp every timing
+#: loop to one warmup + one iteration, so rows exist and assertions fire
+#: but wall clock stays in CI budget.  Timings are then indicative only.
+SMOKE = False
+
 
 def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 10,
             reduce: str = "median") -> float:
@@ -18,8 +23,11 @@ def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 10,
     number is steady-state execution only; each timed iteration is
     synchronized (``block_until_ready``) and measured independently, and
     ``reduce`` picks the statistic: "median" (default, robust to scheduler
-    noise), "mean", or "min".
+    noise), "mean", or "min".  Under :data:`SMOKE`, warmup/iters clamp
+    to 1.
     """
+    if SMOKE:
+        warmup, iters = min(warmup, 1), 1
     for _ in range(max(warmup, 0)):
         jax.block_until_ready(fn(*args))
     samples: List[float] = []

@@ -1,14 +1,28 @@
 # One function per paper table/figure + framework benchmarks.
 # Prints ``name,us_per_call,derived`` CSV.
+#
+# ``--smoke`` (CI fast mode) clamps every timing loop to one warmup + one
+# iteration and skips the model-building suites (kernels, train_loop,
+# serving) — the paper-model suites still run end-to-end, so the
+# compile-once assertions and derived columns are exercised on every push.
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
+from benchmarks import common
 from benchmarks.common import emit
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description="benchmark runner")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: 1 warmup + 1 iter per timing, "
+                         "paper-model suites only")
+    args = ap.parse_args()
+    common.SMOKE = args.smoke
+
     rows = []
     from benchmarks import (
         bench_flitsim, bench_kernels, bench_paper_figures, bench_roofline,
@@ -22,6 +36,10 @@ def main() -> None:
         ("serving", bench_serving.run),
         ("roofline", bench_roofline.run),
     ]
+    if args.smoke:
+        skipped = {"kernels", "train_loop", "serving"}
+        suites = [(n, fn) for n, fn in suites if n not in skipped]
+        print(f"# smoke mode: skipping {sorted(skipped)}", file=sys.stderr)
     failed = []
     print("name,us_per_call,derived")
     for name, fn in suites:

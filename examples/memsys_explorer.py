@@ -21,11 +21,16 @@ Three modes:
   * bridge mode — the batched workload->design-space bridge: every
     workload's HLO-derived traffic mix (from dry-run artifacts when
     present, representative train/prefill/decode workloads otherwise)
-    is stacked as a configs axis on top of the dense mix grid and a
-    shoreline axis, and the whole [configs x catalog x mixes x
-    shorelines] space resolves through ONE compiled catalog evaluation.
-    Each workload reports its frontier: best system, read-fraction
-    crossovers, shoreline sensitivity.
+    is stacked as a workload_config axis on top of the dense mix grid and
+    a shoreline axis (the axes-first DesignSpace API), and the whole
+    [configs x catalog x mixes x shorelines] space resolves through ONE
+    compiled catalog evaluation.  Each workload reports its frontier:
+    best system, read-fraction crossovers, shoreline sensitivity.  The
+    mode then runs the joint (mix x backlog x shoreline)
+    analytic-vs-flit-simulated frontier and flags the regions where the
+    cycle-level simulation disagrees with the closed forms about the best
+    memory system, and writes the whole report to
+    experiments/dryrun/design_space.json (the CI artifact).
 
         PYTHONPATH=src python examples/memsys_explorer.py --bridge
 """
@@ -41,6 +46,13 @@ from repro.core import TrafficMix, rank, SelectionConstraints
 
 DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
                       "dryrun")
+
+def _cell_files():
+    # the aggregate design-space report lives next to the per-cell
+    # artifacts but has a different schema — per-cell globs must skip it
+    from repro.roofline.analysis import DESIGN_SPACE_JSON
+    return sorted(f for f in glob.glob(os.path.join(DRYRUN, "*.json"))
+                  if os.path.basename(f) != DESIGN_SPACE_JSON)
 
 
 def explore(d: dict):
@@ -135,10 +147,11 @@ REPRESENTATIVE_WORKLOADS = {
 def bridge_mode(n_fracs: int = 41, shorelines=(2.0, 4.0, 8.0, 16.0)):
     """Batched workload->design-space bridge over all available cells."""
     from repro.core.memsys import grid_cache_stats
+    from repro.core.space import joint_frontier
     from repro.roofline.analysis import RooflineReport, bridge_design_space
 
     reports = {}
-    for f in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+    for f in _cell_files():
         with open(f) as fh:
             d = json.load(fh)
         reports[f"{d['arch']}__{d['shape']}__{d['mesh']}"] = RooflineReport(
@@ -187,6 +200,44 @@ def bridge_mode(n_fracs: int = 41, shorelines=(2.0, 4.0, 8.0, 16.0)):
             print(f"    shoreline-insensitive ({budgets} mm)")
         print()
 
+    # joint (mix x backlog x shoreline) analytic-vs-simulated frontier:
+    # where do the closed forms and the cycle-level simulation DISAGREE
+    # about the best memory system?
+    t0 = time.perf_counter()
+    jf = joint_frontier()          # canonical artifact grid (its defaults)
+    dt = time.perf_counter() - t0
+    n_jf = (len(jf["read_fractions"]) * len(jf["backlogs"])
+            * len(jf["shorelines"]))
+    print(f"analytic-vs-simulated frontier: {n_jf} joint "
+          f"(mix x backlog x shoreline) points in {dt:.2f}s; winners "
+          f"disagree on {jf['disagreement_fraction']:.0%} of the space")
+    errs = ", ".join(f"{k}={v:.1%}"
+                     for k, v in jf["protocol_rel_err"].items())
+    print(f"    worst simulated-vs-analytic efficiency error: {errs}")
+    if jf["disagreement_regions"]:
+        print("    disagreement regions (simulation overrules the closed "
+              "forms):")
+        for r in jf["disagreement_regions"][:8]:
+            print(f"      backlog={r['backlog']:g} "
+                  f"shoreline={r['shoreline_mm']:g}mm read fraction "
+                  f"{r['read_fraction_lo']:.2f}-{r['read_fraction_hi']:.2f}"
+                  f": analytic {r['analytic_best']} -> simulated "
+                  f"{r['simulated_best']}")
+        extra = len(jf["disagreement_regions"]) - 8
+        if extra > 0:
+            print(f"      ... and {extra} more regions")
+    else:
+        print("    no disagreement: the closed forms pick the simulated "
+              "winner everywhere")
+
+    from repro.roofline.analysis import DESIGN_SPACE_JSON
+    ds["joint_frontier"] = jf
+    os.makedirs(DRYRUN, exist_ok=True)
+    out_path = os.path.join(DRYRUN, DESIGN_SPACE_JSON)
+    with open(out_path, "w") as f:
+        json.dump(ds, f, indent=1)
+    print(f"\nwrote {os.path.relpath(out_path)}")
+
 
 def main():
     args = [a for a in sys.argv[1:]]
@@ -199,7 +250,7 @@ def main():
     if args:
         files = [args[0]]
     else:
-        files = sorted(glob.glob(os.path.join(DRYRUN, "*.json")))[:3]
+        files = _cell_files()[:3]
     if not files:
         print("no dry-run artifacts; run "
               "`PYTHONPATH=src python -m repro.launch.dryrun --all` first "

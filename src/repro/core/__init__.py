@@ -1,7 +1,35 @@
-# The paper's primary contribution: analytical models of on-package memory
-# over UCIe (approaches A-E), incumbent-bus baselines, latency/power/cost
-# models, and a flit-level discrete-event simulator that validates the
-# closed forms.
+"""repro.core — the paper's models behind one axes-first design-space API.
+
+The primary contribution: analytical models of on-package memory over UCIe
+(approaches A-E), incumbent-bus baselines, latency/power/cost models, and a
+flit-level discrete-event simulator that validates the closed forms.
+
+The design-space surface is AXES-FIRST (:mod:`repro.core.space`): declare
+named axes — ``read_fraction`` / ``mix``, ``backlog``, ``shoreline_mm``,
+``workload_config``, ``protocol``, ``protocol_param``, and the pipelining
+axes ``k`` / ``ucie_line_ui`` / ``device_line_ui`` — and a
+:class:`DesignSpace` lowers any combination onto the batched engines
+through ONE shared shape-keyed compile cache, returning a named-axis
+:class:`SpaceResult` with ``sel()`` / ``frontier()`` / ``argbest()``
+queries:
+
+    from repro.core import DesignSpace, axis
+    res = DesignSpace([
+        axis("read_fraction", [0.0, 0.5, 1.0]),
+        axis("backlog", [4, 64]),
+        axis("shoreline_mm", [4.0, 8.0]),
+    ]).evaluate()
+    res["bandwidth_gbs"].argbest("system")      # frontier labels
+    res["sim_efficiency"].sel(backlog=64)
+
+Legacy front-ends (``flitsim.sweep*``, ``memsys.catalog_grid`` /
+``approach_grid``, ``selector.rank_grid``,
+``analysis.bridge_design_space``) are thin compatibility wrappers over the
+same engines and cache — identical numerics, shared warm executables.
+:func:`joint_frontier` is the first capability only the unified API can
+express: the (mix x backlog x shoreline) frontier marking where the flit
+simulation and the closed forms disagree about the best memory system.
+"""
 from repro.core.ucie import (
     UCIePhy, Packaging, UCIE_S_32G, UCIE_A_32G_55U, UCIE_A_32G_45U,
     IDLE_POWER_FRACTION, table1,
@@ -15,6 +43,10 @@ from repro.core.protocols import (
 from repro.core.latency import (
     UCIeMemoryLatency, MEASURED_FRONTEND_LATENCY_NS, latency_speedup,
 )
+from repro.core.space import (
+    Axis, AxisSet, DesignSpace, OWN_MIX, SpaceArray, SpaceResult, axis,
+    cache_stats, clear_cache, joint_frontier, regimes,
+)
 from repro.core.memsys import (
     CatalogGrid, MemorySystem, catalog_grid, grid_cache_stats,
     standard_catalog,
@@ -22,4 +54,4 @@ from repro.core.memsys import (
 from repro.core.selector import (
     GridRanking, RankedSystem, SelectionConstraints, best, rank, rank_grid,
 )
-from repro.core import cost, flitsim
+from repro.core import cost, flitsim, space

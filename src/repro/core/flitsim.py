@@ -19,20 +19,28 @@ exactly what the analytic max() terms capture.
 Batched API
 -----------
 ``SymmetricFlitParams`` and ``AsymmetricLaneParams`` are registered pytrees,
-so parameter *stacks* (one leading axis per protocol) flow straight through
-``jax.vmap``.  One jitted ``lax.scan`` evaluates an entire
-``[P protocols, B backlogs, M mixes]`` grid in a single compiled program:
+so parameter *stacks* (one leading axis per protocol, optionally folded with
+a perturbation axis) flow straight through ``jax.vmap``.  One jitted
+``lax.scan`` evaluates an entire ``[P protocols, B backlogs, M mixes]`` grid
+in a single compiled program.  :func:`simulate_grid` is the engine entry
+point the axes-first :class:`repro.core.space.DesignSpace` lowers onto; the
+legacy front-ends are thin wrappers over it:
 
     res = flitsim.sweep()                       # 5 protocols x 5 mixes
     res = flitsim.sweep(mixes=grid, backlogs=[16, 64, 128])
     res.efficiency                              # [P, B, M] (or [P, M])
+    flitsim.sweep_perturbed([{}, {"credit_lines": 0.5}])   # sensitivity
 
-``sweep_pipelining(ks)`` batches the Fig-13 model over device counts the
-same way.  Compiled executables are memoized in a module-level cache keyed
-on (family, grid shape, static lengths) — a second identically-shaped sweep
-reuses the warm executable with zero retracing (``compile_cache_stats()``
-exposes hit/miss counters; tests assert no retrace).  The scalar entry
-points ``simulate_symmetric`` / ``simulate_asymmetric`` /
+``sweep_pipelining`` batches the Fig-13 model over device counts — and,
+when ``ucie_line_ui`` / ``device_line_ui`` are sequences, over the full
+``[k x ucie_line_ui x device_line_ui]`` joint grid (faster DRAM generations
+behind the logic die).  Compiled executables are memoized in the SHARED
+design-space cache (:mod:`repro.core.space`) keyed on (family, grid shape,
+static lengths) — a second identically-shaped sweep from ANY front-end
+(``sweep``, a ``DesignSpace`` evaluation, a scalar ``simulate_*`` call)
+reuses the warm executable with zero retracing.  ``compile_cache_stats()``
+exposes this module's slice of the shared counters; the scalar entry points
+``simulate_symmetric`` / ``simulate_asymmetric`` /
 ``simulate_lpddr6_pipelining`` are thin wrappers over a ``[1, 1, 1]`` grid,
 so they share the same cache and numerics bit-for-bit with ``sweep()``.
 """
@@ -40,12 +48,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import space as space_mod
+from repro.core.space import CacheStats, cached_program
 from repro.core.protocols.chi_ucie import CHIOnUCIe
 from repro.core.protocols.cxl_mem import CXLMemOnUCIe
 from repro.core.protocols.cxl_mem_opt import CXLMemOptOnUCIe
@@ -62,7 +72,6 @@ def _check_mix(x: float, y: float) -> None:
     if x < 0 or y < 0 or x + y <= 0:
         raise ValueError(f"invalid traffic mix x={x} y={y}: need x, y >= 0 "
                          "and x + y > 0")
-
 
 def _register_params_pytree(cls):
     """Register a frozen params dataclass as a pytree (all fields leaves).
@@ -87,6 +96,14 @@ class _Stackable:
         names = [f.name for f in dataclasses.fields(cls)]
         return cls(*[_f32([getattr(p, n) for p in params]) for n in names])
 
+    def perturbed(self, pert: Mapping[str, float]) -> "_Stackable":
+        """Scale the named fields multiplicatively (fields this family
+        doesn't have are ignored — validated upstream)."""
+        fields = {f.name for f in dataclasses.fields(type(self))}
+        rep = {k: float(getattr(self, k)) * float(s)
+               for k, s in pert.items() if k in fields}
+        return dataclasses.replace(self, **rep) if rep else self
+
 
 @_register_params_pytree
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +119,10 @@ class SymmetricFlitParams(_Stackable):
     data_slots_per_line: Any     # slots per 64 B line
     slot_bits: Any               # payload slot size in bits
     flit_bits: Any = 2048        # 256 B
+    #: in-flight read-return credit, in flits' worth of payload slots —
+    #: the credit limit is ``credit_lines * g_slots`` slots (default 8
+    #: flits, the pre-perturbation constant)
+    credit_lines: Any = 8.0
 
     @classmethod
     def cxl_unopt(cls) -> "SymmetricFlitParams":
@@ -148,6 +169,19 @@ class AsymmetricLaneParams(_Stackable):
                    cmd_lanes=24, cmd_bits_per_access=96)
 
 
+#: every flit-simulator parameter field a perturbation may scale
+PERTURBABLE_FIELDS: Tuple[str, ...] = tuple(sorted(
+    {f.name for f in dataclasses.fields(SymmetricFlitParams)}
+    | {f.name for f in dataclasses.fields(AsymmetricLaneParams)}))
+
+
+def _check_perturbation(pert: Mapping[str, float]) -> None:
+    unknown = [k for k in pert if k not in PERTURBABLE_FIELDS]
+    if unknown:
+        raise ValueError(f"unknown perturbation fields {unknown}; choose "
+                         f"from {PERTURBABLE_FIELDS}")
+
+
 # -- simulator cores (traced params; static lengths only) ---------------------
 
 
@@ -166,7 +200,7 @@ def _symmetric_efficiency(p: SymmetricFlitParams, x, y, backlog,
     xr = x / tot
     yr = y / tot
     dpl = p.data_slots_per_line
-    rdata_limit = 8.0 * p.g_slots         # in-flight read-data credit (slots)
+    rdata_limit = p.credit_lines * p.g_slots  # in-flight read credit (slots)
     hdr_cap = p.reqs_per_h * p.h_slots + p.reqs_per_g * p.g_slots
     resp_cap = p.resps_per_h * p.h_slots + p.resps_per_g * p.g_slots
     reqs_per_g = jnp.maximum(_f32(p.reqs_per_g), 1e-9)
@@ -307,89 +341,127 @@ def _asymmetric_grid(pstack, x, y, *, n_accesses: int):
     return jax.vmap(over_m, in_axes=(0, None, None))(pstack, x, y)
 
 
-def _pipelining_grid(ks, ucie_line_ui, device_line_ui, *, max_k: int,
+def _pipelining_grid(ks, ucie_line_uis, device_line_uis, *, max_k: int,
                      n_lines: int):
-    """[K device-counts] -> link utilization [K]."""
-    point = lambda k: _pipelining_utilization(
-        k, ucie_line_ui, device_line_ui, max_k, n_lines)
-    return jax.vmap(point)(ks)
+    """[K device-counts] x [U link-UIs] x [D device-UIs] -> utilization
+    [K, U, D] — the joint faster-DRAM-generations sweep."""
+    point = lambda k, u, d: _pipelining_utilization(k, u, d, max_k, n_lines)
+    over_d = jax.vmap(point, in_axes=(None, None, 0))
+    over_ud = jax.vmap(over_d, in_axes=(None, 0, None))
+    over_kud = jax.vmap(over_ud, in_axes=(0, None, None))
+    return over_kud(ks, ucie_line_uis, device_line_uis)
 
 
-# -- module-level compile cache ----------------------------------------------
-
-
-@dataclasses.dataclass
-class CacheStats:
-    """Compile-cache counters: one miss == one trace+compile."""
-
-    hits: int = 0
-    misses: int = 0
-
-
-_COMPILE_CACHE: Dict[Tuple, Any] = {}
-_CACHE_STATS = CacheStats()
+# -- shared compile cache (repro.core.space) ---------------------------------
 
 
 def compile_cache_stats() -> CacheStats:
-    """Snapshot of the sweep-engine compile cache (hits / misses)."""
-    return dataclasses.replace(_CACHE_STATS)
+    """This module's slice of the SHARED design-space compile cache
+    (families ``flitsim.*``): hits / misses, one miss == one compile."""
+    return space_mod.cache_stats(space_mod.FLITSIM_FAMILIES)
 
 
 def clear_compile_cache() -> None:
-    """Drop all cached executables and reset the hit/miss counters."""
-    _COMPILE_CACHE.clear()
-    _CACHE_STATS.hits = 0
-    _CACHE_STATS.misses = 0
-
-
-def _cached_executable(key: Tuple, fn, example_args: Tuple):
-    """Return a compiled executable for ``fn`` memoized on ``key``.
-
-    The key encodes the simulator family, the grid shape and every static
-    length, so a second identically-shaped sweep is a cache hit and runs
-    with zero retracing.  Ahead-of-time compilation (``lower().compile()``)
-    is preferred; if the backend refuses, the jitted callable (with jax's
-    own in-memory cache) is stored instead.
-    """
-    entry = _COMPILE_CACHE.get(key)
-    if entry is not None:
-        _CACHE_STATS.hits += 1
-        return entry
-    _CACHE_STATS.misses += 1
-    jitted = jax.jit(fn)
-    try:
-        entry = jitted.lower(*example_args).compile()
-    except Exception:          # pragma: no cover - backend-specific fallback
-        entry = jitted
-    _COMPILE_CACHE[key] = entry
-    return entry
+    """Drop this module's cached executables and reset its counters."""
+    space_mod.clear_cache(space_mod.FLITSIM_FAMILIES)
 
 
 def _run_symmetric(pstack, x, y, backlogs, n_flits: int):
-    key = ("symmetric", pstack.g_slots.shape[0], backlogs.shape[0],
-           x.shape[0], n_flits)
-    fn = _cached_executable(
-        key, functools.partial(_symmetric_grid, n_flits=n_flits),
+    fn = cached_program(
+        "flitsim.symmetric",
+        (pstack.g_slots.shape[0], backlogs.shape[0], x.shape[0], n_flits),
+        functools.partial(_symmetric_grid, n_flits=n_flits),
         (pstack, x, y, backlogs))
     return fn(pstack, x, y, backlogs)
 
 
 def _run_asymmetric(pstack, x, y, n_accesses: int):
-    key = ("asymmetric", pstack.total_lanes.shape[0], x.shape[0], n_accesses)
-    fn = _cached_executable(
-        key, functools.partial(_asymmetric_grid, n_accesses=n_accesses),
+    fn = cached_program(
+        "flitsim.asymmetric",
+        (pstack.total_lanes.shape[0], x.shape[0], n_accesses),
+        functools.partial(_asymmetric_grid, n_accesses=n_accesses),
         (pstack, x, y))
     return fn(pstack, x, y)
 
 
-def _run_pipelining(ks, ucie_line_ui, device_line_ui, max_k: int,
+def _run_pipelining(ks, ucie_line_uis, device_line_uis, max_k: int,
                     n_lines: int):
-    key = ("pipelining", ks.shape[0], max_k, n_lines)
-    fn = _cached_executable(
-        key,
+    fn = cached_program(
+        "flitsim.pipelining",
+        (ks.shape[0], ucie_line_uis.shape[0], device_line_uis.shape[0],
+         max_k, n_lines),
         functools.partial(_pipelining_grid, max_k=max_k, n_lines=n_lines),
-        (ks, ucie_line_ui, device_line_ui))
-    return fn(ks, ucie_line_ui, device_line_ui)
+        (ks, ucie_line_uis, device_line_uis))
+    return fn(ks, ucie_line_uis, device_line_uis)
+
+
+# -- engine entry point (what DesignSpace lowers onto) ------------------------
+
+
+def simulate_grid(protocols: Sequence[str], x, y, backlogs, *,
+                  perturbations: Optional[Sequence[Mapping[str, float]]]
+                  = None,
+                  n_flits: int = 2048,
+                  n_accesses: int = 4096) -> jnp.ndarray:
+    """Evaluate the full ``[Q perturbations, P protocols, B backlogs,
+    M mixes]`` grid, one compiled call per simulator family.
+
+    ``x`` / ``y`` are flat ``[M]`` mix arrays; ``backlogs`` is ``[B]``
+    (symmetric family only — asymmetric rows broadcast across it).
+    ``perturbations`` are multiplicative ``{field: scale}`` overrides
+    folded into the parameter stacks (the protocol axis becomes ``Q*P``
+    rows of one pytree), so sensitivity sweeps ride the exact same
+    executables as the baseline.  Returns efficiency ``[Q, P, B, M]``.
+    """
+    keys = tuple(protocols)
+    unknown = [k for k in keys
+               if k not in SYMMETRIC_PARAMS and k not in ASYMMETRIC_PARAMS]
+    if unknown:
+        raise ValueError(f"unknown protocol keys {unknown}; "
+                         f"choose from {sorted(SIMULATORS)}")
+    perts = [dict(p) for p in (perturbations or [{}])]
+    active_fields: set = set()
+    if any(k in SYMMETRIC_PARAMS for k in keys):
+        active_fields |= {f.name
+                          for f in dataclasses.fields(SymmetricFlitParams)}
+    if any(k in ASYMMETRIC_PARAMS for k in keys):
+        active_fields |= {f.name
+                          for f in dataclasses.fields(AsymmetricLaneParams)}
+    for p in perts:
+        _check_perturbation(p)
+        # a perturbation that touches NO field of the selected families
+        # would silently produce a baseline row labeled as perturbed
+        if p and not set(p) & active_fields:
+            raise ValueError(
+                f"perturbation {p} applies to no parameter of the selected "
+                f"protocols {keys}; applicable fields: "
+                f"{sorted(active_fields)}")
+    x = _f32(np.asarray(x).reshape(-1))
+    y = _f32(np.asarray(y).reshape(-1))
+    b = _f32(np.asarray(backlogs).reshape(-1))
+    n_q, n_b, n_m = len(perts), b.shape[0], x.shape[0]
+
+    per_key: Dict[str, jnp.ndarray] = {}            # key -> [Q, B, M]
+    sym_keys = [k for k in keys if k in SYMMETRIC_PARAMS]
+    if sym_keys:
+        pstack = SymmetricFlitParams.stack(
+            [SYMMETRIC_PARAMS[k].perturbed(p) for p in perts
+             for k in sym_keys])
+        grid = _run_symmetric(pstack, x, y, b, int(n_flits))
+        grid = grid.reshape((n_q, len(sym_keys), n_b, n_m))
+        for i, k in enumerate(sym_keys):
+            per_key[k] = grid[:, i]
+    asym_keys = [k for k in keys if k in ASYMMETRIC_PARAMS]
+    if asym_keys:
+        pstack = AsymmetricLaneParams.stack(
+            [ASYMMETRIC_PARAMS[k].perturbed(p) for p in perts
+             for k in asym_keys])
+        grid = _run_asymmetric(pstack, x, y, int(n_accesses))
+        grid = grid.reshape((n_q, len(asym_keys), n_m))
+        for i, k in enumerate(asym_keys):
+            per_key[k] = jnp.broadcast_to(grid[:, i, None, :],
+                                          (n_q, n_b, n_m))
+    return jnp.stack([per_key[k] for k in keys], axis=1)   # [Q, P, B, M]
 
 
 # -- scalar entry points (thin wrappers over a [1, 1, 1] grid) ----------------
@@ -424,9 +496,9 @@ def simulate_lpddr6_pipelining(num_devices: int, n_lines: int = 512,
     """Single-k Fig-13 pipelining simulation; shares the sweep cache."""
     max_k = max(int(num_devices), _PIPELINING_PAD_K)
     u = _run_pipelining(jnp.asarray([num_devices], jnp.int32),
-                        _f32(ucie_line_ui), _f32(device_line_ui),
+                        _f32([ucie_line_ui]), _f32([device_line_ui]),
                         max_k, int(n_lines))
-    return float(u[0])
+    return float(u[0, 0, 0])
 
 
 # -- sweep API ---------------------------------------------------------------
@@ -488,6 +560,10 @@ def sweep(protocols: Optional[Sequence[str]] = None,
     """Evaluate a full ``protocols x backlogs x mixes`` grid in one compiled
     call per simulator family.
 
+    Compatibility wrapper over the shared design-space engine
+    (:func:`simulate_grid` — what :class:`repro.core.space.DesignSpace`
+    lowers onto): identical numerics, identical compile-cache keys.
+
     Args:
       protocols: keys from :data:`SIMULATORS` (default: all five).
       mixes: sequence of ``(x, y)`` tuples or ``TrafficMix`` objects
@@ -513,39 +589,44 @@ def sweep(protocols: Optional[Sequence[str]] = None,
         backlog_vals = tuple(
             float(b) for b in np.atleast_1d(np.asarray(backlogs)))
 
-    unknown = [k for k in keys
-               if k not in SYMMETRIC_PARAMS and k not in ASYMMETRIC_PARAMS]
-    if unknown:
-        raise ValueError(f"unknown protocol keys {unknown}; "
-                         f"choose from {sorted(SIMULATORS)}")
-
     x = _f32([m[0] for m in mix_tuples])
     y = _f32([m[1] for m in mix_tuples])
-    b = _f32(backlog_vals)
-    n_b, n_m = len(backlog_vals), len(mix_tuples)
-
-    per_key: Dict[str, jnp.ndarray] = {}
-    sym_keys = [k for k in keys if k in SYMMETRIC_PARAMS]
-    if sym_keys:
-        pstack = SymmetricFlitParams.stack(
-            [SYMMETRIC_PARAMS[k] for k in sym_keys])
-        grid = _run_symmetric(pstack, x, y, b, int(n_flits))   # [Ps, B, M]
-        for i, k in enumerate(sym_keys):
-            per_key[k] = grid[i]
-    asym_keys = [k for k in keys if k in ASYMMETRIC_PARAMS]
-    if asym_keys:
-        pstack = AsymmetricLaneParams.stack(
-            [ASYMMETRIC_PARAMS[k] for k in asym_keys])
-        grid = _run_asymmetric(pstack, x, y, int(n_accesses))  # [Pa, M]
-        for i, k in enumerate(asym_keys):
-            per_key[k] = jnp.broadcast_to(grid[i][None, :], (n_b, n_m))
-
-    eff = jnp.stack([per_key[k] for k in keys])                # [P, B, M]
+    eff = simulate_grid(keys, x, y, backlog_vals, n_flits=n_flits,
+                        n_accesses=n_accesses)[0]          # [P, B, M]
     if squeeze_b:
         return SweepResult(protocols=keys, mixes=mix_tuples, backlogs=None,
                            efficiency=eff[:, 0, :])
     return SweepResult(protocols=keys, mixes=mix_tuples,
                        backlogs=backlog_vals, efficiency=eff)
+
+
+def sweep_perturbed(perturbations: Sequence[Mapping[str, float]],
+                    protocols: Optional[Sequence[str]] = None,
+                    mixes=None,
+                    backlogs: Union[None, float, Sequence[float]] = None,
+                    *, n_flits: int = 2048, n_accesses: int = 4096):
+    """Protocol-parameter sensitivity sweep: multiplicative ``{field:
+    scale}`` perturbations (slot counts, credit limits, lane splits) over
+    the existing pytree param stacks.
+
+    Front-end over the axes-first API: returns a
+    :class:`repro.core.space.SpaceResult` whose ``sim_efficiency`` array
+    carries a ``protocol_param`` axis — include ``{}`` as the first
+    perturbation to get the baseline row for free.
+    """
+    from repro.core.space import DesignSpace, axis
+    keys = tuple(protocols) if protocols is not None else tuple(SIMULATORS)
+    axes = [axis("protocol_param", list(perturbations)),
+            axis("protocol", keys),
+            axis("mix", _normalize_mixes(mixes))]
+    if backlogs is not None and np.ndim(backlogs) > 0:
+        axes.append(axis("backlog", list(np.atleast_1d(backlogs))))
+        default_backlog = 64.0
+    else:
+        default_backlog = 64.0 if backlogs is None else float(backlogs)
+    return DesignSpace(axes, default_backlog=default_backlog,
+                       n_flits=n_flits, n_accesses=n_accesses).evaluate(
+        metrics=("sim_efficiency",))
 
 
 #: Default queue-depth axis for knee extraction — doubling steps wide
@@ -557,11 +638,18 @@ KNEE_BACKLOGS: Tuple[float, ...] = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0,
 def backlog_knees(mixes=None,
                   backlogs: Sequence[float] = KNEE_BACKLOGS,
                   knee_frac: float = 0.95,
-                  n_flits: int = 2048) -> Dict[str, float]:
+                  n_flits: int = 2048,
+                  per_mix: bool = False) -> Dict[str, Any]:
     """Efficiency-cliff knee per simulated protocol: the smallest request
     backlog at which simulated data efficiency reaches ``knee_frac`` of
-    that protocol's best efficiency over the backlog axis, maximized over
-    ``mixes`` (conservative: a protocol must hit its knee on every mix).
+    that protocol's best efficiency over the backlog axis.
+
+    By default the knee is maximized over ``mixes`` (conservative: a
+    protocol must hit its knee on every mix) and the result is a scalar
+    per protocol.  With ``per_mix=True`` the per-mix knees are returned as
+    a ``[M]`` array per protocol — this is what lets the bridge follow
+    each workload's own HLO-derived mix along the configs axis instead of
+    the canonical-mix envelope.
 
     One :func:`sweep` call over the ``[P, B, M]`` grid — repeated calls
     with the same grid shape reuse the warm executable.  Asymmetric
@@ -572,24 +660,35 @@ def backlog_knees(mixes=None,
     res = sweep(mixes=mixes, backlogs=backlogs, n_flits=n_flits)
     eff = np.asarray(res.efficiency)                    # [P, B, M]
     b = np.asarray(res.backlogs, dtype=np.float64)
-    knees: Dict[str, float] = {}
+    knees: Dict[str, Any] = {}
     for i, key in enumerate(res.protocols):
         e = eff[i]                                      # [B, M]
         ok = e >= knee_frac * e.max(axis=0, keepdims=True)
         first = np.argmax(ok, axis=0)                   # per-mix knee index
-        knees[key] = float(b[first].max())
+        knees[key] = b[first] if per_mix else float(b[first].max())
     return knees
 
 
 def sweep_pipelining(ks: Sequence[int], n_lines: int = 512,
-                     ucie_line_ui: float = 16,
-                     device_line_ui: float = 64) -> jnp.ndarray:
-    """Batched Fig-13 model: link utilization ``[K]`` for device counts
-    ``ks``, one compiled call."""
+                     ucie_line_ui: Union[float, Sequence[float]] = 16,
+                     device_line_ui: Union[float, Sequence[float]] = 64,
+                     ) -> jnp.ndarray:
+    """Batched Fig-13 model, one compiled call.
+
+    Scalar ``ucie_line_ui`` / ``device_line_ui`` give link utilization
+    ``[K]`` over device counts ``ks`` (legacy behavior).  Passing
+    sequences sweeps the joint ``[K, U, D]`` grid — modeling faster DRAM
+    generations (smaller ``device_line_ui``) and faster UCIe links
+    (smaller ``ucie_line_ui``) behind the logic die.
+    """
     ks = tuple(int(k) for k in ks)
+    squeeze = (np.ndim(ucie_line_ui) == 0 and np.ndim(device_line_ui) == 0)
+    us = _f32(np.atleast_1d(np.asarray(ucie_line_ui, dtype=np.float64)))
+    ds = _f32(np.atleast_1d(np.asarray(device_line_ui, dtype=np.float64)))
     max_k = max(max(ks), _PIPELINING_PAD_K)
-    return _run_pipelining(jnp.asarray(ks, jnp.int32), _f32(ucie_line_ui),
-                           _f32(device_line_ui), max_k, int(n_lines))
+    util = _run_pipelining(jnp.asarray(ks, jnp.int32), us, ds,
+                           max_k, int(n_lines))
+    return util[:, 0, 0] if squeeze else util
 
 
 # -- convenience: analytic counterparts for the property tests ---------------

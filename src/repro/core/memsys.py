@@ -5,10 +5,16 @@ This is the object the roofline bridge consumes: given a workload's traffic
 mix it answers "what data bandwidth, pJ/b and latency does this memory
 system deliver, for a given shoreline budget?".
 
-Batched evaluation: :func:`catalog_grid` and :func:`approach_grid` stack
-every system's closed-form metrics into ``[S, ...]`` arrays produced by a
-single jitted (and memoized) program, so a dense traffic-mix grid over the
-whole catalog costs one compiled call instead of a per-system Python loop.
+Batched evaluation: :func:`run_catalog_program` stacks every system's
+closed-form metrics into ``[S, ...]`` arrays produced by a single compiled
+(and memoized) program — this is the analytic engine the axes-first
+:class:`repro.core.space.DesignSpace` lowers onto.  Executables live in the
+SHARED design-space compile cache (:mod:`repro.core.space`), keyed on
+(catalog, grid shapes): any front-end — ``catalog_grid``, ``rank_grid``,
+``bridge_design_space``, or a ``DesignSpace`` evaluation — that requests an
+identically-shaped grid runs the warm executable.  :func:`catalog_grid` and
+:func:`approach_grid` remain as compatibility wrappers returning the legacy
+stacked dataclasses.
 """
 from __future__ import annotations
 
@@ -16,10 +22,11 @@ import dataclasses
 import functools
 from typing import Dict, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import latency as latency_mod
+from repro.core import space as space_mod
+from repro.core.space import CacheStats, cached_program
 from repro.core.protocols import (
     ALL_APPROACHES, BASELINES, BidirectionalBusMemory, MemoryProtocol,
 )
@@ -109,47 +116,49 @@ class CatalogGrid:
     relative_bit_cost: jnp.ndarray
 
 
-@dataclasses.dataclass
-class GridCacheStats:
-    """Catalog-grid compile counters: one miss == one trace+compile of the
-    stacked program (new catalog or new grid shape); hits run warm."""
-
-    hits: int = 0
-    misses: int = 0
+#: legacy alias — the shared-cache counters use one stats type now
+GridCacheStats = CacheStats
 
 
-_GRID_STATS = GridCacheStats()
-
-
-def grid_cache_stats() -> GridCacheStats:
-    """Snapshot of the batched catalog-grid compile counters."""
-    return dataclasses.replace(_GRID_STATS)
+def grid_cache_stats() -> CacheStats:
+    """This module's slice of the SHARED design-space compile cache
+    (families ``memsys.*``): one miss == one trace+compile of a stacked
+    program (new catalog or new grid shape); hits run warm."""
+    return space_mod.cache_stats(space_mod.MEMSYS_FAMILIES)
 
 
 def clear_grid_cache() -> None:
     """Drop the memoized grid programs and reset the hit/miss counters."""
-    _catalog_grid_fn.cache_clear()
-    _approach_grid_fn.cache_clear()
-    _GRID_STATS.hits = 0
-    _GRID_STATS.misses = 0
+    space_mod.clear_cache(space_mod.MEMSYS_FAMILIES)
 
 
-@functools.lru_cache(maxsize=8)
-def _catalog_grid_fn(items: Tuple[Tuple[str, MemorySystem], ...]):
+def run_catalog_program(items: Tuple[Tuple[str, MemorySystem], ...],
+                        x, y, shoreline_mm):
+    """Evaluate the stacked catalog program on (x, y, shoreline) arrays.
+
+    The engine entry point ``DesignSpace`` lowers onto.  Returns
+    ``(bandwidth_gbs, pj_per_bit, power_w, gbs_per_watt)``, each
+    ``[S, *broadcast(x, y, shoreline)]``.  Compiled once per (catalog,
+    grid-shape) into the shared design-space cache.
+    """
+    items = tuple(items)
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    sl = jnp.asarray(shoreline_mm, jnp.float32)
     systems = [ms for _, ms in items]
 
-    def fn(x, y, shoreline_mm):
-        # body runs only while jax traces — i.e. once per compile
-        _GRID_STATS.misses += 1
-        bw = jnp.stack([ms.bandwidth_gbs(x, y, shoreline_mm)
-                        for ms in systems])
+    def fn(x, y, sl):
+        bw = jnp.stack([ms.bandwidth_gbs(x, y, sl) for ms in systems])
         pjb = jnp.stack([jnp.broadcast_to(ms.pj_per_bit(x, y), bw.shape[1:])
                          for ms in systems])
         pw = bw * 8.0 * pjb / 1000.0        # GB/s * pJ/b -> W
         gpw = jnp.where(pw > 0, bw / pw, jnp.inf)
         return bw, pjb, pw, gpw
 
-    return jax.jit(fn)
+    prog = cached_program("memsys.catalog",
+                          (items, x.shape, y.shape, sl.shape),
+                          fn, (x, y, sl))
+    return prog(x, y, sl)
 
 
 def catalog_grid(x, y, shoreline_mm=8.0,
@@ -157,22 +166,19 @@ def catalog_grid(x, y, shoreline_mm=8.0,
                  ) -> CatalogGrid:
     """Evaluate every catalog system over a mix grid in one compiled call.
 
-    ``x`` / ``y`` may be scalars or arrays of any (matching) shape, and
-    ``shoreline_mm`` a scalar or an array broadcastable against them (e.g.
-    ``x``/``y`` of shape ``[R, 1]`` with shorelines ``[L]`` gives metric
-    grids ``[S, R, L]``).  The jitted stacked program is memoized per
-    catalog, so repeated grids of the same shape reuse the warm executable
+    Compatibility wrapper over :func:`run_catalog_program` (the shared
+    design-space engine).  ``x`` / ``y`` may be scalars or arrays of any
+    (matching) shape, and ``shoreline_mm`` a scalar or an array
+    broadcastable against them (e.g. ``x``/``y`` of shape ``[R, 1]`` with
+    shorelines ``[L]`` gives metric grids ``[S, R, L]``).  The stacked
+    program is memoized per (catalog, grid shape), so repeated grids of
+    the same shape — from here, from ``rank_grid``, or from a
+    ``DesignSpace`` evaluation — reuse the warm executable
     (``grid_cache_stats()`` exposes hit/miss counters).
     """
     items = (default_catalog_items() if catalog is None
              else tuple(catalog.items()))
-    x = jnp.asarray(x, jnp.float32)
-    y = jnp.asarray(y, jnp.float32)
-    before = _GRID_STATS.misses
-    bw, pjb, pw, gpw = _catalog_grid_fn(items)(
-        x, y, jnp.asarray(shoreline_mm, jnp.float32))
-    if _GRID_STATS.misses == before:
-        _GRID_STATS.hits += 1
+    bw, pjb, pw, gpw = run_catalog_program(items, x, y, shoreline_mm)
     return CatalogGrid(
         keys=tuple(k for k, _ in items),
         bandwidth_gbs=bw, pj_per_bit=pjb, power_w=pw, gbs_per_watt=gpw,
@@ -194,8 +200,13 @@ class ApproachGrid:
     pj_per_bit: jnp.ndarray
 
 
-@functools.lru_cache(maxsize=8)
-def _approach_grid_fn(phy: UCIePhy):
+def run_approach_program(phy: UCIePhy, x, y):
+    """Stacked approach-density program on (x, y); shared-cache memoized.
+
+    Returns ``(linear, areal, pj_per_bit)``, each ``[A, *x.shape]``.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
     protos = tuple(ALL_APPROACHES.values())
 
     def fn(x, y):
@@ -205,14 +216,15 @@ def _approach_grid_fn(phy: UCIePhy):
                                           lin.shape[1:]) for p in protos])
         return lin, areal, pjb
 
-    return jax.jit(fn)
+    prog = cached_program("memsys.approach", (phy, x.shape, y.shape),
+                          fn, (x, y))
+    return prog(x, y)
 
 
 def approach_grid(phy: UCIePhy, x, y) -> ApproachGrid:
     """All approaches' bandwidth-density and pJ/b over a mix grid, stacked
-    and computed in one compiled call per (phy, grid-shape)."""
-    x = jnp.asarray(x, jnp.float32)
-    y = jnp.asarray(y, jnp.float32)
-    lin, areal, pjb = _approach_grid_fn(phy)(x, y)
+    and computed in one compiled call per (phy, grid-shape) — a
+    compatibility wrapper over :func:`run_approach_program`."""
+    lin, areal, pjb = run_approach_program(phy, x, y)
     return ApproachGrid(keys=tuple(ALL_APPROACHES), linear=lin, areal=areal,
                         pj_per_bit=pjb)

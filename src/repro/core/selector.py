@@ -8,10 +8,14 @@ UCIe offers the best power-efficient performance" — falls out of this
 ranking, and the tests assert it does.
 
 Ranking consumes the batched catalog grid (:func:`repro.core.memsys.
-catalog_grid`): every system's metrics come from one stacked, jitted call,
-and :func:`rank_grid` extends the same program to dense mix grids — the
-best system for hundreds of (x, y) points resolves in a single compiled
-evaluation instead of a per-point Python loop.
+catalog_grid` — itself a wrapper over the shared design-space engine in
+:mod:`repro.core.space`): every system's metrics come from one stacked,
+compiled call, and :func:`rank_grid` extends the same program to dense mix
+grids — the best system for hundreds of (x, y) points resolves in a single
+compiled evaluation instead of a per-point Python loop.  The masking /
+argbest core is :func:`grid_ranking`, which also serves the axes-first
+``DesignSpace`` front-ends (``bridge_design_space`` feeds it per-workload
+validity masks for the per-mix backlog-knee budget).
 """
 from __future__ import annotations
 
@@ -64,9 +68,10 @@ def _catalog_items(catalog: Optional[Dict[str, MemorySystem]]):
 
 
 #: catalog approach prefix -> flit-simulator family key (for the knee
-#: constraint).  A2 (native LPDDR6 mapping) shares approach A's asymmetric
-#: lane-group simulator; bus baselines have no simulator entry.
-_CATALOG_SIM_KEYS = {
+#: constraint and the analytic-vs-simulated frontier).  A2 (native LPDDR6
+#: mapping) shares approach A's asymmetric lane-group simulator; bus
+#: baselines have no simulator entry.
+CATALOG_SIM_KEYS = {
     "A:lpddr6-asym": "lpddr6_asym",
     "A2:lpddr6-native": "lpddr6_asym",
     "B:hbm-asym": "hbm_asym",
@@ -74,6 +79,12 @@ _CATALOG_SIM_KEYS = {
     "D:cxl-mem": "cxl_unopt",
     "E:cxl-mem-opt": "cxl_opt",
 }
+
+
+def sim_key_for(catalog_key: str) -> Optional[str]:
+    """Flit-simulator key backing a catalog system key, or ``None`` for
+    bus baselines (which have no cycle-level simulator)."""
+    return CATALOG_SIM_KEYS.get(catalog_key.split("/")[0])
 
 
 @functools.lru_cache(maxsize=1)
@@ -104,7 +115,7 @@ def _static_mask(items, constraints: SelectionConstraints) -> np.ndarray:
                 and ms.relative_bit_cost > constraints.max_relative_bit_cost):
             mask[i] = False
         if knees is not None:
-            sim = _CATALOG_SIM_KEYS.get(key.split("/")[0])
+            sim = sim_key_for(key)
             if sim is not None and knees[sim] > constraints.max_backlog_knee:
                 mask[i] = False
     return mask
@@ -201,30 +212,25 @@ class GridRanking:
         return out.reshape(idx.shape)
 
 
-def rank_grid(x, y,
-              constraints: SelectionConstraints = SelectionConstraints(),
-              catalog: Optional[Dict[str, MemorySystem]] = None,
-              objective: str = "bandwidth",
-              shoreline_mm=None) -> GridRanking:
-    """Rank the whole catalog over a dense mix grid in one compiled call.
+def grid_ranking(items, grid: CatalogGrid,
+                 constraints: SelectionConstraints = SelectionConstraints(),
+                 objective: str = "bandwidth",
+                 valid_mask=None) -> GridRanking:
+    """Mask + argbest core over an already-evaluated :class:`CatalogGrid`.
 
-    ``x`` / ``y`` are arrays of matching shape (e.g. from ``mix_grid``);
-    returns the per-point argbest plus the full masked score grid.
-
-    ``shoreline_mm`` (default: ``constraints.shoreline_mm``) may itself be
-    an array broadcastable against ``x`` — pass ``x``/``y`` of shape
-    ``[R, 1]`` and shorelines of shape ``[L]`` for a 2-D (read-fraction x
-    shoreline) trade-off map whose metrics come out ``[S, R, L]``, still
-    from a single compiled evaluation.
+    ``valid_mask`` (optional, broadcastable against ``[S, *mix_shape]``)
+    adds point-dependent admissibility on top of the constraint masks —
+    this is how the design-space bridge applies each workload's OWN
+    backlog-knee budget along the configs axis instead of the canonical
+    envelope.
     """
-    items = _catalog_items(catalog)
-    if shoreline_mm is None:
-        shoreline_mm = constraints.shoreline_mm
-    grid = catalog_grid(x, y, shoreline_mm, dict(items))
     score = _score(grid, objective)
     valid = jnp.asarray(_static_mask(items, constraints)).reshape(
         (len(items),) + (1,) * (score.ndim - 1))
     valid = jnp.broadcast_to(valid, score.shape)
+    if valid_mask is not None:
+        valid = valid & jnp.broadcast_to(jnp.asarray(valid_mask, bool),
+                                         score.shape)
     if constraints.max_power_w is not None:
         valid = valid & (grid.power_w <= constraints.max_power_w)
     if constraints.required_bandwidth_gbs is not None:
@@ -237,3 +243,32 @@ def rank_grid(x, y,
                            jnp.argmin(masked, axis=0), -1)
     return GridRanking(keys=grid.keys, best_index=best_index,
                        score=masked, valid=valid, grid=grid)
+
+
+def rank_grid(x, y,
+              constraints: SelectionConstraints = SelectionConstraints(),
+              catalog: Optional[Dict[str, MemorySystem]] = None,
+              objective: str = "bandwidth",
+              shoreline_mm=None,
+              valid_mask=None) -> GridRanking:
+    """Rank the whole catalog over a dense mix grid in one compiled call.
+
+    Compatibility wrapper: one :func:`catalog_grid` evaluation (shared
+    design-space engine) followed by :func:`grid_ranking`.
+
+    ``x`` / ``y`` are arrays of matching shape (e.g. from ``mix_grid``);
+    returns the per-point argbest plus the full masked score grid.
+
+    ``shoreline_mm`` (default: ``constraints.shoreline_mm``) may itself be
+    an array broadcastable against ``x`` — pass ``x``/``y`` of shape
+    ``[R, 1]`` and shorelines of shape ``[L]`` for a 2-D (read-fraction x
+    shoreline) trade-off map whose metrics come out ``[S, R, L]``, still
+    from a single compiled evaluation.  ``valid_mask`` adds point-dependent
+    admissibility (see :func:`grid_ranking`).
+    """
+    items = _catalog_items(catalog)
+    if shoreline_mm is None:
+        shoreline_mm = constraints.shoreline_mm
+    grid = catalog_grid(x, y, shoreline_mm, dict(items))
+    return grid_ranking(items, grid, constraints, objective,
+                        valid_mask=valid_mask)

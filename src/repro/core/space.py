@@ -1,0 +1,830 @@
+"""Axes-first design-space API over one shared batched engine.
+
+The paper's headline claims come from sweeping protocol, PHY, traffic mix,
+backlog and shoreline dimensions *jointly*.  This module is the single
+front door to those sweeps:
+
+  * :func:`axis` / :class:`Axis` / :class:`AxisSet` — a declarative spec of
+    named design-space axes (``read_fraction``, ``mix``, ``backlog``,
+    ``shoreline_mm``, ``workload_config``, ``protocol``, ``protocol_param``,
+    and the pipelining axes ``k`` / ``ucie_line_ui`` / ``device_line_ui``).
+  * :class:`DesignSpace` — lowers any requested axis combination onto the
+    existing batched ``lax.scan``/``vmap`` cores (flit simulators, analytic
+    catalog, Fig-13 pipelining) through one shared shape-keyed compile
+    cache, so the full joint space resolves in one compiled program per
+    engine family.
+  * :class:`SpaceResult` / :class:`SpaceArray` — named-axis outputs with
+    label coordinates and ``sel()`` / ``isel()`` / ``argbest()`` /
+    ``frontier()`` queries, replacing the four bespoke result dataclasses
+    the legacy front-ends returned.
+  * :func:`joint_frontier` — the first capability only expressible here:
+    the joint (mix x backlog x shoreline) frontier that merges the
+    flit-simulated efficiency grid with the analytic catalog grid and
+    reports where simulation and the closed forms disagree.
+
+The legacy entry points (``flitsim.sweep`` / ``sweep_pipelining``,
+``memsys.catalog_grid`` / ``approach_grid``, ``selector.rank_grid``,
+``analysis.bridge_design_space``) remain as thin compatibility wrappers
+over this module; they share the cache below, so warming the space through
+one front-end warms every other.
+
+Shared compile cache
+--------------------
+Every batched engine memoizes its compiled executable here, keyed on
+``(family, *static_key)`` where the static key encodes the catalog / param
+stack and every grid shape and static length.  ``cache_stats()`` exposes
+hit/miss counters globally or per family — one miss == one trace+compile;
+tests assert the full joint space compiles exactly once per engine family
+and that legacy wrappers run warm against a space-primed cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (
+    Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union,
+)
+
+import jax
+import numpy as np
+
+# =========================================================================
+# Shared shape-keyed compile cache
+# =========================================================================
+
+#: cache families owned by the flit-simulation engine
+FLITSIM_FAMILIES: Tuple[str, ...] = (
+    "flitsim.symmetric", "flitsim.asymmetric", "flitsim.pipelining")
+#: cache families owned by the analytic memory-system engine
+MEMSYS_FAMILIES: Tuple[str, ...] = ("memsys.catalog", "memsys.approach")
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Compile-cache counters: one miss == one trace+compile."""
+
+    hits: int = 0
+    misses: int = 0
+
+
+_PROGRAMS: Dict[Tuple, Any] = {}
+_FAMILY_STATS: Dict[str, CacheStats] = {}
+#: executables retained per engine family; oldest-inserted evicted beyond
+#: this (an interactive loop minting fresh catalogs/shapes must not pin
+#: every compiled program forever)
+MAX_PROGRAMS_PER_FAMILY = 32
+
+
+def cached_program(family: str, key: Tuple, build_fn: Callable,
+                   example_args: Tuple):
+    """Return a compiled executable for ``build_fn`` memoized on
+    ``(family, *key)``.
+
+    Ahead-of-time compilation (``lower().compile()``) is preferred; if the
+    backend refuses, the jitted callable (with jax's own in-memory cache)
+    is stored instead.  A second identically-keyed request is a cache hit
+    and runs the warm executable with zero retracing.  Each family keeps
+    at most :data:`MAX_PROGRAMS_PER_FAMILY` executables (FIFO eviction).
+    """
+    stats = _FAMILY_STATS.setdefault(family, CacheStats())
+    full_key = (family,) + tuple(key)
+    entry = _PROGRAMS.get(full_key)
+    if entry is not None:
+        stats.hits += 1
+        return entry
+    stats.misses += 1
+    jitted = jax.jit(build_fn)
+    try:
+        entry = jitted.lower(*example_args).compile()
+    except Exception:          # pragma: no cover - backend-specific fallback
+        entry = jitted
+    family_keys = [k for k in _PROGRAMS if k[0] == family]
+    if len(family_keys) >= MAX_PROGRAMS_PER_FAMILY:
+        del _PROGRAMS[family_keys[0]]        # dict order == insertion order
+    _PROGRAMS[full_key] = entry
+    return entry
+
+
+def cache_stats(families: Optional[Sequence[str]] = None) -> CacheStats:
+    """Aggregate hit/miss counters, optionally restricted to ``families``."""
+    out = CacheStats()
+    for fam, st in _FAMILY_STATS.items():
+        if families is None or fam in families:
+            out.hits += st.hits
+            out.misses += st.misses
+    return out
+
+
+def clear_cache(families: Optional[Sequence[str]] = None) -> None:
+    """Drop cached executables (all, or only ``families``) and reset the
+    matching counters."""
+    for key in list(_PROGRAMS):
+        if families is None or key[0] in families:
+            del _PROGRAMS[key]
+    for fam in list(_FAMILY_STATS):
+        if families is None or fam in families:
+            del _FAMILY_STATS[fam]
+
+
+# =========================================================================
+# Axes
+# =========================================================================
+
+#: sentinel mix value: resolve to each workload config's own HLO-derived mix
+OWN_MIX = "own"
+
+#: canonical axis order — result dims always follow this order (with the
+#: implicit ``system`` / ``protocol`` / ``approach`` dims leading)
+AXIS_ORDER: Tuple[str, ...] = (
+    "protocol_param", "protocol", "backlog", "workload_config", "mix",
+    "read_fraction", "shoreline_mm", "k", "ucie_line_ui", "device_line_ui")
+
+_MIX_LIKE = ("mix", "read_fraction")
+
+
+def _mix_label(x: float, y: float) -> str:
+    return f"{x:g}R{y:g}W"
+
+
+def _as_mix_tuple(v) -> Tuple[float, float]:
+    if hasattr(v, "x") and hasattr(v, "y"):         # TrafficMix
+        x, y = float(v.x), float(v.y)
+    else:
+        x, y = v
+        x, y = float(x), float(y)
+    if x < 0 or y < 0 or x + y <= 0:
+        raise ValueError(f"invalid traffic mix x={x} y={y}: need x, y >= 0 "
+                         "and x + y > 0")
+    return x, y
+
+
+def _as_workload(v) -> Tuple[str, Any]:
+    """Normalize a workload_config entry to (name, TrafficMix)."""
+    from repro.core.traffic import TrafficMix
+    name, w = v
+    if hasattr(w, "read_bytes_per_chip"):           # RooflineReport-like
+        w = TrafficMix.from_bytes(w.read_bytes_per_chip,
+                                  w.write_bytes_per_chip)
+    elif not (hasattr(w, "x") and hasattr(w, "y")):
+        x, y = _as_mix_tuple(w)
+        w = TrafficMix(x, y)
+    return str(name), w
+
+
+def _as_perturbation(v) -> Tuple[str, Tuple[Tuple[str, float], ...]]:
+    """Normalize a protocol_param entry to (label, sorted field->scale)."""
+    if isinstance(v, Mapping):
+        label, pert = None, v
+    else:
+        label, pert = v
+    items = tuple(sorted((str(k), float(s)) for k, s in pert.items()))
+    if label is None:
+        # "+"-joined (not ","): labels land in CSV benchmark columns
+        label = "+".join(f"{k}x{s:g}" for k, s in items) or "baseline"
+    return str(label), items
+
+
+@dataclasses.dataclass(frozen=True)
+class Axis:
+    """One named design-space axis: canonical values plus display labels."""
+
+    name: str
+    values: Tuple[Any, ...]
+    labels: Tuple[Any, ...]
+
+    def __len__(self) -> int:
+        return len(self.values)
+
+    def index(self, label) -> int:
+        """Position of ``label`` (accepts raw values for mix-like axes)."""
+        if label in self.labels:
+            return self.labels.index(label)
+        if self.name == "mix" and label != OWN_MIX:
+            return self.labels.index(_mix_label(*_as_mix_tuple(label)))
+        if self.name in ("backlog", "shoreline_mm", "read_fraction",
+                         "ucie_line_ui", "device_line_ui"):
+            return self.labels.index(float(label))
+        if self.name == "k":
+            return self.labels.index(int(label))
+        raise KeyError(f"label {label!r} not on axis {self.name!r}: "
+                       f"{self.labels}")
+
+
+def axis(name: str, values: Sequence[Any],
+         labels: Optional[Sequence[Any]] = None) -> Axis:
+    """Build a validated :class:`Axis`; values are normalized per axis kind.
+
+    ``mix`` accepts ``(x, y)`` tuples, ``TrafficMix`` objects, or the
+    :data:`OWN_MIX` sentinel (resolved per ``workload_config``).
+    ``workload_config`` accepts a mapping or ``(name, mix-or-report)``
+    pairs.  ``protocol_param`` accepts ``{field: scale}`` dicts or
+    ``(label, dict)`` pairs — multiplicative perturbations applied to the
+    flit-simulator parameter stacks.
+    """
+    vals = list(values.items()) if isinstance(values, Mapping) else \
+        list(values)
+    if not vals:
+        raise ValueError(f"axis {name!r} needs at least one value")
+    if name == "mix":
+        norm = [OWN_MIX if (isinstance(v, str) and v == OWN_MIX)
+                else _as_mix_tuple(v) for v in vals]
+        labs = [OWN_MIX if v == OWN_MIX else _mix_label(*v) for v in norm]
+    elif name == "read_fraction":
+        norm = [float(v) for v in vals]
+        for r in norm:
+            if not 0.0 <= r <= 1.0:
+                raise ValueError(f"read_fraction {r} outside [0, 1]")
+        labs = list(norm)
+    elif name == "workload_config":
+        norm = [_as_workload(v) for v in vals]
+        labs = [n for n, _ in norm]
+    elif name == "protocol":
+        norm = [str(v) for v in vals]
+        labs = list(norm)
+    elif name == "protocol_param":
+        norm = [_as_perturbation(v) for v in vals]
+        labs = [lab for lab, _ in norm]
+    elif name == "k":
+        norm = [int(v) for v in vals]
+        labs = list(norm)
+    elif name in ("backlog", "shoreline_mm", "ucie_line_ui",
+                  "device_line_ui"):
+        norm = [float(v) for v in vals]
+        labs = list(norm)
+    else:
+        raise ValueError(f"unknown axis name {name!r}; choose from "
+                         f"{AXIS_ORDER}")
+    if labels is not None:
+        if len(labels) != len(norm):
+            raise ValueError(f"axis {name!r}: {len(labels)} labels for "
+                             f"{len(norm)} values")
+        labs = list(labels)
+    return Axis(name=name, values=tuple(norm), labels=tuple(labs))
+
+
+class AxisSet:
+    """Ordered, validated collection of axes (canonical order, unique
+    names, ``mix``/``read_fraction`` mutually exclusive)."""
+
+    def __init__(self, *axes: Union[Axis, Sequence[Axis]]):
+        flat: List[Axis] = []
+        for a in axes:
+            if isinstance(a, Axis):
+                flat.append(a)
+            else:
+                flat.extend(a)
+        names = [a.name for a in flat]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate axis names in {names}")
+        if "mix" in names and "read_fraction" in names:
+            raise ValueError("axes 'mix' and 'read_fraction' are mutually "
+                             "exclusive — both name the traffic-mix axis")
+        self._axes: Dict[str, Axis] = {
+            name: next(a for a in flat if a.name == name)
+            for name in sorted(names, key=AXIS_ORDER.index)}
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._axes
+
+    def __getitem__(self, name: str) -> Axis:
+        return self._axes[name]
+
+    def __iter__(self):
+        return iter(self._axes.values())
+
+    def __len__(self) -> int:
+        return len(self._axes)
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._axes)
+
+    def get(self, name: str) -> Optional[Axis]:
+        return self._axes.get(name)
+
+    def mix_axis(self) -> Optional[Axis]:
+        return self._axes.get("mix") or self._axes.get("read_fraction")
+
+
+# =========================================================================
+# Named-axis results
+# =========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class SpaceArray:
+    """A metric array with named dims and label coordinates."""
+
+    dims: Tuple[str, ...]
+    coords: Tuple[Tuple[Any, ...], ...]      # labels, aligned with dims
+    values: np.ndarray
+
+    def __post_init__(self):
+        if len(self.dims) != len(self.coords) or \
+                tuple(len(c) for c in self.coords) != self.values.shape:
+            raise ValueError(
+                f"dims {self.dims} / coords "
+                f"{tuple(len(c) for c in self.coords)} do not match value "
+                f"shape {self.values.shape}")
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.values.shape
+
+    def coord(self, dim: str) -> Tuple[Any, ...]:
+        return self.coords[self.dims.index(dim)]
+
+    def _label_index(self, dim: str, label) -> int:
+        labels = self.coord(dim)
+        if label in labels:
+            return labels.index(label)
+        if dim == "mix" and label != OWN_MIX:
+            try:
+                return labels.index(_mix_label(*_as_mix_tuple(label)))
+            except (TypeError, ValueError):
+                pass
+        try:
+            return labels.index(float(label))
+        except (TypeError, ValueError):
+            raise KeyError(f"label {label!r} not on dim {dim!r}: {labels}")
+
+    def isel(self, **indexers: int) -> "SpaceArray":
+        """Integer selection; each selected dim is dropped."""
+        out = self.values
+        dims, coords = list(self.dims), list(self.coords)
+        for dim in sorted(indexers, key=self.dims.index, reverse=True):
+            ax = dims.index(dim)
+            out = np.take(out, indexers[dim], axis=ax)
+            del dims[ax], coords[ax]
+        return SpaceArray(tuple(dims), tuple(coords), np.asarray(out))
+
+    def sel(self, **labels) -> "SpaceArray":
+        """Label-based selection; each selected dim is dropped."""
+        return self.isel(**{d: self._label_index(d, v)
+                            for d, v in labels.items()})
+
+    def argbest(self, dim: str = "system",
+                mode: str = "max") -> "SpaceArray":
+        """Best label along ``dim`` per remaining point."""
+        if mode not in ("max", "min"):
+            raise ValueError(f"mode must be 'max' or 'min', got {mode!r}")
+        ax = self.dims.index(dim)
+        idx = (np.argmax if mode == "max" else np.argmin)(self.values,
+                                                          axis=ax)
+        labels = np.asarray(self.coord(dim), dtype=object)[idx]
+        dims = self.dims[:ax] + self.dims[ax + 1:]
+        coords = self.coords[:ax] + self.coords[ax + 1:]
+        return SpaceArray(dims, coords, labels)
+
+    def best(self, dim: str = "system", mode: str = "max") -> "SpaceArray":
+        """Best value along ``dim`` per remaining point."""
+        ax = self.dims.index(dim)
+        red = (np.max if mode == "max" else np.min)(self.values, axis=ax)
+        dims = self.dims[:ax] + self.dims[ax + 1:]
+        coords = self.coords[:ax] + self.coords[ax + 1:]
+        return SpaceArray(dims, coords, np.asarray(red))
+
+
+@dataclasses.dataclass(frozen=True)
+class SpaceResult:
+    """Named-axis evaluation of a :class:`DesignSpace`.
+
+    ``arrays`` maps metric name -> :class:`SpaceArray`; every array's dims
+    are a subset of the implicit stack dims (``system`` / ``protocol`` /
+    ``approach``) plus the requested axes, in canonical order.
+    """
+
+    axes: AxisSet
+    arrays: Dict[str, SpaceArray]
+
+    def __getitem__(self, metric: str) -> SpaceArray:
+        return self.arrays[metric]
+
+    def __contains__(self, metric: str) -> bool:
+        return metric in self.arrays
+
+    @property
+    def metrics(self) -> Tuple[str, ...]:
+        return tuple(self.arrays)
+
+    def sel(self, **labels) -> "SpaceResult":
+        """Label-select across every array carrying the named dims.
+
+        Arrays without a requested dim pass through untouched, but a dim
+        present on NO array is an error — a typo must not silently return
+        the unfiltered result.
+        """
+        known = {d for arr in self.arrays.values() for d in arr.dims}
+        missing = [d for d in labels if d not in known]
+        if missing:
+            raise KeyError(f"dims {missing} not present on any array; "
+                           f"available dims: {sorted(known)}")
+        out = {}
+        for name, arr in self.arrays.items():
+            use = {d: v for d, v in labels.items() if d in arr.dims}
+            out[name] = arr.sel(**use) if use else arr
+        return SpaceResult(axes=self.axes, arrays=out)
+
+    def argbest(self, metric: str, dim: str = "system",
+                mode: str = "max") -> SpaceArray:
+        return self.arrays[metric].argbest(dim, mode)
+
+    def frontier(self, metric: str, dim: str = "system",
+                 mode: str = "max") -> SpaceArray:
+        """Alias of :meth:`argbest` — the winning label per grid point."""
+        return self.argbest(metric, dim, mode)
+
+
+def regimes(labels: Sequence[Any], fracs: Sequence[float]
+            ) -> List[Tuple[float, float, Any]]:
+    """Contiguous (lo, hi, label) regimes along a fraction axis.
+
+    Boundaries fall at the midpoint between the last grid sample of one
+    winner and the first of the next; the regimes tile [0, 1] exactly.
+    """
+    labels = list(labels)
+    fracs = [float(f) for f in fracs]
+    out: List[Tuple[float, float, Any]] = []
+    start, lo = 0, 0.0
+    for j in range(1, len(labels) + 1):
+        if j == len(labels) or labels[j] != labels[start]:
+            hi = 1.0 if j == len(labels) else (fracs[j - 1] + fracs[j]) / 2.0
+            out.append((lo, hi, labels[start]))
+            start, lo = j, hi
+    return out
+
+
+# =========================================================================
+# DesignSpace
+# =========================================================================
+
+#: analytic catalog metrics (dims: system [x configs] [x mix] [x shoreline])
+ANALYTIC_METRICS: Tuple[str, ...] = (
+    "bandwidth_gbs", "pj_per_bit", "power_w", "gbs_per_watt")
+#: per-system static columns (dims: system)
+SYSTEM_METRICS: Tuple[str, ...] = ("latency_ns", "relative_bit_cost")
+#: flit-simulated metrics (dims: [pert x] protocol [x backlog] ...)
+SIM_METRICS: Tuple[str, ...] = ("sim_efficiency", "analytic_efficiency")
+#: approach-density metrics on a PHY (dims: approach [x configs] [x mix])
+APPROACH_METRICS: Tuple[str, ...] = (
+    "linear_density_gbs_mm", "areal_density_gbs_mm2", "approach_pj_per_bit")
+#: Fig-13 pipelining metric (dims: k [x ucie_line_ui] [x device_line_ui])
+PIPELINE_METRICS: Tuple[str, ...] = ("utilization",)
+
+
+class DesignSpace:
+    """A declarative, axes-first view of the paper's design space.
+
+    ``DesignSpace(axes).evaluate()`` lowers the requested axis combination
+    onto the batched engines — the analytic catalog program, the flit
+    simulators, and the Fig-13 pipelining model — through the shared
+    compile cache, and returns a :class:`SpaceResult`.
+
+        space = DesignSpace([
+            axis("workload_config", reports.items()),
+            axis("mix", [OWN_MIX, (2, 1), (1, 1)]),
+            axis("backlog", [4, 64]),
+            axis("shoreline_mm", [4.0, 8.0]),
+        ])
+        res = space.evaluate()
+        res["bandwidth_gbs"].argbest("system")      # frontier labels
+        res["sim_efficiency"].sel(backlog=64)
+
+    Every distinct (engine, stack, grid-shape, static-length) combination
+    compiles exactly once; identically-shaped requests — from this class or
+    from any legacy wrapper — run the warm executable.
+    """
+
+    def __init__(self, axes: Union[AxisSet, Sequence[Axis]], *,
+                 catalog: Optional[Dict[str, Any]] = None,
+                 phy: Any = None,
+                 default_shoreline_mm: float = 8.0,
+                 default_backlog: float = 64.0,
+                 n_flits: int = 2048, n_accesses: int = 4096,
+                 n_lines: int = 512):
+        self.axes = axes if isinstance(axes, AxisSet) else AxisSet(axes)
+        self.catalog = catalog
+        self.phy = phy
+        self.default_shoreline_mm = float(default_shoreline_mm)
+        self.default_backlog = float(default_backlog)
+        self.n_flits = int(n_flits)
+        self.n_accesses = int(n_accesses)
+        self.n_lines = int(n_lines)
+        mix_ax = self.axes.mix_axis()
+        if mix_ax is not None and mix_ax.name == "mix":
+            if OWN_MIX in mix_ax.values and \
+                    "workload_config" not in self.axes:
+                raise ValueError("mix axis uses OWN_MIX but no "
+                                 "workload_config axis provides the mixes")
+
+    # -- lowering helpers ---------------------------------------------------
+
+    def _mix_arrays(self) -> Tuple[np.ndarray, np.ndarray, Tuple[str, ...]]:
+        """x / y arrays over the present (workload_config, mix) axes.
+
+        Returns float32 arrays shaped ``[C, M]`` / ``[C]`` / ``[M]`` (or
+        ``[1]`` when neither axis is present) plus the dim names covered.
+        """
+        cfg = self.axes.get("workload_config")
+        mix_ax = self.axes.mix_axis()
+        if mix_ax is not None and mix_ax.name == "read_fraction":
+            mixes = [(100.0 * r, 100.0 - 100.0 * r)
+                     for r in mix_ax.values]
+        elif mix_ax is not None:
+            mixes = list(mix_ax.values)
+        else:
+            mixes = None
+        if cfg is not None and mixes is not None:
+            x = np.empty((len(cfg), len(mixes)), np.float32)
+            y = np.empty_like(x)
+            for c, (_, own) in enumerate(cfg.values):
+                for m, mx in enumerate(mixes):
+                    xx, yy = (own.x, own.y) if mx == OWN_MIX else mx
+                    x[c, m], y[c, m] = xx, yy
+            return x, y, ("workload_config", mix_ax.name)
+        if cfg is not None:
+            x = np.asarray([w.x for _, w in cfg.values], np.float32)
+            y = np.asarray([w.y for _, w in cfg.values], np.float32)
+            return x, y, ("workload_config",)
+        if mixes is not None:
+            if OWN_MIX in mixes:
+                raise ValueError("OWN_MIX requires a workload_config axis")
+            x = np.asarray([m[0] for m in mixes], np.float32)
+            y = np.asarray([m[1] for m in mixes], np.float32)
+            return x, y, (mix_ax.name,)
+        return (np.asarray([100.0], np.float32),
+                np.asarray([0.0], np.float32), ())
+
+    def _default_metrics(self) -> Tuple[str, ...]:
+        out: List[str] = []
+        names = self.axes.names
+        if self.axes.mix_axis() is not None or "workload_config" in names:
+            out += list(APPROACH_METRICS) if self.phy is not None else \
+                list(ANALYTIC_METRICS) + list(SYSTEM_METRICS)
+            if ("backlog" in names or "protocol" in names
+                    or "protocol_param" in names):
+                out += list(SIM_METRICS)
+        if "k" in names:
+            out += list(PIPELINE_METRICS)
+        if not out:
+            raise ValueError(
+                f"no metric is evaluable over axes {names}; add a traffic "
+                "axis (mix/read_fraction/workload_config) or a pipelining "
+                "axis (k)")
+        return tuple(out)
+
+    # -- evaluation ---------------------------------------------------------
+
+    def evaluate(self, metrics: Optional[Sequence[str]] = None
+                 ) -> SpaceResult:
+        """Resolve the requested metrics over the full joint axis space."""
+        wanted = tuple(metrics) if metrics is not None else \
+            self._default_metrics()
+        known = (ANALYTIC_METRICS + SYSTEM_METRICS + SIM_METRICS
+                 + APPROACH_METRICS + PIPELINE_METRICS)
+        unknown = [m for m in wanted if m not in known]
+        if unknown:
+            raise ValueError(f"unknown metrics {unknown}; choose from "
+                             f"{known}")
+        arrays: Dict[str, SpaceArray] = {}
+        if any(m in wanted for m in ANALYTIC_METRICS + SYSTEM_METRICS):
+            arrays.update(self._eval_catalog(wanted))
+        if any(m in wanted for m in APPROACH_METRICS):
+            arrays.update(self._eval_approaches(wanted))
+        if any(m in wanted for m in SIM_METRICS):
+            arrays.update(self._eval_sim(wanted))
+        if any(m in wanted for m in PIPELINE_METRICS):
+            arrays.update(self._eval_pipelining(wanted))
+        return SpaceResult(axes=self.axes, arrays=arrays)
+
+    def _eval_catalog(self, wanted) -> Dict[str, SpaceArray]:
+        from repro.core import memsys
+        items = (memsys.default_catalog_items() if self.catalog is None
+                 else tuple(self.catalog.items()))
+        x, y, mix_dims = self._mix_arrays()
+        sl_ax = self.axes.get("shoreline_mm")
+        if sl_ax is not None:
+            sl = np.asarray(sl_ax.values, np.float32)
+            xb, yb = x[..., None], y[..., None]
+        else:
+            sl = np.float32(self.default_shoreline_mm)
+            xb, yb = x, y
+        bw, pjb, pw, gpw = memsys.run_catalog_program(items, xb, yb, sl)
+        keys = tuple(k for k, _ in items)
+        dims = ("system",) + mix_dims + (
+            ("shoreline_mm",) if sl_ax is not None else ())
+        coords = (keys,) + tuple(self.axes[d].labels for d in mix_dims) + (
+            (sl_ax.labels,) if sl_ax is not None else ())
+        vals = {"bandwidth_gbs": bw, "pj_per_bit": pjb, "power_w": pw,
+                "gbs_per_watt": gpw}
+        out: Dict[str, SpaceArray] = {}
+        for name in ANALYTIC_METRICS:
+            if name in wanted:
+                v = np.asarray(vals[name])
+                # squeeze the placeholder mix point when no traffic axis
+                v = v.reshape((len(keys),) + tuple(
+                    len(c) for c in coords[1:]))
+                out[name] = SpaceArray(dims, coords, v)
+        if "latency_ns" in wanted:
+            out["latency_ns"] = SpaceArray(
+                ("system",), (keys,),
+                np.asarray([ms.latency_ns for _, ms in items], np.float32))
+        if "relative_bit_cost" in wanted:
+            out["relative_bit_cost"] = SpaceArray(
+                ("system",), (keys,),
+                np.asarray([ms.relative_bit_cost for _, ms in items],
+                           np.float32))
+        return out
+
+    def _eval_approaches(self, wanted) -> Dict[str, SpaceArray]:
+        from repro.core import memsys
+        if self.phy is None:
+            raise ValueError("approach metrics need DesignSpace(phy=...)")
+        x, y, mix_dims = self._mix_arrays()
+        lin, areal, pjb = memsys.run_approach_program(self.phy, x, y)
+        from repro.core.protocols import ALL_APPROACHES
+        keys = tuple(ALL_APPROACHES)
+        dims = ("approach",) + mix_dims
+        coords = (keys,) + tuple(self.axes[d].labels for d in mix_dims)
+        shape = (len(keys),) + tuple(len(c) for c in coords[1:])
+        vals = {"linear_density_gbs_mm": lin,
+                "areal_density_gbs_mm2": areal,
+                "approach_pj_per_bit": pjb}
+        return {name: SpaceArray(dims, coords,
+                                 np.asarray(vals[name]).reshape(shape))
+                for name in APPROACH_METRICS if name in wanted}
+
+    def _sim_protocols(self) -> Tuple[str, ...]:
+        from repro.core import flitsim
+        ax = self.axes.get("protocol")
+        keys = tuple(ax.values) if ax is not None else \
+            tuple(flitsim.SIMULATORS)
+        unknown = [k for k in keys if k not in flitsim.SIMULATORS]
+        if unknown:
+            raise ValueError(f"unknown protocol keys {unknown}; choose "
+                             f"from {sorted(flitsim.SIMULATORS)}")
+        return keys
+
+    def _eval_sim(self, wanted) -> Dict[str, SpaceArray]:
+        from repro.core import flitsim
+        keys = self._sim_protocols()
+        x, y, mix_dims = self._mix_arrays()
+        mix_shape = x.shape
+        xf = x.reshape(-1)
+        yf = y.reshape(-1)
+        if np.any(xf < 0) or np.any(yf < 0) or np.any(xf + yf <= 0):
+            raise ValueError("invalid traffic mix in the lowered grid")
+        bl_ax = self.axes.get("backlog")
+        backlogs = np.asarray(bl_ax.values if bl_ax is not None
+                              else [self.default_backlog], np.float32)
+        pert_ax = self.axes.get("protocol_param")
+        perts = ([dict(p) for _, p in pert_ax.values]
+                 if pert_ax is not None else [{}])
+        eff = np.asarray(flitsim.simulate_grid(
+            keys, xf, yf, backlogs, perturbations=perts,
+            n_flits=self.n_flits, n_accesses=self.n_accesses))
+        # eff: [Q, P, B, Mf] -> named dims, dropping absent axes
+        eff = eff.reshape(eff.shape[:3] + mix_shape)
+        dims: List[str] = ["protocol_param", "protocol", "backlog"]
+        coords: List[Tuple] = [
+            pert_ax.labels if pert_ax is not None else ("baseline",),
+            keys,
+            bl_ax.labels if bl_ax is not None else (self.default_backlog,)]
+        dims += list(mix_dims)
+        coords += [self.axes[d].labels for d in mix_dims]
+        if pert_ax is None:
+            eff = eff[0]
+            dims, coords = dims[1:], coords[1:]
+        if bl_ax is None:
+            ax_b = dims.index("backlog")
+            eff = np.take(eff, 0, axis=ax_b)
+            del dims[ax_b], coords[ax_b]
+        if not mix_dims:                     # placeholder 100R0W point
+            eff = eff[..., 0]
+        out: Dict[str, SpaceArray] = {}
+        if "sim_efficiency" in wanted:
+            out["sim_efficiency"] = SpaceArray(
+                tuple(dims), tuple(coords), np.asarray(eff))
+        if "analytic_efficiency" in wanted:
+            an = np.stack([np.asarray(flitsim.ANALYTIC[k].bw_eff(xf, yf),
+                                      np.float32) for k in keys])
+            an = an.reshape((len(keys),) + mix_shape)
+            adims = ("protocol",) + mix_dims
+            acoords = (keys,) + tuple(self.axes[d].labels
+                                      for d in mix_dims)
+            if not mix_dims:
+                an = an[..., 0]
+            out["analytic_efficiency"] = SpaceArray(adims, acoords, an)
+        return out
+
+    def _eval_pipelining(self, wanted) -> Dict[str, SpaceArray]:
+        from repro.core import flitsim
+        k_ax = self.axes.get("k")
+        if k_ax is None:
+            raise ValueError("the 'utilization' metric needs a 'k' axis")
+        u_ax = self.axes.get("ucie_line_ui")
+        d_ax = self.axes.get("device_line_ui")
+        us = tuple(u_ax.values) if u_ax is not None else (16.0,)
+        ds = tuple(d_ax.values) if d_ax is not None else (64.0,)
+        util = np.asarray(flitsim.sweep_pipelining(
+            k_ax.values, n_lines=self.n_lines, ucie_line_ui=us,
+            device_line_ui=ds))                 # [K, U, D]
+        dims: List[str] = ["k"]
+        coords: List[Tuple] = [k_ax.labels]
+        if u_ax is not None:
+            dims.append("ucie_line_ui")
+            coords.append(u_ax.labels)
+        else:
+            util = util[:, 0]
+        if d_ax is not None:
+            dims.append("device_line_ui")
+            coords.append(d_ax.labels)
+        else:
+            util = util[..., 0]
+        if "utilization" not in wanted:
+            return {}
+        return {"utilization": SpaceArray(tuple(dims), tuple(coords),
+                                          util)}
+
+
+# =========================================================================
+# Joint analytic-vs-simulated frontier (new capability)
+# =========================================================================
+
+
+def joint_frontier(n_fracs: int = 21,
+                   backlogs: Sequence[float] = (2.0, 8.0, 64.0),
+                   shorelines: Sequence[float] = (4.0, 8.0, 16.0),
+                   catalog: Optional[Dict[str, Any]] = None,
+                   n_flits: int = 2048) -> Dict[str, Any]:
+    """Joint (mix x backlog x shoreline) frontier merging the flit-simulated
+    efficiency grid with the analytic catalog grid.
+
+    For every catalog system backed by a flit simulator, the analytic
+    bandwidth is rescaled by the simulated/analytic efficiency ratio at
+    each (mix, backlog) point; systems without a simulator (bus baselines)
+    keep their closed-form bandwidth.  The report marks the read-fraction
+    regions where the simulation-corrected winner differs from the analytic
+    winner — i.e. where the paper's closed forms and the cycle-level
+    simulation *disagree* about the best memory system — per (backlog,
+    shoreline) cell, plus each protocol's worst simulated-vs-analytic
+    relative error.
+
+    This is the first capability only expressible in the unified axes-first
+    API: it needs the analytic catalog axes and the flit-simulation axes
+    resolved over one shared mix grid in a single evaluation.
+    """
+    from repro.core.selector import sim_key_for
+    fracs = np.linspace(0.0, 1.0, n_fracs)
+    space = DesignSpace(
+        [axis("read_fraction", fracs),
+         axis("backlog", backlogs),
+         axis("shoreline_mm", shorelines)],
+        catalog=catalog, n_flits=n_flits)
+    res = space.evaluate(metrics=ANALYTIC_METRICS[:1] + SIM_METRICS)
+    bw = res["bandwidth_gbs"]                  # [S, M, L]
+    sim = res["sim_efficiency"]                # [P, B, M]
+    ana = res["analytic_efficiency"]           # [P, M]
+    keys = bw.coord("system")
+    protocols = sim.coord("protocol")
+    ratio = sim.values / np.maximum(ana.values[:, None, :], 1e-9)
+    rel_err = {p: float(np.max(np.abs(ratio[i] - 1.0)))
+               for i, p in enumerate(protocols)}
+
+    n_b = sim.values.shape[1]
+    corrected = np.repeat(bw.values[:, None, :, :], n_b, axis=1)
+    for s, key in enumerate(keys):
+        simkey = sim_key_for(key)
+        if simkey is not None and simkey in protocols:
+            p = protocols.index(simkey)
+            corrected[s] = bw.values[s][None] * ratio[p][:, :, None]
+
+    analytic_best = bw.argbest("system").values            # [M, L]
+    sim_best_idx = np.argmax(corrected, axis=0)            # [B, M, L]
+    sim_best = np.asarray(keys, dtype=object)[sim_best_idx]
+    disagree = sim_best != analytic_best[None]
+    regions: List[Dict[str, Any]] = []
+    for b, bl in enumerate(sim.coord("backlog")):
+        for l, sl in enumerate(bw.coord("shoreline_mm")):
+            if not disagree[b, :, l].any():
+                continue
+            for lo, hi, pair in regimes(
+                    [(a, s) for a, s in zip(analytic_best[:, l],
+                                            sim_best[b, :, l])],
+                    fracs):
+                if pair[0] != pair[1]:
+                    regions.append({
+                        "backlog": float(bl), "shoreline_mm": float(sl),
+                        "read_fraction_lo": lo, "read_fraction_hi": hi,
+                        "analytic_best": str(pair[0]),
+                        "simulated_best": str(pair[1])})
+    return {
+        "read_fractions": fracs.tolist(),
+        "backlogs": [float(b) for b in backlogs],
+        "shorelines": [float(s) for s in shorelines],
+        "keys": list(keys),
+        "protocol_rel_err": rel_err,
+        "analytic_best": analytic_best.astype(str).tolist(),
+        "simulated_best": sim_best.astype(str).tolist(),
+        "disagreement_fraction": float(disagree.mean()),
+        "disagreement_regions": regions,
+    }

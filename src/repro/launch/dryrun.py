@@ -274,9 +274,15 @@ def main():
         ds = analysis.bridge_design_space(reports)
         if args.all:
             # persist the aggregate only for full sweeps — a later
-            # single-cell refresh must not clobber the all-cells space
+            # single-cell refresh must not clobber the all-cells space.
+            # The artifact carries the joint (mix x backlog x shoreline)
+            # analytic-vs-simulated frontier alongside the per-workload
+            # bridge, so downstream consumers see where the cycle-level
+            # simulation overrules the closed forms.
+            from repro.core.space import joint_frontier
+            ds["joint_frontier"] = joint_frontier()
             os.makedirs(args.out, exist_ok=True)
-            with open(os.path.join(args.out, "design_space.json"),
+            with open(os.path.join(args.out, analysis.DESIGN_SPACE_JSON),
                       "w") as f:
                 json.dump(ds, f, indent=1)
         for name, w in ds["workloads"].items():

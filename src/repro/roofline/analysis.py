@@ -40,6 +40,11 @@ _DTYPE_BYTES = {
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
+#: filename of the aggregate design-space report (bridge + joint frontier)
+#: written NEXT TO the per-cell dry-run artifacts — it has a different
+#: schema, so every per-cell ``*.json`` glob must skip this name
+DESIGN_SPACE_JSON = "design_space.json"
+
 _SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
 _INSTR_RE = re.compile(r"=\s+[a-z0-9\[\],{}() ]*?\b(" + "|".join(
     _COLLECTIVES) + r")(?:-(?:start|done))?\(")
@@ -273,13 +278,17 @@ def bridge_design_space(reports: Dict[str, RooflineReport],
                         objective: str = "bandwidth") -> Dict[str, Any]:
     """Per-workload design-space frontier over the full
     ``[configs x catalog x mix-grid x shoreline]`` space in ONE batched
-    :func:`repro.core.selector.rank_grid` evaluation.
+    evaluation — a compatibility wrapper over the axes-first
+    :class:`repro.core.space.DesignSpace` API.
 
-    For every workload (a named :class:`RooflineReport`), the mix axis is
-    the shared dense read-fraction grid with the workload's own HLO-derived
-    mix prepended as column 0 — the configs axis genuinely varies, and the
-    whole space compiles to a single stacked program (one compile per grid
-    shape, warm thereafter).
+    The axes: a ``workload_config`` axis (one HLO-derived mix per named
+    :class:`RooflineReport`), a ``mix`` axis whose first entry is the
+    :data:`repro.core.space.OWN_MIX` sentinel (each workload's own mix)
+    followed by the shared dense read-fraction grid, and a
+    ``shoreline_mm`` axis.  The whole space lowers onto one stacked
+    catalog program in the shared compile cache (one compile per grid
+    shape, warm thereafter — for this wrapper AND for any other front-end
+    requesting the same shape).
 
     Each workload cell reports its whole frontier, not one point:
 
@@ -293,10 +302,21 @@ def bridge_design_space(reports: Dict[str, RooflineReport],
 
     ``constraints`` (default :class:`SelectionConstraints`) applies to the
     whole space — packaging, power caps, and the flit-simulation-derived
-    ``max_backlog_knee`` queue-depth budget all mask the same grid.
+    ``max_backlog_knee`` queue-depth budget all mask the same grid.  The
+    knee budget follows the CONFIGS axis: each workload's own HLO-derived
+    mix is threaded into :func:`repro.core.flitsim.backlog_knees`
+    (``per_mix=True``), so a protocol is excluded for the workloads whose
+    own mix needs a deeper queue than the budget — not by the
+    canonical-mix envelope.
     """
-    from repro.core import TrafficMix, mix_grid
-    from repro.core.selector import SelectionConstraints, rank_grid
+    import dataclasses as _dc
+
+    from repro.core import TrafficMix, flitsim, mix_grid
+    from repro.core import space as space_mod
+    from repro.core.memsys import CatalogGrid, default_catalog_items
+    from repro.core.selector import (
+        SelectionConstraints, grid_ranking, sim_key_for,
+    )
     if constraints is None:
         constraints = SelectionConstraints()
     names = list(reports)
@@ -304,13 +324,6 @@ def bridge_design_space(reports: Dict[str, RooflineReport],
                                    reports[n].write_bytes_per_chip)
              for n in names]
     gx, gy = np.asarray(mix_grid(n_fracs), dtype=np.float64)
-    n_cfg = len(names)
-    # configs axis on top of the mix axis: column 0 is each workload's own
-    # mix, columns 1: the shared read-fraction grid
-    x = np.concatenate([np.array([[m.x] for m in mixes]),
-                        np.broadcast_to(gx, (n_cfg, n_fracs))], axis=1)
-    y = np.concatenate([np.array([[m.y] for m in mixes]),
-                        np.broadcast_to(gy, (n_cfg, n_fracs))], axis=1)
     sl = np.asarray(shorelines, dtype=np.float64)
     # the reference budget (where `best`/`systems` are reported) is always
     # evaluated exactly — appended to the axis if the caller's shoreline
@@ -319,8 +332,42 @@ def bridge_design_space(reports: Dict[str, RooflineReport],
         sl = np.sort(np.append(sl, constraints.shoreline_mm))
     l_ref = int(np.argmin(np.abs(sl - constraints.shoreline_mm)))
 
-    g = rank_grid(x[:, :, None], y[:, :, None], constraints=constraints,
-                  objective=objective, shoreline_mm=sl)
+    # configs axis on top of the mix axis: the OWN_MIX sentinel resolves to
+    # each workload's own mix in column 0, columns 1: are the shared grid
+    space = space_mod.DesignSpace(space_mod.AxisSet(
+        space_mod.axis("workload_config", list(zip(names, mixes))),
+        space_mod.axis("mix",
+                       [space_mod.OWN_MIX] + list(zip(gx, gy))),
+        space_mod.axis("shoreline_mm", sl),
+    ))
+    res = space.evaluate(metrics=space_mod.ANALYTIC_METRICS
+                         + space_mod.SYSTEM_METRICS)
+    items = default_catalog_items()
+    grid = CatalogGrid(
+        keys=res["bandwidth_gbs"].coord("system"),
+        bandwidth_gbs=res["bandwidth_gbs"].values,
+        pj_per_bit=res["pj_per_bit"].values,
+        power_w=res["power_w"].values,
+        gbs_per_watt=res["gbs_per_watt"].values,
+        latency_ns=res["latency_ns"].values,
+        relative_bit_cost=res["relative_bit_cost"].values)
+
+    grid_constraints = constraints
+    valid_mask = None
+    if constraints.max_backlog_knee is not None:
+        # per-mix knees at each workload's OWN mix -> [S, C, 1, 1] mask
+        per = flitsim.backlog_knees(mixes=[(m.x, m.y) for m in mixes],
+                                    per_mix=True)
+        valid_mask = np.ones((len(items), len(names), 1, 1), dtype=bool)
+        for i, (key, _) in enumerate(items):
+            sim = sim_key_for(key)
+            if sim is not None:
+                valid_mask[i, :, 0, 0] = (
+                    per[sim] <= constraints.max_backlog_knee)
+        grid_constraints = _dc.replace(constraints, max_backlog_knee=None)
+
+    g = grid_ranking(items, grid, grid_constraints, objective,
+                     valid_mask=valid_mask)
     best = np.asarray(g.best_index)                     # [C, M+1, L]
     best_keys = g.best_keys()
     bw = np.asarray(g.grid.bandwidth_gbs)               # [S, C, M+1, L]
@@ -341,18 +388,11 @@ def bridge_design_space(reports: Dict[str, RooflineReport],
         # regimes tile [0, 1] contiguously: each boundary is the midpoint
         # between the last grid point of one winner and the first of the
         # next (the crossover lies between the two samples)
-        crossovers = []
-        row = best_keys[c, 1:, l_ref]                   # dense mix axis
-        start = 0
-        lo = 0.0
-        for j in range(1, n_fracs + 1):
-            if j == n_fracs or row[j] != row[start]:
-                hi = (1.0 if j == n_fracs
-                      else float((fracs[j - 1] + fracs[j]) / 2.0))
-                crossovers.append({"read_fraction_lo": lo,
-                                   "read_fraction_hi": hi,
-                                   "best": str(row[start])})
-                start, lo = j, hi
+        crossovers = [
+            {"read_fraction_lo": lo, "read_fraction_hi": hi,
+             "best": str(label)}
+            for lo, hi, label in space_mod.regimes(
+                best_keys[c, 1:, l_ref].tolist(), fracs)]
         sl_frontier = {f"{s:g}mm": str(best_keys[c, 0, l])
                        for l, s in enumerate(sl)}
         out["workloads"][name] = {

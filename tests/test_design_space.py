@@ -1,0 +1,419 @@
+"""Tests for the axes-first DesignSpace API and its shared compile cache.
+
+Four contracts:
+
+  * ONE evaluation covering [configs x catalog x mixes x backlogs x
+    shorelines] compiles exactly once per engine family (shared-cache
+    counters), and the legacy front-ends (``sweep``, ``catalog_grid``,
+    ``rank_grid``) run WARM against a space-primed cache.
+  * The unified API reproduces the pinned seed goldens <= 1e-6 and is
+    bit-identical to the legacy wrappers (same executables).
+  * The new capabilities work: per-mix backlog knees along the bridge's
+    configs axis, the joint (k x ucie_line_ui x device_line_ui)
+    pipelining sweep, protocol-parameter perturbations, and the joint
+    analytic-vs-simulated frontier with its disagreement report.
+  * Named-axis queries (sel / isel / argbest / frontier) behave.
+"""
+import numpy as np
+import pytest
+
+from repro.core import flitsim
+from repro.core import space as space_mod
+from repro.core.flitsim import CANONICAL_MIXES, sweep, sweep_pipelining
+from repro.core.memsys import catalog_grid
+from repro.core.selector import SelectionConstraints, rank_grid
+from repro.core.space import (
+    OWN_MIX, AxisSet, DesignSpace, axis, joint_frontier, regimes,
+)
+from repro.core.traffic import TrafficMix
+from repro.roofline.analysis import RooflineReport, bridge_design_space
+
+
+# Spot rows of the SEED (pre-batching) scalar-simulator goldens at the
+# canonical mixes — the full pinned set lives in tests/test_flitsim_sweep.py;
+# the axes-first path must reproduce the same numbers <= 1e-6.
+SEED_GOLDEN_SPOT = {
+    "cxl_opt": (0.46875000, 0.68565327, 0.66666937, 0.54544550, 0.40000045),
+    "lpddr6_asym": (0.43243244, 0.64880705, 0.57657659, 0.43237966,
+                    0.28828830),
+}
+
+
+def _report(read, write, hlo_bytes=1e10):
+    return RooflineReport(
+        arch="w", shape="s", mesh="16x16", chips=256,
+        hlo_flops_per_chip=1e12, hlo_bytes_per_chip=hlo_bytes,
+        collective_bytes_per_chip=1e9, compute_s=5e-3, memory_s=1.2e-2,
+        collective_s=2e-2, dominant="memory", model_flops=2e14,
+        useful_flops_ratio=0.8, read_bytes_per_chip=read,
+        write_bytes_per_chip=write)
+
+
+class TestAxes:
+    def test_mix_axis_normalization_and_labels(self):
+        ax = axis("mix", [TrafficMix(2, 1), (1, 1), OWN_MIX])
+        assert ax.values == ((2.0, 1.0), (1.0, 1.0), OWN_MIX)
+        assert ax.labels == ("2R1W", "1R1W", OWN_MIX)
+        assert ax.index((2, 1)) == 0 and ax.index("1R1W") == 1
+
+    def test_invalid_mix_rejected(self):
+        with pytest.raises(ValueError, match="invalid traffic mix"):
+            axis("mix", [(0, 0)])
+
+    def test_read_fraction_bounds(self):
+        with pytest.raises(ValueError, match="outside"):
+            axis("read_fraction", [1.5])
+
+    def test_unknown_axis_name(self):
+        with pytest.raises(ValueError, match="unknown axis name"):
+            axis("nope", [1])
+
+    def test_empty_axis(self):
+        with pytest.raises(ValueError, match="at least one value"):
+            axis("backlog", [])
+
+    def test_duplicate_and_exclusive_axes(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            AxisSet(axis("backlog", [1]), axis("backlog", [2]))
+        with pytest.raises(ValueError, match="mutually"):
+            AxisSet(axis("mix", [(1, 1)]), axis("read_fraction", [0.5]))
+
+    def test_axisset_canonical_order(self):
+        s = AxisSet(axis("shoreline_mm", [8.0]), axis("backlog", [4]),
+                    axis("mix", [(1, 1)]))
+        assert s.names == ("backlog", "mix", "shoreline_mm")
+
+    def test_own_mix_requires_configs(self):
+        with pytest.raises(ValueError, match="workload_config"):
+            DesignSpace([axis("mix", [OWN_MIX])])
+
+    def test_workload_config_from_report(self):
+        ax = axis("workload_config", {"w": _report(7e9, 3e9)})
+        assert ax.labels == ("w",)
+        assert ax.values[0][1].read_fraction == pytest.approx(0.7)
+
+
+class TestJointSpaceCompileOnce:
+    """Acceptance: [configs x catalog x mixes x backlogs x shorelines] in
+    one evaluation, exactly one compile per engine family."""
+
+    def _space(self):
+        return DesignSpace([
+            axis("workload_config", {"train": TrafficMix(67, 33),
+                                     "decode": TrafficMix(95, 5)}),
+            axis("mix", [OWN_MIX, (2, 1), (1, 1)]),
+            axis("backlog", [4.0, 64.0]),
+            axis("shoreline_mm", [4.0, 8.0]),
+        ], n_flits=512, n_accesses=512)
+
+    def test_compiles_once_per_family_then_warm(self):
+        space_mod.clear_cache()
+        res = self._space().evaluate()
+        assert space_mod.cache_stats(("memsys.catalog",)).misses == 1
+        assert space_mod.cache_stats(("flitsim.symmetric",)).misses == 1
+        assert space_mod.cache_stats(("flitsim.asymmetric",)).misses == 1
+        assert space_mod.cache_stats().misses == 3
+        # full dims over the joint space
+        assert res["bandwidth_gbs"].dims == (
+            "system", "workload_config", "mix", "shoreline_mm")
+        assert res["sim_efficiency"].dims == (
+            "protocol", "backlog", "workload_config", "mix")
+        first = space_mod.cache_stats()
+        self._space().evaluate()               # identical shapes -> warm
+        second = space_mod.cache_stats()
+        assert second.misses == first.misses
+        assert second.hits > first.hits
+
+    def test_own_mix_column_resolves_per_config(self):
+        res = self._space().evaluate(metrics=("bandwidth_gbs",))
+        bw = res["bandwidth_gbs"]
+        own_train = bw.sel(workload_config="train", mix=OWN_MIX,
+                           shoreline_mm=8.0)
+        direct = catalog_grid(67.0, 33.0, 8.0)
+        np.testing.assert_allclose(own_train.values,
+                                   np.asarray(direct.bandwidth_gbs),
+                                   rtol=1e-6)
+
+
+class TestSharedCacheAcrossFrontends:
+    """Warming the space through the axes-first API warms every legacy
+    front-end (and vice versa) — one cache, many doors."""
+
+    def test_legacy_wrappers_run_warm_after_designspace(self):
+        space_mod.clear_cache()
+        DesignSpace([axis("mix", CANONICAL_MIXES)]).evaluate(
+            metrics=("bandwidth_gbs", "sim_efficiency"))
+        primed = space_mod.cache_stats()
+        assert primed.misses == 3       # catalog + symmetric + asymmetric
+        sweep()                          # default canonical sweep
+        catalog_grid(np.asarray([m[0] for m in CANONICAL_MIXES]),
+                     np.asarray([m[1] for m in CANONICAL_MIXES]))
+        after = space_mod.cache_stats()
+        assert after.misses == primed.misses, \
+            "legacy front-ends retraced a space-primed executable"
+        assert after.hits > primed.hits
+
+    def test_rank_grid_shares_catalog_program(self):
+        space_mod.clear_cache()
+        x = np.asarray([100.0, 50.0, 0.0])
+        y = 100.0 - x
+        DesignSpace([axis("mix", list(zip(x, y)))]).evaluate(
+            metrics=("bandwidth_gbs",))
+        before = space_mod.cache_stats(("memsys.catalog",))
+        rank_grid(x, y)
+        after = space_mod.cache_stats(("memsys.catalog",))
+        assert after.misses == before.misses
+        assert after.hits > before.hits
+
+
+class TestCompatNumerics:
+    def test_designspace_matches_seed_goldens(self):
+        res = DesignSpace([axis("mix", CANONICAL_MIXES)]).evaluate(
+            metrics=("sim_efficiency",))
+        eff = res["sim_efficiency"]
+        for key, golden in SEED_GOLDEN_SPOT.items():
+            got = eff.values[eff.coord("protocol").index(key)]
+            np.testing.assert_allclose(got, golden, atol=1e-6, err_msg=key)
+
+    def test_designspace_bit_identical_to_sweep(self):
+        mixes = [(3, 1), (1, 1), (1, 4)]
+        res = DesignSpace([axis("mix", mixes),
+                           axis("backlog", [8.0, 64.0])]).evaluate(
+            metrics=("sim_efficiency",))
+        legacy = sweep(mixes=mixes, backlogs=[8.0, 64.0])
+        # [P, B, M] both ways, same executable -> bit-for-bit
+        np.testing.assert_array_equal(res["sim_efficiency"].values,
+                                      np.asarray(legacy.efficiency))
+
+    def test_designspace_bit_identical_to_catalog_grid(self):
+        x = np.asarray([80.0, 20.0], np.float32)
+        y = 100.0 - x
+        res = DesignSpace(
+            [axis("mix", list(zip(x, y))),
+             axis("shoreline_mm", [4.0, 8.0])]).evaluate(
+            metrics=("bandwidth_gbs", "pj_per_bit"))
+        legacy = catalog_grid(x[:, None], y[:, None],
+                              np.asarray([4.0, 8.0]))
+        np.testing.assert_array_equal(res["bandwidth_gbs"].values,
+                                      np.asarray(legacy.bandwidth_gbs))
+        np.testing.assert_array_equal(res["pj_per_bit"].values,
+                                      np.asarray(legacy.pj_per_bit))
+
+
+class TestPerMixKnees:
+    def test_envelope_is_max_over_per_mix(self):
+        per = flitsim.backlog_knees(per_mix=True)
+        env = flitsim.backlog_knees()
+        for key, arr in per.items():
+            assert float(np.max(arr)) == env[key], key
+            assert arr.shape == (len(CANONICAL_MIXES),)
+
+    def test_knees_vary_by_mix(self):
+        per = flitsim.backlog_knees(per_mix=True)
+        # at least one symmetric protocol needs a deeper queue on some
+        # mixes than others — the whole point of the per-mix refinement
+        assert any(np.min(per[k]) < np.max(per[k])
+                   for k in flitsim.SYMMETRIC_PARAMS)
+
+    def test_bridge_knee_budget_follows_configs_axis(self):
+        """A queue-depth budget below a protocol's canonical-mix envelope
+        but above its knee at a workload's OWN mix keeps that protocol in
+        the workload's frontier — per-config masking, not the envelope."""
+        per = flitsim.backlog_knees(
+            mixes=[(100.0, 0.0), (50.0, 50.0)], per_mix=True)
+        budget = float(per["cxl_opt"][0])          # pure-read knee
+        assert per["cxl_opt"][1] > budget, \
+            "fixture mixes no longer separate the knees; pick new mixes"
+        reports = {"pure_read": _report(1e10, 0.0),
+                   "balanced": _report(5e9, 5e9)}
+        ds = bridge_design_space(
+            reports, n_fracs=5,
+            constraints=SelectionConstraints(max_backlog_knee=budget))
+        pure = {c["best"] for c in
+                ds["workloads"]["pure_read"]["crossovers"]}
+        bal = {c["best"] for c in
+               ds["workloads"]["balanced"]["crossovers"]}
+        # the pure-read config keeps CXL-opt in its frontier...
+        assert any(k.startswith("E:") for k in pure), pure
+        # ...the balanced config loses every deep-queue symmetric protocol
+        # (under the old envelope semantics BOTH rows would lose them)
+        assert not any(k.startswith(("C:", "D:", "E:")) for k in bal), bal
+
+    def test_generous_budget_changes_nothing(self):
+        reports = {"w": _report(7e9, 3e9)}
+        base = bridge_design_space(reports, n_fracs=5)
+        roomy = bridge_design_space(
+            reports, n_fracs=5,
+            constraints=SelectionConstraints(
+                max_backlog_knee=max(flitsim.KNEE_BACKLOGS)))
+        assert base["workloads"]["w"]["best"] == \
+            roomy["workloads"]["w"]["best"]
+        assert base["workloads"]["w"]["crossovers"] == \
+            roomy["workloads"]["w"]["crossovers"]
+
+
+class TestJointPipelining:
+    def test_joint_grid_matches_scalar_calls(self):
+        ks, us, ds_ = (1, 2, 4), (8.0, 16.0), (32.0, 64.0)
+        joint = np.asarray(sweep_pipelining(ks, ucie_line_ui=us,
+                                            device_line_ui=ds_))
+        assert joint.shape == (3, 2, 2)
+        for i, k in enumerate(ks):
+            for j, u in enumerate(us):
+                for l, d in enumerate(ds_):
+                    scalar = float(np.asarray(sweep_pipelining(
+                        [k], ucie_line_ui=u, device_line_ui=d))[0])
+                    assert joint[i, j, l] == pytest.approx(
+                        scalar, abs=1e-6), (k, u, d)
+
+    def test_faster_devices_saturate_with_fewer(self):
+        # halving device_line_ui (a faster DRAM generation) at fixed link
+        # speed needs half the devices for full utilization
+        joint = np.asarray(sweep_pipelining(
+            (1, 2, 3, 4), ucie_line_ui=(16.0,),
+            device_line_ui=(32.0, 64.0)))[:, 0, :]
+        k_sat_fast = int(np.argmax(joint[:, 0] >= 0.99)) + 1
+        k_sat_slow = int(np.argmax(joint[:, 1] >= 0.99)) + 1
+        assert k_sat_fast == 2 and k_sat_slow == 4
+
+    def test_designspace_pipelining_axes(self):
+        res = DesignSpace([
+            axis("k", [1, 2, 4]),
+            axis("ucie_line_ui", [8.0, 16.0]),
+            axis("device_line_ui", [32.0, 64.0]),
+        ]).evaluate()
+        u = res["utilization"]
+        assert u.dims == ("k", "ucie_line_ui", "device_line_ui")
+        assert u.shape == (3, 2, 2)
+        # fixed link: utilization never decreases with more devices
+        assert (np.diff(u.values, axis=0) >= -1e-6).all()
+
+    def test_legacy_scalar_form_unchanged(self):
+        util = np.asarray(sweep_pipelining([1, 2, 3, 4]))
+        assert util.shape == (4,)
+        assert util[-1] == pytest.approx(1.0, abs=1e-3)
+
+
+class TestPerturbations:
+    def test_baseline_row_bit_identical_to_sweep(self):
+        res = flitsim.sweep_perturbed(
+            [{}, {"g_slots": 0.8}], protocols=("cxl_opt", "hbm_asym"),
+            mixes=[(2, 1)])
+        legacy = sweep(protocols=("cxl_opt", "hbm_asym"), mixes=[(2, 1)])
+        np.testing.assert_array_equal(
+            res["sim_efficiency"].sel(protocol_param="baseline").values,
+            np.asarray(legacy.efficiency))
+
+    def test_unknown_field_rejected(self):
+        with pytest.raises(ValueError, match="unknown perturbation"):
+            flitsim.sweep_perturbed([{"warp_drive": 2.0}])
+
+    def test_inapplicable_perturbation_rejected(self):
+        # total_lanes exists only on the asymmetric family: applying it
+        # to a symmetric-only sweep would silently yield a baseline row
+        # labeled as perturbed
+        with pytest.raises(ValueError, match="applies to no parameter"):
+            flitsim.sweep_perturbed([{}, {"total_lanes": 0.5}],
+                                    protocols=("cxl_opt",),
+                                    mixes=[(2, 1)])
+
+    def test_slot_count_perturbation_binds_symmetric_only(self):
+        res = flitsim.sweep_perturbed(
+            [{}, {"g_slots": 0.8}],
+            protocols=("cxl_opt", "lpddr6_asym"), mixes=[(2, 1)])
+        eff = res["sim_efficiency"].values        # [2 pert, 2 proto, 1 mix]
+        assert eff[1, 0, 0] < eff[0, 0, 0]        # fewer slots hurt cxl_opt
+        assert eff[1, 1, 0] == eff[0, 1, 0]       # asym has no g_slots
+
+    def test_credit_limit_perturbation_binds(self):
+        res = flitsim.sweep_perturbed(
+            [{}, {"credit_lines": 0.1}], protocols=("cxl_opt",),
+            mixes=[(2, 1)])
+        eff = res["sim_efficiency"].values
+        assert eff[1, 0, 0] < eff[0, 0, 0] - 0.01
+
+    def test_labels(self):
+        res = flitsim.sweep_perturbed(
+            [{}, ("tight_credit", {"credit_lines": 0.1})],
+            protocols=("chi",), mixes=[(1, 1)])
+        assert res["sim_efficiency"].coord("protocol_param") == (
+            "baseline", "tight_credit")
+
+
+class TestJointFrontier:
+    @pytest.fixture(scope="class")
+    def jf(self):
+        return joint_frontier(n_fracs=9, backlogs=(2.0, 64.0),
+                              shorelines=(8.0,), n_flits=1024)
+
+    def test_structure(self, jf):
+        assert len(jf["read_fractions"]) == 9
+        assert len(jf["analytic_best"]) == 9          # [M][L]
+        assert len(jf["simulated_best"]) == 2         # [B][M][L]
+        assert 0.0 <= jf["disagreement_fraction"] <= 1.0
+        for r in jf["disagreement_regions"]:
+            assert r["analytic_best"] != r["simulated_best"]
+            assert 0.0 <= r["read_fraction_lo"] < r["read_fraction_hi"] \
+                <= 1.0
+            assert r["backlog"] in jf["backlogs"]
+
+    def test_shallow_queues_disagree_more(self, jf):
+        sim_best = np.asarray(jf["simulated_best"], dtype=object)
+        ana_best = np.asarray(jf["analytic_best"], dtype=object)
+        dis_shallow = float((sim_best[0] != ana_best).mean())   # backlog 2
+        dis_deep = float((sim_best[1] != ana_best).mean())      # backlog 64
+        assert dis_shallow > dis_deep
+        # at saturation the simulation backs the closed forms almost
+        # everywhere, so disagreement exists only at shallow queues
+        assert any(r["backlog"] == 2.0
+                   for r in jf["disagreement_regions"])
+
+    def test_asymmetric_protocols_match_closed_forms(self, jf):
+        # backlog-independent lane simulators track eq (3) tightly
+        assert jf["protocol_rel_err"]["lpddr6_asym"] < 0.01
+        assert jf["protocol_rel_err"]["hbm_asym"] < 0.01
+
+
+class TestSpaceQueries:
+    def test_sel_isel_argbest(self):
+        res = DesignSpace([axis("read_fraction", [0.0, 0.5, 1.0]),
+                           axis("shoreline_mm", [4.0, 8.0])]).evaluate(
+            metrics=("bandwidth_gbs",))
+        bw = res["bandwidth_gbs"]
+        assert bw.dims == ("system", "read_fraction", "shoreline_mm")
+        one = bw.sel(read_fraction=0.5, shoreline_mm=8.0)
+        assert one.dims == ("system",)
+        np.testing.assert_array_equal(one.values, bw.values[:, 1, 1])
+        assert bw.isel(shoreline_mm=0).dims == ("system", "read_fraction")
+        labels = bw.argbest("system")
+        assert labels.shape == (3, 2)
+        with pytest.raises(KeyError):
+            bw.sel(read_fraction=0.25)
+
+    def test_frontier_matches_rank_grid(self):
+        fracs = np.linspace(0.0, 1.0, 11)
+        res = DesignSpace([axis("read_fraction", fracs)]).evaluate(
+            metrics=("bandwidth_gbs",))
+        front = res.frontier("bandwidth_gbs")
+        g = rank_grid(100.0 * fracs, 100.0 - 100.0 * fracs)
+        np.testing.assert_array_equal(front.values, g.best_keys())
+
+    def test_result_sel_applies_across_arrays(self):
+        res = DesignSpace([axis("mix", [(2, 1), (1, 1)]),
+                           axis("backlog", [4.0, 64.0])]).evaluate()
+        narrowed = res.sel(backlog=64.0)
+        assert "backlog" not in narrowed["sim_efficiency"].dims
+        # arrays without the dim pass through untouched
+        assert narrowed["latency_ns"].dims == ("system",)
+        # ...but a dim on NO array (typo) must not silently no-op
+        with pytest.raises(KeyError, match="not present on any array"):
+            res.sel(backlogs=64.0)
+
+    def test_regimes_tile_unit_interval(self):
+        labs = ["a", "a", "b", "b", "b", "c"]
+        fr = np.linspace(0.0, 1.0, 6)
+        regs = regimes(labs, fr)
+        assert regs[0][0] == 0.0 and regs[-1][1] == 1.0
+        for (lo, hi, _), (lo2, hi2, _) in zip(regs, regs[1:]):
+            assert hi == lo2
+        assert [r[2] for r in regs] == ["a", "b", "c"]

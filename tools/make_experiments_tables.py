@@ -14,6 +14,10 @@ def load(dirname):
     cells = {}
     for f in sorted(glob.glob(os.path.join(ROOT, "experiments", dirname,
                                            "*.json"))):
+        # aggregate report (repro.roofline.analysis.DESIGN_SPACE_JSON),
+        # not a per-cell artifact — literal kept: this tool runs standalone
+        if os.path.basename(f) == "design_space.json":
+            continue
         d = json.load(open(f))
         cells[(d["arch"], d["shape"], d["mesh"])] = d
     return cells
