@@ -140,6 +140,42 @@ def bench_design_space(rows, n: int = 41):
                  f"best_gbs_per_watt@8mm={winners}"))
 
 
+def bench_phy_axis(rows, n: int = 41):
+    """First-class phy axis: the whole catalog across four PHY generations
+    (UCIe-A/S at 32G + the 48G scaling points) in ONE PHY-stacked compiled
+    call per engine family — the Figs 10-12 sweeps without forked
+    per-PHY code paths."""
+    from repro.core import (
+        DesignSpace, UCIE_A_32G_55U, UCIE_A_48G_45U, UCIE_S_32G,
+        UCIE_S_48G_110U, axis,
+    )
+    from repro.core.memsys import clear_grid_cache, grid_cache_stats
+
+    phys = [UCIE_S_32G, UCIE_A_32G_55U, UCIE_S_48G_110U, UCIE_A_48G_45U]
+    space = DesignSpace([
+        axis("phy", phys),
+        axis("read_fraction", np.linspace(0.0, 1.0, n)),
+        axis("shoreline_mm", (4.0, 8.0)),
+    ])
+    metrics = ("bandwidth_gbs", "linear_density_gbs_mm")
+    clear_grid_cache()
+    us = time_us(lambda: space.evaluate(metrics=metrics)["bandwidth_gbs"]
+                 .values)
+    res = space.evaluate(metrics=metrics)
+    stats = grid_cache_stats()
+    assert stats.misses == 2, (
+        f"expected the PHY-stacked space to compile once per memsys "
+        f"family (catalog + approach), got {stats}")
+    bw = res["bandwidth_gbs"]
+    winners = ";".join(
+        f"{p.name}="
+        + str(bw.sel(phy=p.name, shoreline_mm=8.0).argbest("system")
+              .values[n // 2])
+        for p in phys)
+    rows.append((f"phy_axis/{len(phys)}x{n}x2", us,
+                 f"compiles={stats.misses};best@50R50W:{winners}"))
+
+
 def run(rows: list):
     bench_table1(rows)
     bench_fig10(rows)
@@ -149,3 +185,4 @@ def run(rows: list):
     bench_cost(rows)
     bench_selector_grid(rows)
     bench_design_space(rows)
+    bench_phy_axis(rows)

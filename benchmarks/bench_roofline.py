@@ -83,21 +83,53 @@ def _bench_knee_bridge(rows: list, budget: float = 4.0, n_fracs: int = 11):
     rows.append((f"roofline/bridge_knee_budget{budget:g}", 0.0, bests))
 
 
+def _bench_feasible_frontier(rows: list, n_fracs: int = 21):
+    """First-class feasibility masks: one boolean SpaceArray composed
+    through ``frontier(..., where=mask)`` replaces the grid_ranking
+    valid-mask plumbing — winner labels per constraint set on one warm
+    evaluation."""
+    import numpy as np
+
+    from repro.core.selector import SelectionConstraints
+    from repro.core.space import DesignSpace, axis
+
+    res = DesignSpace([
+        axis("read_fraction", np.linspace(0.0, 1.0, n_fracs)),
+        axis("shoreline_mm", (4.0, 8.0)),
+    ]).evaluate()
+    mid = n_fracs // 2
+    bests = []
+    for tag, cons in (
+            ("any", SelectionConstraints()),
+            ("ucie_s", SelectionConstraints(packaging="UCIe-S")),
+            ("cheap", SelectionConstraints(max_relative_bit_cost=2.0)),
+            ("shallow_q", SelectionConstraints(max_backlog_knee=2.0))):
+        mask = res.feasible(cons)
+        front = res.frontier("bandwidth_gbs", where=mask)
+        bests.append(f"{tag}={front.values[mid, 1]}")
+    rows.append((f"roofline/feasible_frontier_{n_fracs}pt", 0.0,
+                 ";".join(bests)))
+
+
 def run(rows: list):
     _bench_bridge(rows)
     _bench_knee_bridge(rows)
-    # skip the aggregate design-space report — different schema than the
-    # per-cell artifacts this loop consumes
-    from repro.roofline.analysis import DESIGN_SPACE_JSON
-    files = sorted(f for f in glob.glob(os.path.join(DRYRUN_DIR, "*.json"))
-                   if os.path.basename(f) != DESIGN_SPACE_JSON)
-    if not files:
+    _bench_feasible_frontier(rows)
+    # skip anything that is not a per-cell workload artifact (the
+    # aggregate design-space report, axes-first exports carrying phy /
+    # catalog_param dimensions) — different schema than this loop consumes
+    from repro.roofline.analysis import is_cell_artifact
+    cells = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(f) as fh:
+            d = json.load(fh)
+        if is_cell_artifact(d):
+            cells.append(d)
+    if not cells:
         rows.append(("roofline/none", 0.0,
                      "run `python -m repro.launch.dryrun --all` first"))
         return
-    for f in files:
-        with open(f) as fh:
-            d = json.load(fh)
+    for d in cells:
         r = d["roofline"]
         cell = f"{d['arch']}__{d['shape']}__{d['mesh']}"
         # best UCIe system for this workload's mix

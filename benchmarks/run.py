@@ -8,6 +8,8 @@
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
 
@@ -20,6 +22,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI mode: 1 warmup + 1 iter per timing, "
                          "paper-model suites only")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the rows as JSON (the weekly CI "
+                         "trend artifact)")
     args = ap.parse_args()
     common.SMOKE = args.smoke
 
@@ -49,6 +54,16 @@ def main() -> None:
             traceback.print_exc()
             failed.append(name)
     emit(rows)
+    if args.json:
+        out_dir = os.path.dirname(os.path.abspath(args.json))
+        os.makedirs(out_dir, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump({"smoke": args.smoke,
+                       "failed_suites": failed,
+                       "rows": [{"name": n, "us_per_call": us,
+                                 "derived": d} for n, us, d in rows]},
+                      f, indent=1)
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failed:
         print(f"FAILED_SUITES: {failed}", file=sys.stderr)
         raise SystemExit(1)

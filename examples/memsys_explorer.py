@@ -29,8 +29,11 @@ Three modes:
     mode then runs the joint (mix x backlog x shoreline)
     analytic-vs-flit-simulated frontier and flags the regions where the
     cycle-level simulation disagrees with the closed forms about the best
-    memory system, and writes the whole report to
-    experiments/dryrun/design_space.json (the CI artifact).
+    memory system, evaluates the PHY-stacked frontier (UCIe-A/S at 32G
+    plus the forward-looking 48G points, via the first-class ``phy``
+    axis), and writes the whole report to
+    experiments/dryrun/design_space.json (the CI artifact — a checked-in
+    summary of its winner labels gates CI against drift).
 
         PYTHONPATH=src python examples/memsys_explorer.py --bridge
 """
@@ -47,12 +50,30 @@ from repro.core import TrafficMix, rank, SelectionConstraints
 DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
                       "dryrun")
 
+def _cell_artifacts():
+    """Decoded per-cell artifacts as (path, dict) pairs.
+
+    The aggregate design-space report (and any axes-first export carrying
+    phy / catalog_param dimensions) lives next to the per-cell artifacts
+    but has a different schema — per-cell consumers must SKIP anything
+    that is not a workload cell, not crash on missing keys.
+    """
+    from repro.roofline.analysis import is_cell_artifact
+    out = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        try:
+            with open(f) as fh:
+                d = json.load(fh)
+        except (OSError, ValueError):
+            continue
+        if is_cell_artifact(d):
+            out.append((f, d))
+    return out
+
+
 def _cell_files():
-    # the aggregate design-space report lives next to the per-cell
-    # artifacts but has a different schema — per-cell globs must skip it
-    from repro.roofline.analysis import DESIGN_SPACE_JSON
-    return sorted(f for f in glob.glob(os.path.join(DRYRUN, "*.json"))
-                  if os.path.basename(f) != DESIGN_SPACE_JSON)
+    """Paths of the per-cell artifacts (see :func:`_cell_artifacts`)."""
+    return [f for f, _ in _cell_artifacts()]
 
 
 def explore(d: dict):
@@ -144,6 +165,62 @@ REPRESENTATIVE_WORKLOADS = {
 }
 
 
+def phy_frontier_report(n_fracs: int = 21, shorelines=(4.0, 8.0, 16.0)):
+    """First-class ``phy`` axis: the catalog across UCIe-A/UCIe-S at 32G
+    plus the forward-looking 48G (UCIe 2.0 scaling) points, in ONE
+    PHY-stacked evaluation.  Returns a JSON-able report for the CI
+    design-space artifact."""
+    from repro.core import (
+        UCIE_A_32G_55U, UCIE_A_48G_45U, UCIE_S_32G, UCIE_S_48G_110U,
+    )
+    from repro.core.memsys import grid_cache_stats
+    from repro.core.space import DesignSpace, axis, regimes
+
+    phys = [UCIE_S_32G, UCIE_A_32G_55U, UCIE_S_48G_110U, UCIE_A_48G_45U]
+    fracs = np.linspace(0.0, 1.0, n_fracs)
+    before = grid_cache_stats()
+    t0 = time.perf_counter()
+    res = DesignSpace([
+        axis("phy", phys),
+        axis("read_fraction", fracs),
+        axis("shoreline_mm", shorelines),
+    ]).evaluate(metrics=("bandwidth_gbs", "gbs_per_watt"))
+    dt = time.perf_counter() - t0
+    after = grid_cache_stats()
+    bw = res["bandwidth_gbs"]          # [S, F, M, L]
+    n_pts = int(np.prod(bw.shape))
+    print(f"phy axis: {len(phys)} PHYs x {len(bw.coord('system'))} "
+          f"approaches x {n_fracs} mixes x {len(shorelines)} shorelines "
+          f"= {n_pts} points in {dt:.2f}s "
+          f"[{after.misses - before.misses} compiles]")
+    report = {"phys": [p.name for p in phys],
+              "read_fractions": fracs.tolist(),
+              "shorelines": [float(s) for s in shorelines],
+              "best_approach_by_phy": {}, "regimes_by_phy": {}}
+    for p in phys:
+        front = res.frontier("bandwidth_gbs").sel(phy=p.name,
+                                                  shoreline_mm=8.0)
+        regs = regimes(front.values.tolist(), fracs)
+        report["regimes_by_phy"][p.name] = [
+            {"read_fraction_lo": lo, "read_fraction_hi": hi,
+             "best": str(lab)} for lo, hi, lab in regs]
+        at70 = front.values[int(round(0.7 * (n_fracs - 1)))]
+        report["best_approach_by_phy"][p.name] = str(at70)
+        peak = float(bw.sel(phy=p.name, shoreline_mm=8.0).values.max())
+        print(f"    {p.name:18s} best@70R30W {at70:24s} "
+              f"peak {peak:6.0f} GB/s @ 8 mm")
+    # §V scaling check surfaced in the artifact: at the SAME bump pitch
+    # (both UCIe-S points are 110um) 48G carries exactly 48/32 = 1.5x the
+    # bandwidth at identical pJ/b.  (The advanced 48G point above stacks a
+    # further 55/45 pitch gain on top, hence its larger peak.)
+    g32 = float(bw.sel(phy=UCIE_S_32G.name).values.max())
+    g48 = float(bw.sel(phy=UCIE_S_48G_110U.name).values.max())
+    report["bw_gain_48g_vs_32g_same_pitch"] = g48 / g32
+    print(f"    48G vs 32G same-pitch bandwidth gain: "
+          f"x{g48 / g32:.2f} at constant pJ/b")
+    return report
+
+
 def bridge_mode(n_fracs: int = 41, shorelines=(2.0, 4.0, 8.0, 16.0)):
     """Batched workload->design-space bridge over all available cells."""
     from repro.core.memsys import grid_cache_stats
@@ -151,9 +228,7 @@ def bridge_mode(n_fracs: int = 41, shorelines=(2.0, 4.0, 8.0, 16.0)):
     from repro.roofline.analysis import RooflineReport, bridge_design_space
 
     reports = {}
-    for f in _cell_files():
-        with open(f) as fh:
-            d = json.load(fh)
+    for _, d in _cell_artifacts():
         reports[f"{d['arch']}__{d['shape']}__{d['mesh']}"] = RooflineReport(
             **d["roofline"])
     if reports:
@@ -230,8 +305,14 @@ def bridge_mode(n_fracs: int = 41, shorelines=(2.0, 4.0, 8.0, 16.0)):
         print("    no disagreement: the closed forms pick the simulated "
               "winner everywhere")
 
+    # PHY as a first-class axis: UCIe-A/S at 32G + the 48G (UCIe 2.0
+    # scaling) points, one PHY-stacked compiled evaluation
+    print()
+    pf = phy_frontier_report()
+
     from repro.roofline.analysis import DESIGN_SPACE_JSON
     ds["joint_frontier"] = jf
+    ds["phy_frontier"] = pf
     os.makedirs(DRYRUN, exist_ok=True)
     out_path = os.path.join(DRYRUN, DESIGN_SPACE_JSON)
     with open(out_path, "w") as f:
@@ -248,18 +329,18 @@ def main():
         bridge_mode()
         return
     if args:
-        files = [args[0]]
+        with open(args[0]) as fh:
+            cells = [json.load(fh)]
     else:
-        files = _cell_files()[:3]
-    if not files:
+        cells = [d for _, d in _cell_artifacts()[:3]]
+    if not cells:
         print("no dry-run artifacts; run "
               "`PYTHONPATH=src python -m repro.launch.dryrun --all` first "
               "(or try `--sweep` for the design-space sweep, which needs "
               "no artifacts)")
         return
-    for f in files:
-        with open(f) as fh:
-            explore(json.load(fh))
+    for d in cells:
+        explore(d)
         print()
 
 

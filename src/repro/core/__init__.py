@@ -5,22 +5,25 @@ The primary contribution: analytical models of on-package memory over UCIe
 flit-level discrete-event simulator that validates the closed forms.
 
 The design-space surface is AXES-FIRST (:mod:`repro.core.space`): declare
-named axes — ``read_fraction`` / ``mix``, ``backlog``, ``shoreline_mm``,
-``workload_config``, ``protocol``, ``protocol_param``, and the pipelining
-axes ``k`` / ``ucie_line_ui`` / ``device_line_ui`` — and a
-:class:`DesignSpace` lowers any combination onto the batched engines
-through ONE shared shape-keyed compile cache, returning a named-axis
-:class:`SpaceResult` with ``sel()`` / ``frontier()`` / ``argbest()``
-queries:
+named axes — ``phy``, ``read_fraction`` / ``mix``, ``backlog``,
+``shoreline_mm``, ``workload_config``, ``protocol``, ``protocol_param``,
+``catalog_param``, and the pipelining axes ``k`` / ``ucie_line_ui`` /
+``device_line_ui`` — and a :class:`DesignSpace` lowers any combination
+onto the batched engines through ONE shared shape-keyed compile cache,
+returning a named-axis :class:`SpaceResult` with ``sel()`` /
+``frontier()`` / ``argbest()`` queries and a first-class
+``feasible(constraints)`` mask composable via ``where=``:
 
-    from repro.core import DesignSpace, axis
+    from repro.core import DesignSpace, SelectionConstraints, axis
+    from repro.core import UCIE_A_32G_55U, UCIE_S_32G, UCIE_A_48G_45U
     res = DesignSpace([
+        axis("phy", [UCIE_A_32G_55U, UCIE_S_32G, UCIE_A_48G_45U]),
         axis("read_fraction", [0.0, 0.5, 1.0]),
-        axis("backlog", [4, 64]),
         axis("shoreline_mm", [4.0, 8.0]),
     ]).evaluate()
     res["bandwidth_gbs"].argbest("system")      # frontier labels
-    res["sim_efficiency"].sel(backlog=64)
+    mask = res.feasible(SelectionConstraints(max_relative_bit_cost=2.0))
+    res.frontier("bandwidth_gbs", where=mask)   # feasible-set winners
 
 Legacy front-ends (``flitsim.sweep*``, ``memsys.catalog_grid`` /
 ``approach_grid``, ``selector.rank_grid``,
@@ -32,6 +35,7 @@ simulation and the closed forms disagree about the best memory system.
 """
 from repro.core.ucie import (
     UCIePhy, Packaging, UCIE_S_32G, UCIE_A_32G_55U, UCIE_A_32G_45U,
+    UCIE_S_48G_110U, UCIE_A_48G_45U, PERTURBABLE_PHY_FIELDS,
     IDLE_POWER_FRACTION, table1,
 )
 from repro.core.traffic import TrafficMix, PAPER_MIXES, mix_grid, mixes_named

@@ -88,6 +88,23 @@ def _register_params_pytree(cls):
     return cls
 
 
+def apply_perturbation(obj, pert: Mapping[str, float]):
+    """Multiplicatively scale the named fields of a frozen dataclass.
+
+    The shared perturbation core behind every sensitivity axis: the flit
+    simulators' ``protocol_param`` (scaling :class:`SymmetricFlitParams` /
+    :class:`AsymmetricLaneParams` stacks) and the analytic catalog's
+    ``catalog_param`` (scaling :class:`repro.core.ucie.UCIePhy` pJ/b and
+    density fields).  Fields ``obj`` doesn't have are ignored — validate
+    applicability upstream (:func:`check_perturbation` for flit params,
+    ``UCIePhy.perturbed`` for catalog params).
+    """
+    fields = {f.name for f in dataclasses.fields(type(obj))}
+    rep = {k: float(getattr(obj, k)) * float(s)
+           for k, s in pert.items() if k in fields}
+    return dataclasses.replace(obj, **rep) if rep else obj
+
+
 class _Stackable:
     """Mixin: stack N parameter sets into one pytree of ``[N]`` f32 arrays."""
 
@@ -99,10 +116,7 @@ class _Stackable:
     def perturbed(self, pert: Mapping[str, float]) -> "_Stackable":
         """Scale the named fields multiplicatively (fields this family
         doesn't have are ignored — validated upstream)."""
-        fields = {f.name for f in dataclasses.fields(type(self))}
-        rep = {k: float(getattr(self, k)) * float(s)
-               for k, s in pert.items() if k in fields}
-        return dataclasses.replace(self, **rep) if rep else self
+        return apply_perturbation(self, pert)
 
 
 @_register_params_pytree
@@ -175,11 +189,18 @@ PERTURBABLE_FIELDS: Tuple[str, ...] = tuple(sorted(
     | {f.name for f in dataclasses.fields(AsymmetricLaneParams)}))
 
 
-def _check_perturbation(pert: Mapping[str, float]) -> None:
+def check_perturbation(pert: Mapping[str, float]) -> None:
+    """Reject ``{field: scale}`` perturbations naming unknown flit-simulator
+    parameter fields (catalog perturbations are validated by
+    ``UCIePhy.perturbed`` against its own field set)."""
     unknown = [k for k in pert if k not in PERTURBABLE_FIELDS]
     if unknown:
         raise ValueError(f"unknown perturbation fields {unknown}; choose "
                          f"from {PERTURBABLE_FIELDS}")
+
+
+#: backwards-compatible alias (pre-shared-helper name)
+_check_perturbation = check_perturbation
 
 
 # -- simulator cores (traced params; static lengths only) ---------------------

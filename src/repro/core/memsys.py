@@ -15,6 +15,13 @@ SHARED design-space compile cache (:mod:`repro.core.space`), keyed on
 identically-shaped grid runs the warm executable.  :func:`catalog_grid` and
 :func:`approach_grid` remain as compatibility wrappers returning the legacy
 stacked dataclasses.
+
+The PHY is an axis, not a key suffix: :func:`run_catalog_phys_program` /
+:func:`run_approach_phys_program` stack (phy x system) pairs into the SAME
+cache families, which is what ``axis("phy", [...])`` lowers onto —
+:func:`approach_catalog_items` provides the PHY-less per-approach
+templates, and :func:`perturbed_catalog_items` folds ``catalog_param``
+perturbations (``UCIePhy.perturbed``) into the stack.
 """
 from __future__ import annotations
 
@@ -94,6 +101,55 @@ def default_catalog_items() -> Tuple[Tuple[str, MemorySystem], ...]:
     """The standard catalog as a hashable, cached tuple of items — the key
     the batched-grid compile cache is built on."""
     return tuple(standard_catalog().items())
+
+
+@functools.lru_cache(maxsize=1)
+def approach_catalog_items() -> Tuple[Tuple[str, MemorySystem], ...]:
+    """Per-approach :class:`MemorySystem` templates WITHOUT a baked PHY.
+
+    This is the catalog a ``phy`` axis stacks: the axes-first API pairs
+    each template with every PHY on the axis
+    (:func:`phy_stacked_items`), so the PHY is a queryable dimension of
+    the result instead of a ``/UCIe-A`` key suffix.  Bus baselines are
+    excluded — they do not attach over a UCIe PHY.
+    """
+    lat = latency_mod.MEASURED_FRONTEND_LATENCY_NS
+    return tuple(
+        (key, MemorySystem(
+            name=proto.name, protocol=proto, phy=None,
+            latency_ns=lat["UCIe-Memory"],
+            relative_bit_cost=7.5 if "hbm" in key else 1.0))
+        for key, proto in ALL_APPROACHES.items())
+
+
+def phy_stacked_items(items: Tuple[Tuple[str, MemorySystem], ...],
+                      phys) -> Tuple[Tuple[str, MemorySystem], ...]:
+    """Flatten (phy x system) into one stacked catalog: PHY-major order,
+    so program outputs reshape to ``[F, S, ...]``."""
+    return tuple(
+        (f"{key}@{phy.name}", dataclasses.replace(ms, phy=phy,
+                                                  name=f"{ms.name}/{phy.name}"))
+        for phy in phys for key, ms in items)
+
+
+def perturbed_catalog_items(items: Tuple[Tuple[str, MemorySystem], ...],
+                            perturbations
+                            ) -> Tuple[Tuple[str, MemorySystem], ...]:
+    """Flatten (catalog_param x system) into one stacked catalog.
+
+    Each multiplicative ``{field: scale}`` perturbation is applied to every
+    system's PHY (``UCIePhy.perturbed``); systems without a PHY (bus
+    baselines) pass through unperturbed — mirroring how an asymmetric flit
+    protocol ignores a symmetric-only ``protocol_param`` field.
+    Perturbation-major order: program outputs reshape to ``[Q, S, ...]``.
+    """
+    out = []
+    for pert in perturbations:
+        for key, ms in items:
+            if ms.phy is not None and pert:
+                ms = dataclasses.replace(ms, phy=ms.phy.perturbed(pert))
+            out.append((key, ms))
+    return tuple(out)
 
 
 # -- batched grid evaluation --------------------------------------------------
@@ -200,25 +256,65 @@ class ApproachGrid:
     pj_per_bit: jnp.ndarray
 
 
-def run_approach_program(phy: UCIePhy, x, y):
-    """Stacked approach-density program on (x, y); shared-cache memoized.
+def run_catalog_phys_program(items: Tuple[Tuple[str, MemorySystem], ...],
+                             phys, x, y, shoreline_mm):
+    """PHY-stacked variant of :func:`run_catalog_program`.
 
-    Returns ``(linear, areal, pj_per_bit)``, each ``[A, *x.shape]``.
+    ``items`` are PHY-less templates (:func:`approach_catalog_items`);
+    every (phy, system) pair is flattened into ONE stacked catalog program
+    (same ``memsys.catalog`` cache family — the full ``[phy x configs x
+    mix x shoreline]`` space still compiles once), then reshaped to
+    ``(bandwidth_gbs, pj_per_bit, power_w, gbs_per_watt)``, each
+    ``[F, S, *grid]``.
     """
+    phys = tuple(phys)
+    items = tuple(items)
+    flat = phy_stacked_items(items, phys)
+    bw, pjb, pw, gpw = run_catalog_program(flat, x, y, shoreline_mm)
+    lead = (len(phys), len(items))
+    return tuple(a.reshape(lead + a.shape[1:]) for a in (bw, pjb, pw, gpw))
+
+
+def run_approach_phys_program(phys, x, y):
+    """PHY-stacked approach-density program on (x, y); shared-cache
+    memoized (``memsys.approach`` family — one compile per (phys,
+    grid-shape)).
+
+    Returns ``(linear, areal, pj_per_bit)``, each ``[F, A, *x.shape]``.
+    """
+    phys = tuple(phys)
     x = jnp.asarray(x, jnp.float32)
     y = jnp.asarray(y, jnp.float32)
     protos = tuple(ALL_APPROACHES.values())
 
     def fn(x, y):
-        lin = jnp.stack([p.bw_density_linear(x, y, phy) for p in protos])
-        areal = jnp.stack([p.bw_density_areal(x, y, phy) for p in protos])
-        pjb = jnp.stack([jnp.broadcast_to(p.power_pj_per_bit(x, y, phy),
-                                          lin.shape[1:]) for p in protos])
+        lin = jnp.stack([
+            jnp.stack([p.bw_density_linear(x, y, phy) for p in protos])
+            for phy in phys])
+        areal = jnp.stack([
+            jnp.stack([p.bw_density_areal(x, y, phy) for p in protos])
+            for phy in phys])
+        pjb = jnp.stack([
+            jnp.stack([jnp.broadcast_to(p.power_pj_per_bit(x, y, phy),
+                                        lin.shape[2:]) for p in protos])
+            for phy in phys])
         return lin, areal, pjb
 
-    prog = cached_program("memsys.approach", (phy, x.shape, y.shape),
+    prog = cached_program("memsys.approach", (phys, x.shape, y.shape),
                           fn, (x, y))
     return prog(x, y)
+
+
+def run_approach_program(phy: UCIePhy, x, y):
+    """Stacked approach-density program on (x, y); shared-cache memoized.
+
+    Single-PHY wrapper over :func:`run_approach_phys_program` — the same
+    executable serves ``approach_grid``, ``DesignSpace(phy=...)`` and a
+    one-entry ``phy`` axis.  Returns ``(linear, areal, pj_per_bit)``, each
+    ``[A, *x.shape]``.
+    """
+    lin, areal, pjb = run_approach_phys_program((phy,), x, y)
+    return lin[0], areal[0], pjb[0]
 
 
 def approach_grid(phy: UCIePhy, x, y) -> ApproachGrid:

@@ -13,9 +13,12 @@ catalog_grid` — itself a wrapper over the shared design-space engine in
 compiled call, and :func:`rank_grid` extends the same program to dense mix
 grids — the best system for hundreds of (x, y) points resolves in a single
 compiled evaluation instead of a per-point Python loop.  The masking /
-argbest core is :func:`grid_ranking`, which also serves the axes-first
-``DesignSpace`` front-ends (``bridge_design_space`` feeds it per-workload
-validity masks for the per-mix backlog-knee budget).
+argbest core is :func:`grid_ranking`; its static per-system admissibility
+(:func:`system_mask`) is the same core the axes-first
+:meth:`repro.core.space.SpaceResult.feasible` mask builds on, so
+constraint masking composes with arbitrary axes (``frontier(...,
+where=mask)``), not just this module's grid layout —
+``bridge_design_space`` consumes the feasible/``where=`` path directly.
 """
 from __future__ import annotations
 
@@ -95,13 +98,19 @@ def _default_knees() -> Dict[str, float]:
     return flitsim.backlog_knees()
 
 
-def _static_mask(items, constraints: SelectionConstraints) -> np.ndarray:
+def system_mask(items, constraints: SelectionConstraints) -> np.ndarray:
     """Per-system admissibility that doesn't depend on the mix point:
-    packaging, relative bit cost, and the backlog-knee budget.
+    packaging, relative bit cost, and the backlog-knee budget (canonical
+    envelope).
 
     A packaging constraint names a UCIe package variant, so it admits only
     systems actually attached over that package: bus baselines (``ms.phy is
     None``) are excluded, not waved through.
+
+    This is the shared static core behind :func:`rank`,
+    :func:`grid_ranking` AND the axes-first
+    :meth:`repro.core.space.SpaceResult.feasible` mask (which refines the
+    knee budget per workload/mix before composing with arbitrary axes).
     """
     mask = np.ones(len(items), dtype=bool)
     knees = None
@@ -152,7 +161,7 @@ def rank(mix: TrafficMix,
     bw = np.asarray(grid.bandwidth_gbs, dtype=np.float64)
     pjb = np.asarray(grid.pj_per_bit, dtype=np.float64)
     pw = np.asarray(grid.power_w, dtype=np.float64)
-    static_ok = _static_mask(items, constraints)
+    static_ok = system_mask(items, constraints)
     out: List[RankedSystem] = []
     for i, (key, ms) in enumerate(items):
         if not static_ok[i]:
@@ -219,13 +228,15 @@ def grid_ranking(items, grid: CatalogGrid,
     """Mask + argbest core over an already-evaluated :class:`CatalogGrid`.
 
     ``valid_mask`` (optional, broadcastable against ``[S, *mix_shape]``)
-    adds point-dependent admissibility on top of the constraint masks —
-    this is how the design-space bridge applies each workload's OWN
-    backlog-knee budget along the configs axis instead of the canonical
-    envelope.
+    adds point-dependent admissibility on top of the constraint masks.
+    New code should prefer the axes-first path —
+    ``SpaceResult.feasible(constraints)`` composed through ``frontier(...,
+    where=mask)`` — which derives the same masks (including per-workload
+    backlog-knee budgets) from named axes instead of positional grids;
+    the design-space bridge now consumes that path.
     """
     score = _score(grid, objective)
-    valid = jnp.asarray(_static_mask(items, constraints)).reshape(
+    valid = jnp.asarray(system_mask(items, constraints)).reshape(
         (len(items),) + (1,) * (score.ndim - 1))
     valid = jnp.broadcast_to(valid, score.shape)
     if valid_mask is not None:

@@ -5,9 +5,10 @@ backlog and shoreline dimensions *jointly*.  This module is the single
 front door to those sweeps:
 
   * :func:`axis` / :class:`Axis` / :class:`AxisSet` — a declarative spec of
-    named design-space axes (``read_fraction``, ``mix``, ``backlog``,
-    ``shoreline_mm``, ``workload_config``, ``protocol``, ``protocol_param``,
-    and the pipelining axes ``k`` / ``ucie_line_ui`` / ``device_line_ui``).
+    named design-space axes (``phy``, ``read_fraction``, ``mix``,
+    ``backlog``, ``shoreline_mm``, ``workload_config``, ``protocol``,
+    ``protocol_param``, ``catalog_param``, and the pipelining axes ``k`` /
+    ``ucie_line_ui`` / ``device_line_ui``).
   * :class:`DesignSpace` — lowers any requested axis combination onto the
     existing batched ``lax.scan``/``vmap`` cores (flit simulators, analytic
     catalog, Fig-13 pipelining) through one shared shape-keyed compile
@@ -36,6 +37,33 @@ stack and every grid shape and static length.  ``cache_stats()`` exposes
 hit/miss counters globally or per family — one miss == one trace+compile;
 tests assert the full joint space compiles exactly once per engine family
 and that legacy wrappers run warm against a space-primed cache.
+
+Migration: PHY sweeps and feasibility masking
+---------------------------------------------
+The PHY is a first-class ``phy`` axis and feasibility is a first-class
+mask; the pre-axis idioms map onto them as follows:
+
+=====================================================  ======================
+legacy idiom                                           axes-first equivalent
+=====================================================  ======================
+``approach_grid(phy, x, y).linear``                    ``DesignSpace([axis("phy", [phy]), axis("mix", ...)]).evaluate()`` →
+                                                       ``res["linear_density_gbs_mm"].sel(phy=phy.name)``
+two ``approach_grid`` calls (UCIe-A, UCIe-S)           one ``axis("phy", [UCIE_A_32G_55U, UCIE_S_32G, UCIE_A_48G_45U, ...])``
+catalog keys ``"E:cxl-mem-opt/UCIe-A"``                system ``"E:cxl-mem-opt"`` x phy coordinate ``"UCIe-A-32G-55u"``
+``rank_grid(x, y, constraints).best_keys()``           ``mask = res.feasible(constraints)`` then
+                                                       ``res.frontier("bandwidth_gbs", where=mask)``
+``grid_ranking(..., valid_mask=...)`` (bridge)         ``res.feasible(constraints)`` — the backlog-knee budget follows the
+                                                       ``workload_config`` axis automatically
+``flitsim.sweep_perturbed({field: scale})``            ``axis("protocol_param", [...])`` (flit params) /
+                                                       ``axis("catalog_param", [...])`` (PHY pJ/b + densities)
+=====================================================  ======================
+
+Feasible-set masks are plain boolean :class:`SpaceArray` values:
+``res.feasible(constraints)`` composes with ANY axis combination, and
+``sel()`` / ``argbest()`` / ``frontier()`` accept them via ``where=``
+(masked-out cells become NaN under ``sel``, are excluded from ``argbest``
+/ ``frontier``, and grid points with no admissible system read
+``"(none)"``, matching ``GridRanking.best_keys()``).
 """
 from __future__ import annotations
 
@@ -133,10 +161,13 @@ def clear_cache(families: Optional[Sequence[str]] = None) -> None:
 OWN_MIX = "own"
 
 #: canonical axis order — result dims always follow this order (with the
-#: implicit ``system`` / ``protocol`` / ``approach`` dims leading)
+#: implicit ``system`` / ``protocol`` / ``approach`` dims leading; the
+#: ``phy`` axis trails the stack dim, mirroring how ``protocol`` leads
+#: ``backlog``)
 AXIS_ORDER: Tuple[str, ...] = (
-    "protocol_param", "protocol", "backlog", "workload_config", "mix",
-    "read_fraction", "shoreline_mm", "k", "ucie_line_ui", "device_line_ui")
+    "catalog_param", "phy", "protocol_param", "protocol", "backlog",
+    "workload_config", "mix", "read_fraction", "shoreline_mm", "k",
+    "ucie_line_ui", "device_line_ui")
 
 _MIX_LIKE = ("mix", "read_fraction")
 
@@ -195,9 +226,12 @@ class Axis:
         return len(self.values)
 
     def index(self, label) -> int:
-        """Position of ``label`` (accepts raw values for mix-like axes)."""
+        """Position of ``label`` (accepts raw values for mix-like axes and
+        ``UCIePhy`` objects for the ``phy`` axis)."""
         if label in self.labels:
             return self.labels.index(label)
+        if self.name == "phy" and label in self.values:
+            return self.values.index(label)
         if self.name == "mix" and label != OWN_MIX:
             return self.labels.index(_mix_label(*_as_mix_tuple(label)))
         if self.name in ("backlog", "shoreline_mm", "read_fraction",
@@ -218,13 +252,36 @@ def axis(name: str, values: Sequence[Any],
     ``workload_config`` accepts a mapping or ``(name, mix-or-report)``
     pairs.  ``protocol_param`` accepts ``{field: scale}`` dicts or
     ``(label, dict)`` pairs — multiplicative perturbations applied to the
-    flit-simulator parameter stacks.
+    flit-simulator parameter stacks; ``catalog_param`` is its analytic
+    twin (PHY pJ/b and shoreline/areal density scales).  ``phy`` accepts
+    :class:`repro.core.ucie.UCIePhy` instances (labels: their names).
     """
     vals = list(values.items()) if isinstance(values, Mapping) else \
         list(values)
     if not vals:
         raise ValueError(f"axis {name!r} needs at least one value")
-    if name == "mix":
+    if name == "phy":
+        from repro.core.ucie import UCIePhy
+        bad = [v for v in vals if not isinstance(v, UCIePhy)]
+        if bad:
+            raise ValueError(f"axis 'phy' values must be UCIePhy "
+                             f"instances, got {bad}")
+        norm = list(vals)
+        labs = [p.name for p in vals]
+        if len(set(labs)) != len(labs):
+            raise ValueError(f"duplicate phy names on the axis: {labs}")
+    elif name == "catalog_param":
+        from repro.core.ucie import PERTURBABLE_PHY_FIELDS
+        norm = [_as_perturbation(v) for v in vals]
+        for _, items in norm:
+            unknown = [k for k, _ in items
+                       if k not in PERTURBABLE_PHY_FIELDS]
+            if unknown:
+                raise ValueError(
+                    f"unknown catalog perturbation fields {unknown}; "
+                    f"choose from {PERTURBABLE_PHY_FIELDS}")
+        labs = [lab for lab, _ in norm]
+    elif name == "mix":
         norm = [OWN_MIX if (isinstance(v, str) and v == OWN_MIX)
                 else _as_mix_tuple(v) for v in vals]
         labs = [OWN_MIX if v == OWN_MIX else _mix_label(*v) for v in norm]
@@ -310,6 +367,48 @@ class AxisSet:
 # =========================================================================
 
 
+def _union_layout(a: "SpaceArray", b: "SpaceArray"
+                  ) -> Tuple[Tuple[str, ...], Tuple[Tuple[Any, ...], ...]]:
+    """Union of two arrays' named dims (a's order first, b's extras
+    appended), with coords reconciled — mismatched labels on a shared dim
+    are an error, not a silent broadcast."""
+    dims = list(a.dims) + [d for d in b.dims if d not in a.dims]
+    coords = []
+    for d in dims:
+        ca = a.coord(d) if d in a.dims else None
+        cb = b.coord(d) if d in b.dims else None
+        if ca is not None and cb is not None and ca != cb:
+            raise ValueError(f"dim {d!r} has mismatched coords: "
+                             f"{ca} vs {cb}")
+        coords.append(ca if ca is not None else cb)
+    return tuple(dims), tuple(coords)
+
+
+def _expand_to(dims: Tuple[str, ...], coords, arr: "SpaceArray"
+               ) -> np.ndarray:
+    """View of ``arr.values`` broadcastable over the ``dims`` layout."""
+    unknown = [d for d in arr.dims if d not in dims]
+    if unknown:
+        raise ValueError(f"dims {unknown} of the operand are not in the "
+                         f"target layout {dims}")
+    perm = sorted(range(len(arr.dims)),
+                  key=lambda i: dims.index(arr.dims[i]))
+    v = np.transpose(arr.values, perm)
+    shape = tuple(len(coords[j]) if dims[j] in arr.dims else 1
+                  for j in range(len(dims)))
+    return v.reshape(shape)
+
+
+def _as_mask(where, like: "SpaceArray") -> "SpaceArray":
+    """Normalize a ``where=`` operand to a boolean :class:`SpaceArray`
+    (raw arrays are taken over ``like``'s layout)."""
+    if isinstance(where, SpaceArray):
+        return SpaceArray(where.dims, where.coords,
+                          np.asarray(where.values, bool))
+    return SpaceArray(like.dims, like.coords,
+                      np.broadcast_to(np.asarray(where, bool), like.shape))
+
+
 @dataclasses.dataclass(frozen=True)
 class SpaceArray:
     """A metric array with named dims and label coordinates."""
@@ -337,6 +436,9 @@ class SpaceArray:
         labels = self.coord(dim)
         if label in labels:
             return labels.index(label)
+        # a UCIePhy (or anything named) selects by its name on a phy dim
+        if getattr(label, "name", None) in labels:
+            return labels.index(label.name)
         if dim == "mix" and label != OWN_MIX:
             try:
                 return labels.index(_mix_label(*_as_mix_tuple(label)))
@@ -357,31 +459,94 @@ class SpaceArray:
             del dims[ax], coords[ax]
         return SpaceArray(tuple(dims), tuple(coords), np.asarray(out))
 
-    def sel(self, **labels) -> "SpaceArray":
-        """Label-based selection; each selected dim is dropped."""
-        return self.isel(**{d: self._label_index(d, v)
-                            for d, v in labels.items()})
+    def sel(self, *, where=None, **labels) -> "SpaceArray":
+        """Label-based selection; each selected dim is dropped.
 
-    def argbest(self, dim: str = "system",
-                mode: str = "max") -> "SpaceArray":
-        """Best label along ``dim`` per remaining point."""
+        ``where`` (a boolean :class:`SpaceArray`, e.g. from
+        :meth:`SpaceResult.feasible`, or a raw broadcastable array) masks
+        the selected values: cells outside the mask become NaN.  A
+        ``SpaceArray`` mask is label-selected alongside the data, so the
+        same mask composes with any slicing.
+        """
+        out = self.isel(**{d: self._label_index(d, v)
+                           for d, v in labels.items()})
+        if where is None:
+            return out
+        w = _as_mask(where, self)
+        w = w.isel(**{d: w._label_index(d, v) for d, v in labels.items()
+                      if d in w.dims})
+        dims, coords = _union_layout(out, w)
+        if dims != out.dims:
+            raise ValueError(
+                f"where-mask dims {w.dims} are not a subset of the "
+                f"selected array dims {out.dims}")
+        wv = np.broadcast_to(_expand_to(dims, coords, w), out.shape)
+        return SpaceArray(out.dims, out.coords,
+                          np.where(wv, out.values, np.nan))
+
+    def argbest(self, dim: str = "system", mode: str = "max",
+                where=None) -> "SpaceArray":
+        """Best label along ``dim`` per remaining point.
+
+        ``where`` (boolean :class:`SpaceArray` or broadcastable array)
+        restricts the candidates: masked-out entries never win, and points
+        where NOTHING is admissible read ``"(none)"`` (the
+        ``GridRanking.best_keys()`` sentinel).  A mask carrying extra dims
+        (e.g. a per-shoreline feasibility mask applied to a per-system
+        latency column) broadcasts the result over them.
+        """
         if mode not in ("max", "min"):
             raise ValueError(f"mode must be 'max' or 'min', got {mode!r}")
-        ax = self.dims.index(dim)
-        idx = (np.argmax if mode == "max" else np.argmin)(self.values,
-                                                          axis=ax)
-        labels = np.asarray(self.coord(dim), dtype=object)[idx]
-        dims = self.dims[:ax] + self.dims[ax + 1:]
-        coords = self.coords[:ax] + self.coords[ax + 1:]
-        return SpaceArray(dims, coords, labels)
+        if where is None:
+            ax = self.dims.index(dim)
+            idx = (np.argmax if mode == "max" else np.argmin)(self.values,
+                                                              axis=ax)
+            labels = np.asarray(self.coord(dim), dtype=object)[idx]
+            dims = self.dims[:ax] + self.dims[ax + 1:]
+            coords = self.coords[:ax] + self.coords[ax + 1:]
+            return SpaceArray(dims, coords, labels)
+        w = _as_mask(where, self)
+        dims, coords = _union_layout(self, w)
+        if dim not in dims:
+            raise KeyError(f"dim {dim!r} not in {dims}")
+        shape = tuple(len(c) for c in coords)
+        vals = np.broadcast_to(_expand_to(dims, coords, self), shape)
+        wv = np.broadcast_to(_expand_to(dims, coords, w), shape)
+        fill = -np.inf if mode == "max" else np.inf
+        masked = np.where(wv, np.asarray(vals, np.float64), fill)
+        ax = dims.index(dim)
+        idx = (np.argmax if mode == "max" else np.argmin)(masked, axis=ax)
+        labels = np.asarray(coords[ax], dtype=object)[idx]
+        labels = np.where(wv.any(axis=ax), labels, "(none)")
+        return SpaceArray(dims[:ax] + dims[ax + 1:],
+                          coords[:ax] + coords[ax + 1:],
+                          np.asarray(labels, dtype=object))
 
-    def best(self, dim: str = "system", mode: str = "max") -> "SpaceArray":
-        """Best value along ``dim`` per remaining point."""
-        ax = self.dims.index(dim)
-        red = (np.max if mode == "max" else np.min)(self.values, axis=ax)
-        dims = self.dims[:ax] + self.dims[ax + 1:]
-        coords = self.coords[:ax] + self.coords[ax + 1:]
-        return SpaceArray(dims, coords, np.asarray(red))
+    def best(self, dim: str = "system", mode: str = "max",
+             where=None) -> "SpaceArray":
+        """Best value along ``dim`` per remaining point (NaN where the
+        ``where`` mask admits nothing)."""
+        if mode not in ("max", "min"):
+            raise ValueError(f"mode must be 'max' or 'min', got {mode!r}")
+        if where is None:
+            ax = self.dims.index(dim)
+            red = (np.max if mode == "max" else np.min)(self.values,
+                                                        axis=ax)
+            dims = self.dims[:ax] + self.dims[ax + 1:]
+            coords = self.coords[:ax] + self.coords[ax + 1:]
+            return SpaceArray(dims, coords, np.asarray(red))
+        w = _as_mask(where, self)
+        dims, coords = _union_layout(self, w)
+        shape = tuple(len(c) for c in coords)
+        vals = np.broadcast_to(_expand_to(dims, coords, self), shape)
+        wv = np.broadcast_to(_expand_to(dims, coords, w), shape)
+        fill = -np.inf if mode == "max" else np.inf
+        masked = np.where(wv, np.asarray(vals, np.float64), fill)
+        ax = dims.index(dim)
+        red = (np.max if mode == "max" else np.min)(masked, axis=ax)
+        red = np.where(wv.any(axis=ax), red, np.nan)
+        return SpaceArray(dims[:ax] + dims[ax + 1:],
+                          coords[:ax] + coords[ax + 1:], np.asarray(red))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -406,32 +571,176 @@ class SpaceResult:
     def metrics(self) -> Tuple[str, ...]:
         return tuple(self.arrays)
 
-    def sel(self, **labels) -> "SpaceResult":
+    def sel(self, *, where=None, **labels) -> "SpaceResult":
         """Label-select across every array carrying the named dims.
 
         Arrays without a requested dim pass through untouched, but a dim
         present on NO array is an error — a typo must not silently return
-        the unfiltered result.
+        the unfiltered result.  ``where`` (a boolean :class:`SpaceArray`,
+        e.g. from :meth:`feasible`) NaN-masks every array that carries all
+        of the mask's (post-selection) dims; arrays that don't pass
+        through untouched.
         """
         known = {d for arr in self.arrays.values() for d in arr.dims}
         missing = [d for d in labels if d not in known]
         if missing:
             raise KeyError(f"dims {missing} not present on any array; "
                            f"available dims: {sorted(known)}")
+        w_sel = None
+        if where is not None:
+            w_sel = _as_mask(where, next(iter(self.arrays.values())))
+            w_sel = w_sel.isel(**{d: w_sel._label_index(d, v)
+                                  for d, v in labels.items()
+                                  if d in w_sel.dims})
         out = {}
         for name, arr in self.arrays.items():
             use = {d: v for d, v in labels.items() if d in arr.dims}
-            out[name] = arr.sel(**use) if use else arr
+            a2 = arr.isel(**{d: arr._label_index(d, v)
+                             for d, v in use.items()}) if use else arr
+            if w_sel is not None and set(w_sel.dims) <= set(a2.dims):
+                a2 = a2.sel(where=w_sel)
+            out[name] = a2
         return SpaceResult(axes=self.axes, arrays=out)
 
     def argbest(self, metric: str, dim: str = "system",
-                mode: str = "max") -> SpaceArray:
-        return self.arrays[metric].argbest(dim, mode)
+                mode: str = "max", where=None) -> SpaceArray:
+        return self.arrays[metric].argbest(dim, mode, where=where)
 
     def frontier(self, metric: str, dim: str = "system",
-                 mode: str = "max") -> SpaceArray:
-        """Alias of :meth:`argbest` — the winning label per grid point."""
-        return self.argbest(metric, dim, mode)
+                 mode: str = "max", where=None) -> SpaceArray:
+        """Alias of :meth:`argbest` — the winning label per grid point.
+
+        ``where=res.feasible(constraints)`` restricts the frontier to the
+        admissible set; points where nothing is admissible read
+        ``"(none)"``.
+        """
+        return self.argbest(metric, dim, mode, where=where)
+
+    def feasible(self, constraints=None, *,
+                 catalog: Optional[Mapping[str, Any]] = None) -> SpaceArray:
+        """First-class feasibility: a boolean :class:`SpaceArray` marking
+        which (system, grid-point) cells satisfy ``constraints``
+        (:class:`repro.core.selector.SelectionConstraints`).
+
+        The mask composes with ARBITRARY axes — pass it to ``sel()`` /
+        ``argbest()`` / ``frontier()`` via ``where=``.  Constraint
+        semantics:
+
+        * packaging / relative bit cost — per system; with a ``phy`` axis
+          the packaging constraint masks along the phy dim instead of
+          parsing ``/UCIe-A`` key suffixes.
+        * ``max_backlog_knee`` — the queue-depth budget follows the most
+          specific traffic information available: per ``workload_config``
+          (each workload's OWN HLO-derived mix — the bridge semantics),
+          else per mix point along the ``mix``/``read_fraction`` axis,
+          else the canonical-mix envelope.
+        * ``max_power_w`` / ``required_bandwidth_gbs`` — point-dependent,
+          read from the evaluated ``power_w`` / ``bandwidth_gbs`` arrays.
+
+        ``catalog`` must echo the ``DesignSpace(catalog=...)`` mapping when
+        a custom one was evaluated (the result only carries keys).
+        """
+        from repro.core import memsys
+        from repro.core import selector as selector_mod
+        if constraints is None:
+            constraints = selector_mod.SelectionConstraints()
+        base = None
+        for m in ANALYTIC_METRICS:
+            if m in self.arrays:
+                base = self.arrays[m]
+                break
+        if base is None:
+            raise ValueError(
+                "feasible() needs at least one analytic catalog metric "
+                f"({ANALYTIC_METRICS}) on the result; evaluate them first")
+        dims, coords = base.dims, base.coords
+        keys = base.coord("system")
+        mask = np.ones(tuple(len(c) for c in coords), dtype=bool)
+
+        def apply(sub_dims, sub_vals):
+            sub = SpaceArray(tuple(sub_dims),
+                             tuple(coords[dims.index(d)] for d in sub_dims),
+                             np.asarray(sub_vals))
+            return np.broadcast_to(_expand_to(dims, coords, sub),
+                                   mask.shape)
+
+        phy_ax = self.axes.get("phy")
+        if phy_ax is not None and "phy" in dims:
+            items = dict(memsys.approach_catalog_items())
+            missing = [k for k in keys if k not in items]
+            if missing:
+                raise ValueError(f"unknown approach keys {missing} on the "
+                                 "system axis of a phy-stacked result")
+            items = tuple((k, items[k]) for k in keys)
+            if constraints.packaging:
+                mask &= apply(("phy",), [
+                    p.packaging.value == constraints.packaging
+                    for p in phy_ax.values])
+            if constraints.max_relative_bit_cost is not None:
+                mask &= apply(("system",), [
+                    ms.relative_bit_cost <= constraints.max_relative_bit_cost
+                    for _, ms in items])
+        else:
+            items = (memsys.default_catalog_items() if catalog is None
+                     else tuple(catalog.items()))
+            if tuple(k for k, _ in items) != tuple(keys):
+                raise ValueError(
+                    "catalog keys do not match the result's system axis; "
+                    "pass feasible(catalog=...) matching the evaluated "
+                    "DesignSpace(catalog=...)")
+            static = selector_mod.system_mask(
+                items, dataclasses.replace(constraints,
+                                           max_backlog_knee=None))
+            mask &= apply(("system",), static)
+
+        if constraints.max_backlog_knee is not None:
+            mask &= self._knee_mask(keys, constraints, apply)
+
+        if constraints.max_power_w is not None:
+            pw = self.arrays.get("power_w")
+            if pw is None:
+                raise ValueError("a max_power_w constraint needs the "
+                                 "'power_w' metric on the result")
+            mask &= apply(pw.dims, pw.values <= constraints.max_power_w)
+        if constraints.required_bandwidth_gbs is not None:
+            bw = self.arrays.get("bandwidth_gbs")
+            if bw is None:
+                raise ValueError("a required_bandwidth_gbs constraint "
+                                 "needs the 'bandwidth_gbs' metric on the "
+                                 "result")
+            mask &= apply(bw.dims,
+                          bw.values >= constraints.required_bandwidth_gbs)
+        return SpaceArray(dims, coords, mask)
+
+    def _knee_mask(self, keys, constraints, apply) -> np.ndarray:
+        """Backlog-knee admissibility at the most specific mix available:
+        per workload config, else per mix point, else the envelope."""
+        from repro.core import flitsim
+        from repro.core import selector as selector_mod
+        budget = constraints.max_backlog_knee
+        simkeys = [selector_mod.sim_key_for(k) for k in keys]
+        cfg = self.axes.get("workload_config")
+        mix_ax = self.axes.mix_axis()
+        if cfg is not None:
+            mixes = [(w.x, w.y) for _, w in cfg.values]
+            per_dims = ("system", "workload_config")
+        elif mix_ax is not None and OWN_MIX not in mix_ax.values:
+            if mix_ax.name == "read_fraction":
+                mixes = [(100.0 * r, 100.0 - 100.0 * r)
+                         for r in mix_ax.values]
+            else:
+                mixes = list(mix_ax.values)
+            per_dims = ("system", mix_ax.name)
+        else:
+            knees = selector_mod._default_knees()
+            sub = [sk is None or knees[sk] <= budget for sk in simkeys]
+            return apply(("system",), sub)
+        per = flitsim.backlog_knees(mixes=mixes, per_mix=True)
+        sub = np.ones((len(keys), len(mixes)), dtype=bool)
+        for i, sk in enumerate(simkeys):
+            if sk is not None:
+                sub[i] = per[sk] <= budget
+        return apply(per_dims, sub)
 
 
 def regimes(labels: Sequence[Any], fracs: Sequence[float]
@@ -515,6 +824,16 @@ class DesignSpace:
                     "workload_config" not in self.axes:
                 raise ValueError("mix axis uses OWN_MIX but no "
                                  "workload_config axis provides the mixes")
+        if "phy" in self.axes:
+            if self.phy is not None:
+                raise ValueError("pass the PHY either as "
+                                 "DesignSpace(phy=...) or as a 'phy' "
+                                 "axis, not both")
+            if self.catalog is not None:
+                raise ValueError(
+                    "a 'phy' axis stacks the per-approach templates "
+                    "(memsys.approach_catalog_items) and is incompatible "
+                    "with a custom catalog= of PHY-baked systems")
 
     # -- lowering helpers ---------------------------------------------------
 
@@ -558,8 +877,15 @@ class DesignSpace:
         out: List[str] = []
         names = self.axes.names
         if self.axes.mix_axis() is not None or "workload_config" in names:
-            out += list(APPROACH_METRICS) if self.phy is not None else \
-                list(ANALYTIC_METRICS) + list(SYSTEM_METRICS)
+            if self.phy is not None:
+                out += list(APPROACH_METRICS)
+            elif "phy" in names:
+                # a phy axis serves both views: the PHY-stacked catalog
+                # and the Fig 10-12 approach-density sweeps
+                out += (list(ANALYTIC_METRICS) + list(SYSTEM_METRICS)
+                        + list(APPROACH_METRICS))
+            else:
+                out += list(ANALYTIC_METRICS) + list(SYSTEM_METRICS)
             if ("backlog" in names or "protocol" in names
                     or "protocol_param" in names):
                 out += list(SIM_METRICS)
@@ -596,10 +922,16 @@ class DesignSpace:
             arrays.update(self._eval_pipelining(wanted))
         return SpaceResult(axes=self.axes, arrays=arrays)
 
+    def _perturbations(self) -> List[Dict[str, float]]:
+        cp_ax = self.axes.get("catalog_param")
+        return ([dict(p) for _, p in cp_ax.values]
+                if cp_ax is not None else [{}])
+
     def _eval_catalog(self, wanted) -> Dict[str, SpaceArray]:
         from repro.core import memsys
-        items = (memsys.default_catalog_items() if self.catalog is None
-                 else tuple(self.catalog.items()))
+        phy_ax = self.axes.get("phy")
+        cp_ax = self.axes.get("catalog_param")
+        perts = self._perturbations()
         x, y, mix_dims = self._mix_arrays()
         sl_ax = self.axes.get("shoreline_mm")
         if sl_ax is not None:
@@ -608,21 +940,49 @@ class DesignSpace:
         else:
             sl = np.float32(self.default_shoreline_mm)
             xb, yb = x, y
-        bw, pjb, pw, gpw = memsys.run_catalog_program(items, xb, yb, sl)
+        if phy_ax is not None:
+            # PHY-stacked engine: (catalog_param x phy) folded into the
+            # phys stack, approaches as the system dim (no bus baselines)
+            items = memsys.approach_catalog_items()
+            phys = [phy.perturbed(p) for p in perts for phy in phy_ax.values]
+            grids = memsys.run_catalog_phys_program(items, phys, xb, yb, sl)
+            lead = (len(perts), len(phy_ax), len(items))
+            # [Q*F, S, ...] -> [Q, S, F, ...] (system before phy)
+            grids = [np.moveaxis(
+                np.asarray(g).reshape(lead + np.asarray(g).shape[2:]), 2, 1)
+                for g in grids]
+            extra_dims: Tuple[str, ...] = ("phy",)
+            extra_coords: Tuple[Tuple[Any, ...], ...] = (phy_ax.labels,)
+        else:
+            items = (memsys.default_catalog_items() if self.catalog is None
+                     else tuple(self.catalog.items()))
+            flat = (memsys.perturbed_catalog_items(items, perts)
+                    if cp_ax is not None else items)
+            grids = memsys.run_catalog_program(flat, xb, yb, sl)
+            lead = (len(perts), len(items))
+            grids = [np.asarray(g).reshape(lead + np.asarray(g).shape[1:])
+                     for g in grids]
+            extra_dims, extra_coords = (), ()
+        bw, pjb, pw, gpw = grids
         keys = tuple(k for k, _ in items)
-        dims = ("system",) + mix_dims + (
+        dims = ("catalog_param", "system") + extra_dims + mix_dims + (
             ("shoreline_mm",) if sl_ax is not None else ())
-        coords = (keys,) + tuple(self.axes[d].labels for d in mix_dims) + (
-            (sl_ax.labels,) if sl_ax is not None else ())
+        coords = ((cp_ax.labels if cp_ax is not None else ("baseline",)),
+                  keys) + extra_coords \
+            + tuple(self.axes[d].labels for d in mix_dims) \
+            + ((sl_ax.labels,) if sl_ax is not None else ())
+        if cp_ax is None:
+            dims, coords = dims[1:], coords[1:]
         vals = {"bandwidth_gbs": bw, "pj_per_bit": pjb, "power_w": pw,
                 "gbs_per_watt": gpw}
         out: Dict[str, SpaceArray] = {}
         for name in ANALYTIC_METRICS:
             if name in wanted:
                 v = np.asarray(vals[name])
+                if cp_ax is None:
+                    v = v[0]
                 # squeeze the placeholder mix point when no traffic axis
-                v = v.reshape((len(keys),) + tuple(
-                    len(c) for c in coords[1:]))
+                v = v.reshape(tuple(len(c) for c in coords))
                 out[name] = SpaceArray(dims, coords, v)
         if "latency_ns" in wanted:
             out["latency_ns"] = SpaceArray(
@@ -637,21 +997,47 @@ class DesignSpace:
 
     def _eval_approaches(self, wanted) -> Dict[str, SpaceArray]:
         from repro.core import memsys
-        if self.phy is None:
-            raise ValueError("approach metrics need DesignSpace(phy=...)")
+        phy_ax = self.axes.get("phy")
+        cp_ax = self.axes.get("catalog_param")
+        perts = self._perturbations()
+        if self.phy is None and phy_ax is None:
+            raise ValueError("approach metrics need DesignSpace(phy=...) "
+                             "or a 'phy' axis")
+        base_phys = (list(phy_ax.values) if phy_ax is not None
+                     else [self.phy])
+        phys = [p.perturbed(q) for q in perts for p in base_phys]
         x, y, mix_dims = self._mix_arrays()
-        lin, areal, pjb = memsys.run_approach_program(self.phy, x, y)
+        lin, areal, pjb = memsys.run_approach_phys_program(phys, x, y)
         from repro.core.protocols import ALL_APPROACHES
         keys = tuple(ALL_APPROACHES)
-        dims = ("approach",) + mix_dims
-        coords = (keys,) + tuple(self.axes[d].labels for d in mix_dims)
-        shape = (len(keys),) + tuple(len(c) for c in coords[1:])
+        lead = (len(perts), len(base_phys), len(keys))
+        dims = ("catalog_param", "approach") + (
+            ("phy",) if phy_ax is not None else ()) + mix_dims
+        coords = ((cp_ax.labels if cp_ax is not None else ("baseline",)),
+                  keys) + ((phy_ax.labels,) if phy_ax is not None else ()) \
+            + tuple(self.axes[d].labels for d in mix_dims)
+        out: Dict[str, SpaceArray] = {}
         vals = {"linear_density_gbs_mm": lin,
                 "areal_density_gbs_mm2": areal,
                 "approach_pj_per_bit": pjb}
-        return {name: SpaceArray(dims, coords,
-                                 np.asarray(vals[name]).reshape(shape))
-                for name in APPROACH_METRICS if name in wanted}
+        for name in APPROACH_METRICS:
+            if name not in wanted:
+                continue
+            # [Q*F, A, ...] -> [Q, A, F, ...] (approach before phy)
+            v = np.asarray(vals[name])
+            v = np.moveaxis(v.reshape(lead + v.shape[2:]), 2, 1)
+            if cp_ax is None:
+                v = v[0]
+            if phy_ax is None:
+                # drop the singleton phy dim (after approach)
+                v = np.take(v, 0, axis=2 if cp_ax is not None else 1)
+            v = v.reshape(tuple(len(c) for c in
+                                (coords if cp_ax is not None
+                                 else coords[1:])))
+            out[name] = SpaceArray(
+                dims if cp_ax is not None else dims[1:],
+                coords if cp_ax is not None else coords[1:], v)
+        return out
 
     def _sim_protocols(self) -> Tuple[str, ...]:
         from repro.core import flitsim
@@ -755,7 +1141,8 @@ def joint_frontier(n_fracs: int = 21,
                    backlogs: Sequence[float] = (2.0, 8.0, 64.0),
                    shorelines: Sequence[float] = (4.0, 8.0, 16.0),
                    catalog: Optional[Dict[str, Any]] = None,
-                   n_flits: int = 2048) -> Dict[str, Any]:
+                   n_flits: int = 2048,
+                   constraints=None) -> Dict[str, Any]:
     """Joint (mix x backlog x shoreline) frontier merging the flit-simulated
     efficiency grid with the analytic catalog grid.
 
@@ -772,6 +1159,11 @@ def joint_frontier(n_fracs: int = 21,
     This is the first capability only expressible in the unified axes-first
     API: it needs the analytic catalog axes and the flit-simulation axes
     resolved over one shared mix grid in a single evaluation.
+
+    ``constraints`` (optional :class:`repro.core.selector.
+    SelectionConstraints`) restricts BOTH frontiers to the feasible set
+    via :meth:`SpaceResult.feasible` — infeasible cells never win, and
+    cells with no admissible system read ``"(none)"``.
     """
     from repro.core.selector import sim_key_for
     fracs = np.linspace(0.0, 1.0, n_fracs)
@@ -780,7 +1172,10 @@ def joint_frontier(n_fracs: int = 21,
          axis("backlog", backlogs),
          axis("shoreline_mm", shorelines)],
         catalog=catalog, n_flits=n_flits)
-    res = space.evaluate(metrics=ANALYTIC_METRICS[:1] + SIM_METRICS)
+    metrics = ANALYTIC_METRICS[:1] + SIM_METRICS
+    if constraints is not None:
+        metrics = metrics + ("power_w",)
+    res = space.evaluate(metrics=metrics)
     bw = res["bandwidth_gbs"]                  # [S, M, L]
     sim = res["sim_efficiency"]                # [P, B, M]
     ana = res["analytic_efficiency"]           # [P, M]
@@ -798,9 +1193,18 @@ def joint_frontier(n_fracs: int = 21,
             p = protocols.index(simkey)
             corrected[s] = bw.values[s][None] * ratio[p][:, :, None]
 
-    analytic_best = bw.argbest("system").values            # [M, L]
+    feas = res.feasible(constraints, catalog=catalog) \
+        if constraints is not None else None
+    analytic_best = bw.argbest("system", where=feas).values    # [M, L]
+    if feas is not None:
+        corrected = np.where(feas.values[:, None, :, :], corrected,
+                             -np.inf)
     sim_best_idx = np.argmax(corrected, axis=0)            # [B, M, L]
     sim_best = np.asarray(keys, dtype=object)[sim_best_idx]
+    if feas is not None:
+        none_cells = ~feas.values.any(axis=0)[None]        # [1, M, L]
+        sim_best = np.where(np.broadcast_to(none_cells, sim_best.shape),
+                            "(none)", sim_best)
     disagree = sim_best != analytic_best[None]
     regions: List[Dict[str, Any]] = []
     for b, bl in enumerate(sim.coord("backlog")):

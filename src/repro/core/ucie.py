@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional
+from typing import Mapping, Optional, Tuple
 
 
 class Packaging(enum.Enum):
@@ -29,6 +29,13 @@ IDLE_POWER_FRACTION = 0.15
 # <1ns entry/exit with 85% savings (Table 1) -> we treat gating as free
 # to enter/exit at flit granularity, consistent with the paper's analysis.
 POWER_GATE_ENTRY_NS = 1.0
+
+#: UCIePhy fields an analytic ``catalog_param`` perturbation may scale
+#: (multiplicatively) — the closed-form counterpart of
+#: :data:`repro.core.flitsim.PERTURBABLE_FIELDS`: PHY power efficiency and
+#: the published shoreline/areal bandwidth densities.
+PERTURBABLE_PHY_FIELDS: Tuple[str, ...] = (
+    "areal_density_gbs_mm2", "linear_density_gbs_mm", "power_pj_per_bit")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +82,26 @@ class UCIePhy:
             linear_density_gbs_mm=self.linear_density_gbs_mm * f,
             areal_density_gbs_mm2=self.areal_density_gbs_mm2 * f,
         )
+
+    def perturbed(self, pert: Mapping[str, float]) -> "UCIePhy":
+        """Multiplicative ``{field: scale}`` perturbation of the analytic
+        PHY parameters — the catalog counterpart of the flit simulator's
+        ``protocol_param`` scaling (see ``flitsim.apply_perturbation``).
+
+        Only :data:`PERTURBABLE_PHY_FIELDS` may be scaled; anything else
+        raises rather than silently producing a baseline labelled as
+        perturbed.
+        """
+        unknown = [k for k in pert if k not in PERTURBABLE_PHY_FIELDS]
+        if unknown:
+            raise ValueError(
+                f"unknown catalog perturbation fields {unknown}; choose "
+                f"from {PERTURBABLE_PHY_FIELDS}")
+        if not pert:
+            return self
+        return dataclasses.replace(
+            self, **{k: getattr(self, k) * float(s)
+                     for k, s in pert.items()})
 
 
 # --- Canonical instances (paper §IV.B) -------------------------------------
@@ -126,6 +153,23 @@ UCIE_A_32G_45U = dataclasses.replace(
     linear_density_gbs_mm=658.44 * (55.0 / 45.0),
     areal_density_gbs_mm2=416.27 * (55.0 / 45.0) ** 2,
 )
+
+
+# --- Forward-looking UCIe 2.0 / 48G data points (§V scaling) ----------------
+#
+# §V: "UCIe should increase the operating frequency while continuing to be
+# bump-limited with constant power efficiency" — the 48 GT/s generation
+# keeps the lane counts and bump pitches of today's modules, so density
+# scales linearly with data rate at constant pJ/b (``UCIePhy.scaled``).
+
+# Standard package at 48 GT/s: 256 -> 384 GB/s per doubly-stacked x32 link.
+UCIE_S_48G_110U = dataclasses.replace(
+    UCIE_S_32G.scaled(48.0), name="UCIe-S-48G-110u")
+
+# Advanced package at 48 GT/s on the 45um pitch: the paper's densest
+# 2.5D point scaled to the next signaling generation.
+UCIE_A_48G_45U = dataclasses.replace(
+    UCIE_A_32G_45U.scaled(48.0), name="UCIe-A-48G-45u")
 
 
 def table1() -> dict:

@@ -45,6 +45,30 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
 #: schema, so every per-cell ``*.json`` glob must skip this name
 DESIGN_SPACE_JSON = "design_space.json"
 
+#: top-level keys every per-cell dry-run artifact carries
+CELL_ARTIFACT_KEYS = ("arch", "shape", "mesh", "roofline")
+
+#: design-space dimensions per-cell consumers do NOT understand — an
+#: artifact declaring them (in an ``axes`` list/mapping) is an aggregate
+#: export of the axes-first API, not a workload cell
+NON_CELL_AXES = ("phy", "catalog_param")
+
+
+def is_cell_artifact(d) -> bool:
+    """True when a decoded dry-run JSON is a per-cell workload artifact.
+
+    Aggregate exports (the ``design_space.json`` report, axes-first dumps
+    carrying ``phy`` / ``catalog_param`` dimensions) share the artifact
+    directory; consumers iterating per-cell ``*.json`` files must SKIP
+    anything failing this predicate instead of crashing on missing keys.
+    """
+    if not isinstance(d, dict):
+        return False
+    if not all(k in d for k in CELL_ARTIFACT_KEYS):
+        return False
+    axes = d.get("axes") or ()
+    return not any(a in axes for a in NON_CELL_AXES)
+
 _SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
 _INSTR_RE = re.compile(r"=\s+[a-z0-9\[\],{}() ]*?\b(" + "|".join(
     _COLLECTIVES) + r")(?:-(?:start|done))?\(")
@@ -301,22 +325,19 @@ def bridge_design_space(reports: Dict[str, RooflineReport],
         its own mix per shoreline budget.
 
     ``constraints`` (default :class:`SelectionConstraints`) applies to the
-    whole space — packaging, power caps, and the flit-simulation-derived
-    ``max_backlog_knee`` queue-depth budget all mask the same grid.  The
-    knee budget follows the CONFIGS axis: each workload's own HLO-derived
-    mix is threaded into :func:`repro.core.flitsim.backlog_knees`
-    (``per_mix=True``), so a protocol is excluded for the workloads whose
-    own mix needs a deeper queue than the budget — not by the
-    canonical-mix envelope.
+    whole space through the first-class feasibility mask
+    (:meth:`repro.core.space.SpaceResult.feasible` composed via
+    ``frontier(..., where=mask)``) — packaging, power caps, and the
+    flit-simulation-derived ``max_backlog_knee`` queue-depth budget all
+    mask the same grid.  The knee budget follows the CONFIGS axis
+    automatically: ``feasible()`` threads each workload's own HLO-derived
+    mix into :func:`repro.core.flitsim.backlog_knees` (``per_mix=True``),
+    so a protocol is excluded for the workloads whose own mix needs a
+    deeper queue than the budget — not by the canonical-mix envelope.
     """
-    import dataclasses as _dc
-
-    from repro.core import TrafficMix, flitsim, mix_grid
+    from repro.core import TrafficMix, mix_grid
     from repro.core import space as space_mod
-    from repro.core.memsys import CatalogGrid, default_catalog_items
-    from repro.core.selector import (
-        SelectionConstraints, grid_ranking, sim_key_for,
-    )
+    from repro.core.selector import SelectionConstraints
     if constraints is None:
         constraints = SelectionConstraints()
     names = list(reports)
@@ -342,37 +363,21 @@ def bridge_design_space(reports: Dict[str, RooflineReport],
     ))
     res = space.evaluate(metrics=space_mod.ANALYTIC_METRICS
                          + space_mod.SYSTEM_METRICS)
-    items = default_catalog_items()
-    grid = CatalogGrid(
-        keys=res["bandwidth_gbs"].coord("system"),
-        bandwidth_gbs=res["bandwidth_gbs"].values,
-        pj_per_bit=res["pj_per_bit"].values,
-        power_w=res["power_w"].values,
-        gbs_per_watt=res["gbs_per_watt"].values,
-        latency_ns=res["latency_ns"].values,
-        relative_bit_cost=res["relative_bit_cost"].values)
-
-    grid_constraints = constraints
-    valid_mask = None
-    if constraints.max_backlog_knee is not None:
-        # per-mix knees at each workload's OWN mix -> [S, C, 1, 1] mask
-        per = flitsim.backlog_knees(mixes=[(m.x, m.y) for m in mixes],
-                                    per_mix=True)
-        valid_mask = np.ones((len(items), len(names), 1, 1), dtype=bool)
-        for i, (key, _) in enumerate(items):
-            sim = sim_key_for(key)
-            if sim is not None:
-                valid_mask[i, :, 0, 0] = (
-                    per[sim] <= constraints.max_backlog_knee)
-        grid_constraints = _dc.replace(constraints, max_backlog_knee=None)
-
-    g = grid_ranking(items, grid, grid_constraints, objective,
-                     valid_mask=valid_mask)
-    best = np.asarray(g.best_index)                     # [C, M+1, L]
-    best_keys = g.best_keys()
-    bw = np.asarray(g.grid.bandwidth_gbs)               # [S, C, M+1, L]
-    pj = np.asarray(g.grid.pj_per_bit)
-    lat = np.asarray(g.grid.latency_ns)
+    # first-class feasibility: one boolean mask for the whole space; the
+    # backlog-knee budget follows the workload_config axis inside it
+    feas = res.feasible(constraints)
+    metric, mode = {
+        "bandwidth": ("bandwidth_gbs", "max"),
+        "power": ("pj_per_bit", "min"),
+        "gbs_per_watt": ("gbs_per_watt", "max"),
+        "latency": ("latency_ns", "min"),
+    }[objective]
+    front = res.frontier(metric, "system", mode, where=feas)
+    best_keys = front.values                            # [C, M+1, L] labels
+    keys = res["bandwidth_gbs"].coord("system")
+    bw = np.asarray(res["bandwidth_gbs"].values)        # [S, C, M+1, L]
+    pj = np.asarray(res["pj_per_bit"].values)
+    lat = np.asarray(res["latency_ns"].values)
     fracs = gx / 100.0
 
     out: Dict[str, Any] = {
@@ -380,7 +385,7 @@ def bridge_design_space(reports: Dict[str, RooflineReport],
         "shorelines": sl.tolist(),
         "reference_shoreline_mm": float(sl[l_ref]),
         "objective": objective,
-        "keys": list(g.keys),
+        "keys": list(keys),
         "workloads": {},
     }
     for c, name in enumerate(names):
@@ -400,8 +405,8 @@ def bridge_design_space(reports: Dict[str, RooflineReport],
             "read_fraction": mixes[c].read_fraction,
             "hbm_baseline_memory_s": rep.memory_s,
             "best": str(best_keys[c, 0, l_ref]),
-            "feasible": bool(best[c, 0, l_ref] >= 0),
-            "systems": _systems_dict(rep, g.keys, bw[:, c, 0, l_ref],
+            "feasible": best_keys[c, 0, l_ref] != "(none)",
+            "systems": _systems_dict(rep, keys, bw[:, c, 0, l_ref],
                                      pj[:, c, 0, l_ref], lat),
             "crossovers": crossovers,
             "shoreline_frontier": sl_frontier,

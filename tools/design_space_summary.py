@@ -1,0 +1,74 @@
+"""Drift-stable summary of the design_space.json CI artifact.
+
+    python tools/design_space_summary.py experiments/dryrun/design_space.json
+
+Extracts ONLY the discrete decisions — winner labels, crossover/frontier
+counts, feasibility flags — and none of the floating-point metrics, so the
+output is stable across JAX versions and platforms unless a design-space
+WINNER actually changes.  CI regenerates the artifact on every push and
+diffs this summary against the checked-in golden
+(``experiments/golden/design_space_summary.json``); drift fails the job.
+
+Regenerate the golden after an intentional frontier change:
+
+    PYTHONPATH=src python examples/memsys_explorer.py --bridge
+    python tools/design_space_summary.py \
+        experiments/dryrun/design_space.json \
+        > experiments/golden/design_space_summary.json
+"""
+import json
+import sys
+
+
+def summarize(ds: dict) -> dict:
+    out = {
+        "keys": ds.get("keys", []),
+        "objective": ds.get("objective"),
+        "shorelines": ds.get("shorelines", []),
+        "workloads": {},
+    }
+    for name in sorted(ds.get("workloads", {})):
+        w = ds["workloads"][name]
+        out["workloads"][name] = {
+            "mix": w["mix"],
+            "best": w["best"],
+            "feasible": w["feasible"],
+            "crossover_count": len(w["crossovers"]),
+            "crossover_winners": [c["best"] for c in w["crossovers"]],
+            "shoreline_frontier": w["shoreline_frontier"],
+            "shoreline_sensitive": w["shoreline_sensitive"],
+        }
+    jf = ds.get("joint_frontier")
+    if jf is not None:
+        pairs = sorted({(r["analytic_best"], r["simulated_best"])
+                        for r in jf["disagreement_regions"]})
+        out["joint_frontier"] = {
+            "keys": jf["keys"],
+            "disagreement_region_count": len(jf["disagreement_regions"]),
+            "disagreement_pairs": [list(p) for p in pairs],
+            "disagreeing_backlogs": sorted(
+                {r["backlog"] for r in jf["disagreement_regions"]}),
+        }
+    pf = ds.get("phy_frontier")
+    if pf is not None:
+        out["phy_frontier"] = {
+            "phys": pf["phys"],
+            "best_approach_by_phy": pf["best_approach_by_phy"],
+            "regime_winners_by_phy": {
+                phy: [r["best"] for r in regs]
+                for phy, regs in sorted(pf["regimes_by_phy"].items())},
+        }
+    return out
+
+
+def main() -> None:
+    if len(sys.argv) != 2:
+        sys.exit(f"usage: {sys.argv[0]} <design_space.json>")
+    with open(sys.argv[1]) as f:
+        ds = json.load(f)
+    json.dump(summarize(ds), sys.stdout, indent=1, sort_keys=True)
+    sys.stdout.write("\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,19 @@ def load(dirname):
         # not a per-cell artifact — literal kept: this tool runs standalone
         if os.path.basename(f) == "design_space.json":
             continue
-        d = json.load(open(f))
+        try:
+            d = json.load(open(f))
+        except ValueError:
+            continue
+        # skip (don't crash on) anything that is not a per-cell artifact:
+        # axes-first exports carry phy / catalog_param dimensions and a
+        # different schema (mirrors repro.roofline.analysis.is_cell_artifact,
+        # inlined because this tool runs standalone)
+        if not isinstance(d, dict) or not all(
+                k in d for k in ("arch", "shape", "mesh", "roofline")):
+            continue
+        if any(a in (d.get("axes") or ()) for a in ("phy", "catalog_param")):
+            continue
         cells[(d["arch"], d["shape"], d["mesh"])] = d
     return cells
 
