@@ -3,11 +3,15 @@ validation of eqs 3/14/20), via the batched sweep engine.
 
 The validation sweep (all 5 protocols x 5 canonical mixes) runs as ONE
 compiled program per simulator family; a speedup row compares the batched
-path against the legacy per-point loop on a 125-point grid.  Sensitivity
-rows perturb protocol parameters (slot counts, credit limits) through the
-``protocol_param`` design-space axis, and a joint-pipelining row sweeps
-(k, ucie_line_ui, device_line_ui) — faster DRAM generations behind the
-logic die — in one compiled call.
+path against the legacy per-point loop on a 125-point grid.  Adaptive
+rows run the same 125-point sweep under the convergence-adaptive chunked
+engine (``ADAPTIVE_SIM``) and report the wall-clock and sequential-depth
+cuts vs the fixed-horizon engine, the fixed-vs-adaptive max deviation
+(asserted <= 1e-3), and the per-family cycles-to-convergence histograms.
+Sensitivity rows perturb protocol parameters (slot counts, credit limits,
+the write-buffer depth) through the ``protocol_param`` design-space axis,
+and a joint-pipelining row sweeps (k, ucie_line_ui, device_line_ui) —
+faster DRAM generations behind the logic die — in one compiled call.
 """
 from __future__ import annotations
 
@@ -16,8 +20,8 @@ import numpy as np
 from benchmarks.common import time_us
 from repro.core import flitsim, mix_grid
 from repro.core.flitsim import (
-    ANALYTIC, SIMULATORS, SYMMETRIC_PARAMS, sweep, sweep_perturbed,
-    sweep_pipelining,
+    ADAPTIVE_SIM, ANALYTIC, SIMULATORS, SYMMETRIC_PARAMS, sweep,
+    sweep_perturbed, sweep_pipelining,
 )
 
 
@@ -60,6 +64,39 @@ def run(rows: list):
     rows.append((f"flitsim/sweep_batched_{n_points}pt", us_batched,
                  f"per_point_us={us_scalar:.0f};speedup=x{speedup:.1f}"))
 
+    # -- convergence-adaptive vs fixed on the same 125-point grid -----------
+    eff_fixed = np.asarray(sweep(mixes=mixes).efficiency)
+    eff_adapt = np.asarray(sweep(mixes=mixes, sim=ADAPTIVE_SIM).efficiency)
+    max_dev = float(np.max(np.abs(eff_fixed - eff_adapt)))
+    assert max_dev <= 1e-3, (
+        f"adaptive engine deviates {max_dev:.2e} > 1e-3 from the fixed "
+        f"engine on the {n_points}-pt sweep")
+    us_adapt = time_us(
+        lambda: np.asarray(sweep(mixes=mixes, sim=ADAPTIVE_SIM).efficiency),
+        warmup=1, iters=5)
+    info = flitsim.last_run_info()
+    depth = {fam.split(".")[1]: f"{v['cycles_run']}/{v['horizon']}"
+             for fam, v in sorted(info.items())}
+    # sequential_depth counts a straggler-escalation pass as full-horizon
+    depth_cut = min(v["horizon"] / max(v["sequential_depth"], 1)
+                    for v in info.values())
+    rows.append((f"flitsim/sweep_adaptive_{n_points}pt", us_adapt,
+                 f"fixed_us={us_batched:.0f};"
+                 f"wall_speedup=x{us_batched / us_adapt:.2f};"
+                 f"depth_cut_min=x{depth_cut:.1f};"
+                 f"cycles={';'.join(f'{k}={v}' for k, v in depth.items())};"
+                 f"max_dev_vs_fixed={max_dev:.1e};"
+                 f"per_point_us={us_scalar:.0f};"
+                 f"speedup_vs_per_point=x{us_scalar / us_adapt:.1f}"))
+    for fam, v in sorted(info.items()):
+        hist = ">".join(f"{c}:{n}" for c, n in sorted(
+            v["converged_cycles"].items(),
+            key=lambda kv: (kv[0] == "horizon",
+                            int(kv[0]) if kv[0] != "horizon" else 0)))
+        rows.append((f"flitsim/convergence_hist/{fam.split('.')[1]}", 0.0,
+                     f"cells={v['cells']};stragglers={v['stragglers']};"
+                     f"cycles_to_convergence={hist}"))
+
     # -- backlog-sensitivity grid (symmetric family only) -------------------
     bl = sweep(protocols=tuple(SYMMETRIC_PARAMS), mixes=[(2, 1)],
                backlogs=[1, 2, 4, 8, 64])
@@ -69,8 +106,11 @@ def run(rows: list):
                      f"eff@bl1={e[0]:.3f};eff@bl64={e[-1]:.3f}"))
 
     # -- protocol-parameter sensitivity via the perturbation axis -----------
+    # write_buffer_lines rides along: the write-buffer depth is its own
+    # perturbable field now (it used to silently alias the read credit)
     perts = [{}, {"credit_lines": 0.1}, {"g_slots": 0.8},
-             {"reqs_per_g": 0.5, "resps_per_g": 0.5}]
+             {"reqs_per_g": 0.5, "resps_per_g": 0.5},
+             {"write_buffer_lines": 0.1}]
     sens = sweep_perturbed(perts, protocols=tuple(SYMMETRIC_PARAMS),
                            mixes=[(2, 1)], backlogs=[4.0, 64.0])
     eff = sens["sim_efficiency"]        # [pert, protocol, backlog, mix]

@@ -176,6 +176,43 @@ def bench_phy_axis(rows, n: int = 41):
                  f"compiles={stats.misses};best@50R50W:{winners}"))
 
 
+def bench_sim_phy_frontier(rows, n: int = 21):
+    """Simulation-corrected PHY-absolute frontier: flit-simulated
+    efficiency threaded onto each PHY generation's raw link bandwidth
+    (``sim_bandwidth_gbs``), swept over [phy x backlog x read_fraction]
+    under the convergence-adaptive engine in one compiled call per
+    simulator family."""
+    from repro.core import (
+        ADAPTIVE_SIM, DesignSpace, UCIE_A_32G_55U, UCIE_A_48G_45U,
+        UCIE_S_32G, UCIE_S_48G_110U, axis, flitsim,
+    )
+
+    phys = [UCIE_S_32G, UCIE_A_32G_55U, UCIE_S_48G_110U, UCIE_A_48G_45U]
+    space = DesignSpace([
+        axis("phy", phys),
+        axis("read_fraction", np.linspace(0.0, 1.0, n)),
+        axis("backlog", (2.0, 64.0)),
+    ], sim=ADAPTIVE_SIM)
+    metrics = ("sim_efficiency", "sim_bandwidth_gbs")
+    flitsim.clear_compile_cache()
+    us = time_us(lambda: space.evaluate(metrics=metrics)
+                 ["sim_bandwidth_gbs"].values, warmup=1, iters=3)
+    res = space.evaluate(metrics=metrics)
+    stats = flitsim.compile_cache_stats()
+    assert stats.misses == 2, (
+        f"expected one compile per simulator family for the sim-phy "
+        f"space, got {stats}")
+    bw = res["sim_bandwidth_gbs"]
+    winners = ";".join(
+        f"{p.name}@bl64="
+        + str(bw.sel(phy=p.name, backlog=64.0).argbest("protocol")
+              .values[n // 2]) for p in phys[:2])
+    peak = float(bw.sel(phy=UCIE_A_48G_45U.name).values.max())
+    rows.append((f"sim_phy_frontier/{len(phys)}x2x{n}", us,
+                 f"compiles={stats.misses};best@50R50W:{winners};"
+                 f"peak_sim_gbs_48g={peak:.0f}"))
+
+
 def run(rows: list):
     bench_table1(rows)
     bench_fig10(rows)
@@ -186,3 +223,4 @@ def run(rows: list):
     bench_selector_grid(rows)
     bench_design_space(rows)
     bench_phy_axis(rows)
+    bench_sim_phy_frontier(rows)

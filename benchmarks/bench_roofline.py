@@ -111,10 +111,42 @@ def _bench_feasible_frontier(rows: list, n_fracs: int = 21):
                  ";".join(bests)))
 
 
+def _bench_joint_frontier_adaptive(rows: list):
+    """Measured speedup on the joint analytic-vs-simulated frontier path:
+    the flit-simulated grid inside ``joint_frontier`` runs fixed-horizon
+    vs convergence-adaptive; winner labels must agree (the adaptive
+    engine only moves efficiencies by <= ~1e-3)."""
+    import numpy as np
+
+    from benchmarks.common import time_us
+    from repro.core import ADAPTIVE_SIM, flitsim
+    from repro.core.space import joint_frontier
+
+    jf_fixed = joint_frontier()
+    jf_adapt = joint_frontier(sim=ADAPTIVE_SIM)
+    assert jf_fixed["simulated_best"] == jf_adapt["simulated_best"], \
+        "adaptive engine changed a joint-frontier winner label"
+    us_fixed = time_us(lambda: joint_frontier(), warmup=1, iters=3)
+    us_adapt = time_us(lambda: joint_frontier(sim=ADAPTIVE_SIM),
+                       warmup=1, iters=3)
+    info = flitsim.last_run_info()
+    cycles = ";".join(
+        f"{fam.split('.')[1]}={v['cycles_run']}/{v['horizon']}"
+        for fam, v in sorted(info.items()))
+    n_pts = (len(jf_fixed["read_fractions"]) * len(jf_fixed["backlogs"])
+             * len(jf_fixed["shorelines"]))
+    rows.append((f"roofline/joint_frontier_adaptive_{n_pts}pt", us_adapt,
+                 f"fixed_us={us_fixed:.0f};"
+                 f"speedup=x{us_fixed / us_adapt:.2f};{cycles};"
+                 f"disagreement_fraction="
+                 f"{jf_adapt['disagreement_fraction']:.2f}"))
+
+
 def run(rows: list):
     _bench_bridge(rows)
     _bench_knee_bridge(rows)
     _bench_feasible_frontier(rows)
+    _bench_joint_frontier_adaptive(rows)
     # skip anything that is not a per-cell workload artifact (the
     # aggregate design-space report, axes-first exports carrying phy /
     # catalog_param dimensions) — different schema than this loop consumes

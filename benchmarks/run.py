@@ -24,7 +24,8 @@ def main() -> None:
                          "paper-model suites only")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the rows as JSON (the weekly CI "
-                         "trend artifact)")
+                         "trend artifact) plus the repo-root "
+                         "BENCH_flitsim.json flit-simulation trend file")
     args = ap.parse_args()
     common.SMOKE = args.smoke
 
@@ -64,6 +65,19 @@ def main() -> None:
                                  "derived": d} for n, us, d in rows]},
                       f, indent=1)
         print(f"# wrote {args.json}", file=sys.stderr)
+        # repo-root flit-simulation trend file: batched-sweep us, the
+        # adaptive-vs-fixed speedup, and the cycles-to-convergence
+        # histograms — the perf trajectory tracked in-repo (and uploaded
+        # per CI matrix cell)
+        flit_rows = [{"name": n, "us_per_call": us, "derived": d}
+                     for n, us, d in rows if n.startswith("flitsim/")]
+        if flit_rows:
+            trend = os.path.join(os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))), "BENCH_flitsim.json")
+            with open(trend, "w") as f:
+                json.dump({"smoke": args.smoke, "rows": flit_rows},
+                          f, indent=1)
+            print(f"# wrote {trend}", file=sys.stderr)
     if failed:
         print(f"FAILED_SUITES: {failed}", file=sys.stderr)
         raise SystemExit(1)

@@ -31,9 +31,14 @@ Three modes:
     cycle-level simulation disagrees with the closed forms about the best
     memory system, evaluates the PHY-stacked frontier (UCIe-A/S at 32G
     plus the forward-looking 48G points, via the first-class ``phy``
-    axis), and writes the whole report to
+    axis) plus its cycle-level counterpart (``sim_phy_frontier``: the
+    simulated efficiency threaded onto each PHY's raw link bandwidth, per
+    queue depth), and writes the whole report to
     experiments/dryrun/design_space.json (the CI artifact — a checked-in
-    summary of its winner labels gates CI against drift).
+    summary of its winner labels gates CI against drift).  The
+    flit-simulated parts run the convergence-adaptive engine
+    (``ADAPTIVE_SIM``) — the chunked cores early-exit once every grid
+    cell's estimate converges, deviating <= ~1e-3 from the fixed engine.
 
         PYTHONPATH=src python examples/memsys_explorer.py --bridge
 """
@@ -100,8 +105,13 @@ def explore(d: dict):
 
 
 def sweep_mode(n_fracs: int = 41, backlogs=(1, 2, 4, 8, 16, 32, 64, 128)):
-    """Dense design-space sweep: read-fraction x backlog x protocol."""
-    from repro.core import flitsim, mix_grid
+    """Dense design-space sweep: read-fraction x backlog x protocol.
+
+    Runs the convergence-adaptive engine (``ADAPTIVE_SIM``): the chunked
+    cores early-exit as soon as the slowest grid cell converges, with the
+    few non-converging straggler cells re-simulated exactly.
+    """
+    from repro.core import ADAPTIVE_SIM, flitsim, mix_grid
     from repro.core.selector import rank_grid
 
     x, y = mix_grid(n_fracs)
@@ -109,7 +119,8 @@ def sweep_mode(n_fracs: int = 41, backlogs=(1, 2, 4, 8, 16, 32, 64, 128)):
     fracs = np.asarray(x) / 100.0
 
     t0 = time.perf_counter()
-    res = flitsim.sweep(mixes=mixes, backlogs=list(backlogs))
+    res = flitsim.sweep(mixes=mixes, backlogs=list(backlogs),
+                        sim=ADAPTIVE_SIM)
     eff = np.asarray(res.efficiency)              # [P, B, M]
     t_sim = time.perf_counter() - t0
     n_pts = eff.size
@@ -118,6 +129,10 @@ def sweep_mode(n_fracs: int = 41, backlogs=(1, 2, 4, 8, 16, 32, 64, 128)):
           f"({len(res.protocols)} protocols x {len(backlogs)} backlogs x "
           f"{n_fracs} read fractions) in {t_sim:.2f}s "
           f"[{stats.misses} compiles, {stats.hits} cache hits]")
+    for fam, info in sorted(flitsim.last_run_info().items()):
+        print(f"    {fam.split('.')[1]:10s} adaptive: "
+              f"{info['cycles_run']}/{info['horizon']} cycles "
+              f"({info['stragglers']} stragglers re-simulated exactly)")
 
     bl_ref = list(backlogs).index(64) if 64 in backlogs else len(backlogs) - 1
     print(f"\nsimulated data efficiency at backlog={backlogs[bl_ref]} "
@@ -221,6 +236,79 @@ def phy_frontier_report(n_fracs: int = 21, shorelines=(4.0, 8.0, 16.0)):
     return report
 
 
+def sim_phy_frontier_report(n_fracs: int = 21, backlogs=(2.0, 64.0)):
+    """Simulation-corrected PHY-absolute frontier: the flit simulators'
+    data efficiency threaded onto each PHY generation's raw link bandwidth
+    (``sim_bandwidth_gbs`` = sim efficiency x ``UCIePhy.raw_bandwidth_gbs``)
+    — the cycle-level counterpart of the analytic ``phy_frontier``, and the
+    first one that can disagree with it per queue depth.  Runs the
+    convergence-adaptive engine; returns a JSON-able report for the CI
+    design-space artifact."""
+    from repro.core import (
+        ADAPTIVE_SIM, UCIE_A_32G_55U, UCIE_A_48G_45U, UCIE_S_32G,
+        UCIE_S_48G_110U, flitsim,
+    )
+    from repro.core.selector import approach_key_for
+    from repro.core.space import DesignSpace, axis, regimes
+
+    phys = [UCIE_S_32G, UCIE_A_32G_55U, UCIE_S_48G_110U, UCIE_A_48G_45U]
+    fracs = np.linspace(0.0, 1.0, n_fracs)
+    before = flitsim.compile_cache_stats()
+    t0 = time.perf_counter()
+    res = DesignSpace([
+        axis("phy", phys),
+        axis("read_fraction", fracs),
+        axis("backlog", backlogs),
+    ], sim=ADAPTIVE_SIM).evaluate(
+        metrics=("sim_efficiency", "sim_bandwidth_gbs"))
+    dt = time.perf_counter() - t0
+    after = flitsim.compile_cache_stats()
+    bw = res["sim_bandwidth_gbs"]      # [protocol, phy, backlog, mix]
+    info = flitsim.last_run_info()
+    cycles = {fam.split(".")[1]: info[fam]["cycles_run"] for fam in info}
+    print(f"sim-phy frontier: {len(bw.coord('protocol'))} protocols x "
+          f"{len(phys)} PHYs x {len(backlogs)} backlogs x {n_fracs} "
+          f"read fractions = {int(np.prod(bw.shape))} points in {dt:.2f}s "
+          f"[{after.misses - before.misses} compiles; adaptive cycles "
+          f"{cycles}]")
+    report = {"phys": [p.name for p in phys],
+              "backlogs": [float(b) for b in backlogs],
+              "read_fractions": fracs.tolist(),
+              "adaptive_cycles": cycles,
+              "peak_sim_gbs_by_phy": {},
+              "best_protocol_by_phy": {},
+              "regimes_by_phy_backlog": {}}
+    for p in phys:
+        regs_by_bl = {}
+        for b in backlogs:
+            front = bw.sel(phy=p.name, backlog=b).argbest("protocol")
+            regs_by_bl[f"{b:g}"] = [
+                {"read_fraction_lo": lo, "read_fraction_hi": hi,
+                 "best": str(lab),
+                 "approach": approach_key_for(str(lab))}
+                for lo, hi, lab in regimes(front.values.tolist(), fracs)]
+        report["regimes_by_phy_backlog"][p.name] = regs_by_bl
+        deep = bw.sel(phy=p.name, backlog=backlogs[-1])
+        at70 = deep.argbest("protocol").values[
+            int(round(0.7 * (n_fracs - 1)))]
+        report["best_protocol_by_phy"][p.name] = str(at70)
+        peak = float(deep.values.max())
+        report["peak_sim_gbs_by_phy"][p.name] = peak
+        print(f"    {p.name:18s} best@70R30W {str(at70):12s} "
+              f"peak {peak:5.0f} GB/s (raw link, simulated)")
+    # the shallow-queue disagreement the closed forms cannot see: winners
+    # at backlog 2 vs saturation
+    shallow = {p.name: [r["best"]
+                        for r in report["regimes_by_phy_backlog"][p.name]
+                        [f"{backlogs[0]:g}"]] for p in phys}
+    deep_w = {p.name: [r["best"]
+                       for r in report["regimes_by_phy_backlog"][p.name]
+                       [f"{backlogs[-1]:g}"]] for p in phys}
+    report["shallow_queue_disagrees"] = {
+        name: shallow[name] != deep_w[name] for name in shallow}
+    return report
+
+
 def bridge_mode(n_fracs: int = 41, shorelines=(2.0, 4.0, 8.0, 16.0)):
     """Batched workload->design-space bridge over all available cells."""
     from repro.core.memsys import grid_cache_stats
@@ -277,9 +365,12 @@ def bridge_mode(n_fracs: int = 41, shorelines=(2.0, 4.0, 8.0, 16.0)):
 
     # joint (mix x backlog x shoreline) analytic-vs-simulated frontier:
     # where do the closed forms and the cycle-level simulation DISAGREE
-    # about the best memory system?
+    # about the best memory system?  Runs the convergence-adaptive engine
+    # (canonical artifact grid; winner labels are gate-checked against
+    # the fixed-mode golden summary).
+    from repro.core import ADAPTIVE_SIM
     t0 = time.perf_counter()
-    jf = joint_frontier()          # canonical artifact grid (its defaults)
+    jf = joint_frontier(sim=ADAPTIVE_SIM)
     dt = time.perf_counter() - t0
     n_jf = (len(jf["read_fractions"]) * len(jf["backlogs"])
             * len(jf["shorelines"]))
@@ -310,9 +401,16 @@ def bridge_mode(n_fracs: int = 41, shorelines=(2.0, 4.0, 8.0, 16.0)):
     print()
     pf = phy_frontier_report()
 
+    # ...and its cycle-level counterpart: the flit-simulated efficiency
+    # threaded onto each PHY's raw bandwidth (sim_bandwidth_gbs), per
+    # queue depth
+    print()
+    spf = sim_phy_frontier_report()
+
     from repro.roofline.analysis import DESIGN_SPACE_JSON
     ds["joint_frontier"] = jf
     ds["phy_frontier"] = pf
+    ds["sim_phy_frontier"] = spf
     os.makedirs(DRYRUN, exist_ok=True)
     out_path = os.path.join(DRYRUN, DESIGN_SPACE_JSON)
     with open(out_path, "w") as f:

@@ -25,6 +25,13 @@ returning a named-axis :class:`SpaceResult` with ``sel()`` /
     mask = res.feasible(SelectionConstraints(max_relative_bit_cost=2.0))
     res.frontier("bandwidth_gbs", where=mask)   # feasible-set winners
 
+Flit-simulated metrics run under a :class:`repro.core.space.SimConfig`
+(``sim=`` on ``DesignSpace`` and every legacy wrapper): :data:`FIXED_SIM`
+(default, bit-identical fixed horizon) or :data:`ADAPTIVE_SIM`
+(convergence-adaptive chunked cores with batched early exit — the
+benchmarks/explorer default; <= tol-scale deviation, several-x fewer
+sequential cycles).
+
 Legacy front-ends (``flitsim.sweep*``, ``memsys.catalog_grid`` /
 ``approach_grid``, ``selector.rank_grid``,
 ``analysis.bridge_design_space``) are thin compatibility wrappers over the
@@ -48,8 +55,9 @@ from repro.core.latency import (
     UCIeMemoryLatency, MEASURED_FRONTEND_LATENCY_NS, latency_speedup,
 )
 from repro.core.space import (
-    Axis, AxisSet, DesignSpace, OWN_MIX, SpaceArray, SpaceResult, axis,
-    cache_stats, clear_cache, joint_frontier, regimes,
+    ADAPTIVE_SIM, Axis, AxisSet, DesignSpace, FIXED_SIM, OWN_MIX,
+    SimConfig, SpaceArray, SpaceResult, axis, cache_stats, clear_cache,
+    joint_frontier, regimes,
 )
 from repro.core.memsys import (
     CatalogGrid, MemorySystem, catalog_grid, grid_cache_stats,

@@ -36,13 +36,47 @@ when ``ucie_line_ui`` / ``device_line_ui`` are sequences, over the full
 ``[k x ucie_line_ui x device_line_ui]`` joint grid (faster DRAM generations
 behind the logic die).  Compiled executables are memoized in the SHARED
 design-space cache (:mod:`repro.core.space`) keyed on (family, grid shape,
-static lengths) — a second identically-shaped sweep from ANY front-end
-(``sweep``, a ``DesignSpace`` evaluation, a scalar ``simulate_*`` call)
-reuses the warm executable with zero retracing.  ``compile_cache_stats()``
-exposes this module's slice of the shared counters; the scalar entry points
-``simulate_symmetric`` / ``simulate_asymmetric`` /
-``simulate_lpddr6_pipelining`` are thin wrappers over a ``[1, 1, 1]`` grid,
-so they share the same cache and numerics bit-for-bit with ``sweep()``.
+static lengths, :class:`repro.core.space.SimConfig`) — a second
+identically-shaped sweep from ANY front-end (``sweep``, a ``DesignSpace``
+evaluation, a scalar ``simulate_*`` call) reuses the warm executable with
+zero retracing, and alternating sim configs never invalidates other
+configs' entries.  ``compile_cache_stats()`` exposes this module's slice
+of the shared counters; the scalar entry points ``simulate_symmetric`` /
+``simulate_asymmetric`` / ``simulate_lpddr6_pipelining`` are thin wrappers
+over a ``[1, 1, 1]`` grid, so they share the same cache and numerics
+bit-for-bit with ``sweep()``.
+
+Convergence-adaptive execution (``sim=ADAPTIVE_SIM``)
+-----------------------------------------------------
+Every front-end accepts a ``sim=`` :class:`repro.core.space.SimConfig`.
+The default (:data:`FIXED_SIM`) runs the full fixed horizon — bit-identical
+to the pre-config engine and to every pinned golden.  ``ADAPTIVE_SIM``
+swaps the ``lax.scan`` cores for chunked ``lax.while_loop`` cores with
+batched early exit:
+
+* the loop advances the whole vmapped grid one chunk of C cycles at a
+  time (inner ``lax.scan``, optionally unrolled), sampling cumulative and
+  time-weighted delivery accumulators at chunk boundaries;
+* each cell's *report* reconstructs the fixed engine's warm-window average
+  ``[N/4, N]``: the observed ``[N/4, n]`` prefix is kept verbatim and the
+  unobserved tail ``[n, N]`` is padded with a triangularly-weighted
+  trailing-window steady estimate (triangular weighting suppresses the
+  periodic-aliasing error of short windows to second order);
+* a cell counts as converged when its report is stable to ``tol`` AND —
+  for the symmetric family — its queue/credit pools are not drifting
+  (slow write-buffer fill produces metastable plateaus that a pure
+  output-stability test cannot distinguish from steady state);
+* the loop exits when every cell converged, when the straggler count
+  drops below the escalation budget (large grids only — the stragglers
+  are then re-simulated EXACTLY at the full fixed horizon in a tiny
+  padded flat-cell program), or at the horizon (where the report equals
+  the fixed warm-window average by construction — exactly so when the
+  chunk count is a multiple of 4, which the divisor selection prefers;
+  horizons with no usable chunk divisor fall back to the fixed engine).
+
+``last_run_info()`` exposes the cycles-to-convergence telemetry
+(per-family cycles run, straggler counts, per-cell convergence histogram)
+that ``bench_flitsim`` reports.
 """
 from __future__ import annotations
 
@@ -55,7 +89,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import space as space_mod
-from repro.core.space import CacheStats, cached_program
+from repro.core.space import (
+    ADAPTIVE_SIM, FIXED_SIM, CacheStats, SimConfig, cached_program,
+)
 from repro.core.protocols.chi_ucie import CHIOnUCIe
 from repro.core.protocols.cxl_mem import CXLMemOnUCIe
 from repro.core.protocols.cxl_mem_opt import CXLMemOptOnUCIe
@@ -137,6 +173,18 @@ class SymmetricFlitParams(_Stackable):
     #: the credit limit is ``credit_lines * g_slots`` slots (default 8
     #: flits, the pre-perturbation constant)
     credit_lines: Any = 8.0
+    #: write-buffer depth on the memory side, in flits' worth of payload
+    #: slots — the write-request gate is ``write_buffer_lines * g_slots``
+    #: slots.  Defaults to ``credit_lines`` (the engine historically
+    #: reused the read credit as the write-buffer bound; a distinct field
+    #: makes the write path independently perturbable while preserving
+    #: the default numerics bit-for-bit).
+    write_buffer_lines: Any = None
+
+    def __post_init__(self):
+        if self.write_buffer_lines is None:
+            object.__setattr__(self, "write_buffer_lines",
+                               self.credit_lines)
 
     @classmethod
     def cxl_unopt(cls) -> "SymmetricFlitParams":
@@ -206,15 +254,13 @@ _check_perturbation = check_perturbation
 # -- simulator cores (traced params; static lengths only) ---------------------
 
 
-def _symmetric_efficiency(p: SymmetricFlitParams, x, y, backlog,
-                          n_flits: int):
-    """Saturation data efficiency of a symmetric full-duplex link.
+def _symmetric_stepfn(p: SymmetricFlitParams, x, y, backlog):
+    """Single-cycle kernel shared by the fixed and adaptive symmetric
+    cores: ``step(core) -> (core', data_slots_delivered_this_cycle)``.
 
-    Data bits delivered (both directions, 512 b per line) over raw link
-    capacity — directly comparable to the analytic ``bw_eff``.  Headers
-    have priority; data fills the remaining G-slots.  Read requests are
-    gated by credit-based flow control on the read-data return path (as
-    CXL's credit mechanism does).
+    ``core`` is the queue/credit state ``(rq, wq, wdata, rdata, resp, cr,
+    cw)``; the data/warm accounting lives in the mode-specific wrappers so
+    the fixed path stays bit-identical to the pre-config engine.
     """
     x, y, backlog = _f32(x), _f32(y), _f32(backlog)
     tot = x + y
@@ -222,14 +268,14 @@ def _symmetric_efficiency(p: SymmetricFlitParams, x, y, backlog,
     yr = y / tot
     dpl = p.data_slots_per_line
     rdata_limit = p.credit_lines * p.g_slots  # in-flight read credit (slots)
+    wbuf_limit = p.write_buffer_lines * p.g_slots  # write-buffer bound
     hdr_cap = p.reqs_per_h * p.h_slots + p.reqs_per_g * p.g_slots
     resp_cap = p.resps_per_h * p.h_slots + p.resps_per_g * p.g_slots
     reqs_per_g = jnp.maximum(_f32(p.reqs_per_g), 1e-9)
     resps_per_g = jnp.maximum(_f32(p.resps_per_g), 1e-9)
 
-    def step(carry, _):
-        (rq, wq, wdata, rdata, resp, cr, cw, data_slots, warm_slots,
-         warm) = carry
+    def step(core):
+        rq, wq, wdata, rdata, resp, cr, cw = core
         # -- generate traffic to hold the request backlog at `backlog` ------
         deficit = jnp.maximum(backlog - (rq + wq), 0.0)
         cr2 = cr + deficit * xr
@@ -244,7 +290,7 @@ def _symmetric_efficiency(p: SymmetricFlitParams, x, y, backlog,
         # Both request kinds are credit-gated by their data path: reads by
         # the in-flight read-return credit, writes by the write buffer.
         credit_r = jnp.maximum(rdata_limit - rdata, 0.0) / dpl
-        credit_w = jnp.maximum(rdata_limit - wdata, 0.0) / dpl
+        credit_w = jnp.maximum(wbuf_limit - wdata, 0.0) / dpl
         rq_elig = jnp.minimum(rq, credit_r)
         wq_elig = jnp.minimum(wq, credit_w)
         sent_req = jnp.minimum(rq_elig + wq_elig, hdr_cap)
@@ -269,18 +315,44 @@ def _symmetric_efficiency(p: SymmetricFlitParams, x, y, backlog,
         resp = resp - sent_resp
         rdata = rdata - d_m2s
 
-        new_data = d_s2m + d_m2s
+        return (rq, wq, wdata, rdata, resp, cr2, cw2), d_s2m + d_m2s
+
+    return step
+
+
+def _symmetric_core_init():
+    return tuple(jnp.zeros((), jnp.float32) for _ in range(7))
+
+
+def _symmetric_efficiency(p: SymmetricFlitParams, x, y, backlog,
+                          n_flits: int):
+    """Saturation data efficiency of a symmetric full-duplex link.
+
+    Data bits delivered (both directions, 512 b per line) over raw link
+    capacity — directly comparable to the analytic ``bw_eff``.  Headers
+    have priority; data fills the remaining G-slots.  Read requests are
+    gated by credit-based flow control on the read-data return path (as
+    CXL's credit mechanism does); writes by the memory-side write buffer.
+
+    Fixed-horizon core: runs exactly ``n_flits`` cycles and averages over
+    the warm window (the last three quarters) — the reference numerics
+    every golden is pinned against.
+    """
+    kernel = _symmetric_stepfn(p, x, y, backlog)
+
+    def step(carry, _):
+        core, data_slots, warm_slots, warm = carry
+        core, new_data = kernel(core)
         # warm-up: skip the first quarter of the run when accumulating
         warm = warm + 1
         is_warm = (warm > n_flits // 4).astype(jnp.float32)
         data_slots = data_slots + new_data * is_warm
         warm_slots = warm_slots + is_warm
-        return (rq, wq, wdata, rdata, resp, cr2, cw2, data_slots,
-                warm_slots, warm), None
+        return (core, data_slots, warm_slots, warm), None
 
-    init = tuple(jnp.zeros((), jnp.float32) for _ in range(9)) + (
-        jnp.zeros((), jnp.int32),)
-    (_, _, _, _, _, _, _, data_slots, warm_slots, _), _ = jax.lax.scan(
+    init = (_symmetric_core_init(), jnp.zeros((), jnp.float32),
+            jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32))
+    (_, data_slots, warm_slots, _), _ = jax.lax.scan(
         step, init, None, length=n_flits)
     # data bits delivered over both-direction capacity during warm window
     data_bits = data_slots * 128.0           # 16 B of payload per data slot
@@ -288,24 +360,36 @@ def _symmetric_efficiency(p: SymmetricFlitParams, x, y, backlog,
     return data_bits / cap_bits
 
 
-def _asymmetric_efficiency(p: AsymmetricLaneParams, x, y, n_accesses: int):
-    """Lane-occupancy simulation: issue n accesses in x:y ratio, measure
-    512*n/(total_lanes*T) — comparable to eq (3)."""
+def _asymmetric_stepfn(p: AsymmetricLaneParams, x, y):
+    """Single-access kernel shared by the fixed and adaptive asymmetric
+    cores: ``step(core) -> core'`` over ``(t_read, t_write, t_cmd,
+    credit)``."""
     x, y = _f32(x), _f32(y)
     xr = x / (x + y)
     r_ui = _f32(p.access_bits) / p.read_lanes
     w_ui = _f32(p.access_bits) / p.write_lanes
     c_ui = _f32(p.cmd_bits_per_access) / p.cmd_lanes
 
-    def step(carry, _):
-        t_read, t_write, t_cmd, credit = carry
+    def step(core):
+        t_read, t_write, t_cmd, credit = core
         credit = credit + xr
         is_read = credit >= 1.0
         credit = jnp.where(is_read, credit - 1.0, credit)
         t_read = t_read + jnp.where(is_read, r_ui, 0.0)
         t_write = t_write + jnp.where(is_read, 0.0, w_ui)
         t_cmd = t_cmd + c_ui
-        return (t_read, t_write, t_cmd, credit), None
+        return (t_read, t_write, t_cmd, credit)
+
+    return step
+
+
+def _asymmetric_efficiency(p: AsymmetricLaneParams, x, y, n_accesses: int):
+    """Lane-occupancy simulation: issue n accesses in x:y ratio, measure
+    512*n/(total_lanes*T) — comparable to eq (3).  Fixed-horizon core."""
+    kernel = _asymmetric_stepfn(p, x, y)
+
+    def step(carry, _):
+        return kernel(carry), None
 
     init = (jnp.zeros((), jnp.float32),) * 4
     (t_r, t_w, t_c, _), _ = jax.lax.scan(step, init, None, length=n_accesses)
@@ -328,19 +412,33 @@ def _pipelining_utilization(k, ucie_line_ui, device_line_ui,
     k = jnp.asarray(k, jnp.int32)
     ucie_line_ui = _f32(ucie_line_ui)
     device_line_ui = _f32(device_line_ui)
+    kernel = _pipelining_stepfn(k, ucie_line_ui, device_line_ui)
 
     def step(carry, _):
-        dev_ready, link_free, idx = carry
+        return kernel(carry), None
+
+    init = _pipelining_core_init(max_k)
+    (_, last_finish, _), _ = jax.lax.scan(step, init, None, length=n_lines)
+    return n_lines * ucie_line_ui / last_finish
+
+
+def _pipelining_stepfn(k, ucie_line_ui, device_line_ui):
+    """Single-line kernel shared by the fixed and adaptive pipelining
+    cores: ``step(core) -> core'`` over ``(dev_ready, last_finish, idx)``."""
+    def step(core):
+        dev_ready, link_free, idx = core
         dev = idx % k
         start = jnp.maximum(dev_ready[dev], link_free)
         finish = start + ucie_line_ui
         dev_ready = dev_ready.at[dev].set(start + device_line_ui)
-        return (dev_ready, finish, idx + 1), None
+        return (dev_ready, finish, idx + 1)
 
-    init = (jnp.zeros((max_k,), jnp.float32), jnp.zeros((), jnp.float32),
+    return step
+
+
+def _pipelining_core_init(max_k: int):
+    return (jnp.zeros((max_k,), jnp.float32), jnp.zeros((), jnp.float32),
             jnp.zeros((), jnp.int32))
-    (_, last_finish, _), _ = jax.lax.scan(step, init, None, length=n_lines)
-    return n_lines * ucie_line_ui / last_finish
 
 
 # -- batched grid programs ----------------------------------------------------
@@ -373,6 +471,334 @@ def _pipelining_grid(ks, ucie_line_uis, device_line_uis, *, max_k: int,
     return over_kud(ks, ucie_line_uis, device_line_uis)
 
 
+# -- convergence-adaptive chunked cores (SimConfig mode="adaptive") -----------
+#
+# Each adaptive core is a ``lax.while_loop`` over chunks of C cycles (inner
+# ``lax.scan`` with ``unroll=``) carrying per-cell running estimates; the
+# WHOLE vmapped grid exits as soon as the slowest cell converges (or the
+# straggler set shrinks below the escalation budget / the horizon is hit).
+#
+# The per-cell estimate is NOT the raw steady-state mean: it reconstructs
+# the fixed engine's warm-window average ``[N/4, N]`` so the adaptive value
+# tracks the fixed-mode value, transients included:
+#
+#   report = ( observed [N/4, n] prefix * its width
+#            + mu_hat * (N - n) ) / (N - N/4)
+#
+# where ``mu_hat`` is a TRIANGULARLY-weighted trailing-window mean (the
+# triangular window suppresses the O(T/w) periodic-aliasing error of a
+# rectangular window to O((T/w)^2)), formed from cumulative data and
+# time-weighted-data accumulators sampled at chunk boundaries.  A cell is
+# converged when its report is stable to ``tol`` AND its queue/credit
+# pools are not drifting (the drift guard catches slow write-buffer-fill
+# metastability a short stability test cannot see).  On grids of >=
+# _ESCALATION_MIN_CELLS cells the loop may exit with up to cells //
+# _ESCALATION_BUDGET_DIV unconverged stragglers, which are re-simulated
+# EXACTLY (full fixed horizon, bit-identical numerics) in a tiny padded
+# flat-cell program — so a handful of slow cells cannot hold the whole
+# grid at the full horizon.
+
+#: chunks between pool snapshots for the drift guard
+_DRIFT_SPAN = 3
+#: max pool movement per chunk (slots) still considered "steady" — steady
+#: boundary aliasing measures <= ~1.4 slots/chunk; slow-fill transients
+#: measure 8-34 slots/chunk
+_DRIFT_TOL_SLOTS = 2.0
+#: never exit before this many chunks (two comparable reports + warm-up)
+_MIN_EXIT_CHUNKS = 4
+#: straggler escalation only pays off on grids at least this large (on
+#: small grids the fixed per-cycle dispatch cost of a second full-horizon
+#: pass outweighs the saved chunks)
+_ESCALATION_MIN_CELLS = 256
+#: max stragglers the early exit may leave behind: cells // this
+_ESCALATION_BUDGET_DIV = 8
+
+
+def _divisor_chunk(horizon: int, chunk: int) -> int:
+    """Effective chunk: near ``horizon / 16`` (so per-chunk estimate
+    overhead stays amortized for long horizons), at least the configured
+    ``chunk``, at most ``horizon / 8`` (so short horizons still get >= 8
+    convergence checks), snapped down to an exact divisor of ``horizon``
+    so the chunked loop lands on the fixed horizon precisely.
+
+    Divisors making the chunk count a multiple of 4 are preferred — then
+    the reconstructed warm window starts exactly at ``horizon // 4`` and
+    the at-horizon report equals the fixed warm-window average.  Returns
+    a value < 8 when ``horizon`` has no usable divisor (e.g. a prime);
+    the runners fall back to the fixed engine in that case rather than
+    degrade to per-cycle chunking."""
+    horizon = int(horizon)
+    cap = min(max(int(chunk), horizon // 16), max(horizon // 8, 1))
+    best = 1
+    for c in range(cap, 7, -1):
+        if horizon % c:
+            continue
+        if (horizon // c) % 4 == 0:
+            return c
+        best = max(best, c)
+    return best
+
+
+def _tri_window_mean(Dh, TDh, k, m, chunk: float, denom_per_cycle):
+    """Triangular-weighted mean of the per-cycle delivery over the chunk
+    window ``(m, k]`` (apex at the midpoint), from cumulative ``D`` and
+    time-weighted ``TD = sum(t * d_t)`` boundary histories."""
+    mid = (m + k + 1) // 2
+    idx = lambda H, i: jax.lax.dynamic_index_in_dim(H, i, axis=0,
+                                                    keepdims=False)
+    D_m, D_mid, D_k = idx(Dh, m), idx(Dh, mid), idx(Dh, k)
+    TD_m, TD_mid, TD_k = idx(TDh, m), idx(TDh, mid), idx(TDh, k)
+    b_i = m.astype(jnp.float32) * chunk
+    b_m = mid.astype(jnp.float32) * chunk
+    b_j = k.astype(jnp.float32) * chunk
+    c1 = b_m - b_i
+    c2 = b_j - b_m
+    w_sum = c1 * (c1 + 1.0) / 2.0 + c2 * (c2 - 1.0) / 2.0
+    num = ((TD_mid - TD_m) - b_i * (D_mid - D_m)
+           + b_j * (D_k - D_mid) - (TD_k - TD_mid))
+    return num / (jnp.maximum(w_sum, 1.0) * denom_per_cycle)
+
+
+def _symmetric_grid_adaptive(pstack, x, y, backlogs, *, n_flits: int,
+                             chunk: int, unroll: int, tol: float,
+                             budget: int):
+    """Chunked early-exit symmetric core over the ``[P, B, M]`` grid.
+
+    Returns ``(report, converged, chunks_run, conv_at_chunk)`` where
+    ``report`` reconstructs the fixed warm-window average (see the module
+    section comment), ``converged`` marks cells whose report is trusted,
+    and ``conv_at_chunk`` is each cell's first stable chunk (-1 = never).
+    """
+    P = pstack.g_slots.shape[0]
+    B = backlogs.shape[0]
+    M = x.shape[0]
+    K = n_flits // chunk
+    K0 = max(K // 4, 1)           # fixed warm window starts at chunk K0
+    min_k = max(_MIN_EXIT_CHUNKS, K0 + 1)
+    ch = jnp.float32(chunk)
+    fb = pstack.flit_bits[:, None, None]
+    denom = 2.0 * fb / 128.0      # capacity bits per cycle / bits per slot
+
+    def cell_chunk(p, b, xx, yy, core, D, TD, t):
+        kernel = _symmetric_stepfn(p, xx, yy, b)
+
+        def step(c, _):
+            core, D, TD, t = c
+            core, nd = kernel(core)
+            t = t + 1.0
+            D = D + nd
+            TD = TD + t * nd
+            return (core, D, TD, t), None
+
+        (core, D, TD, t), _ = jax.lax.scan(
+            step, (core, D, TD, t), None, length=chunk, unroll=unroll)
+        return core, D, TD, t
+
+    over_m = jax.vmap(cell_chunk, in_axes=(None, None, 0, 0, 0, 0, 0, 0))
+    over_bm = jax.vmap(over_m, in_axes=(None, 0, None, None, 0, 0, 0, 0))
+    over_pbm = jax.vmap(over_bm, in_axes=(0, None, None, None, 0, 0, 0, 0))
+
+    def report(k, Dh, TDh):
+        m = jnp.maximum(k - 4, (k + 1) // 2)
+        mu = _tri_window_mean(Dh, TDh, k, m, ch, denom)
+        D_K0 = Dh[K0]
+        D_k = jax.lax.dynamic_index_in_dim(Dh, k, axis=0, keepdims=False)
+        wA = jnp.maximum((k - K0).astype(jnp.float32), 1.0) * ch
+        A = (D_k - D_K0) / (wA * denom)
+        kf = (k - K0).astype(jnp.float32)
+        return jnp.where(k > K0,
+                         (A * kf + mu * (K - k).astype(jnp.float32))
+                         / float(K - K0), mu)
+
+    zeros = lambda: jnp.zeros((P, B, M), jnp.float32)
+
+    def body(state):
+        (k, core, D, TD, t, Dh, TDh, Ph, rep, conv, conv_at, unconv) = state
+        core, D, TD, t = over_pbm(pstack, backlogs, x, y, core, D, TD, t)
+        k = k + 1
+        Dh = Dh.at[k].set(D)
+        TDh = TDh.at[k].set(TD)
+        pools = jnp.stack(core[:5])          # rq, wq, wdata, rdata, resp
+        Ph = Ph.at[k].set(pools)
+        new_rep = report(k, Dh, TDh)
+        prev_pools = jax.lax.dynamic_index_in_dim(
+            Ph, jnp.maximum(k - _DRIFT_SPAN, 0), axis=0, keepdims=False)
+        drift = jnp.max(jnp.abs(pools - prev_pools), axis=0) / _DRIFT_SPAN
+        delta = jnp.abs(new_rep - rep) / jnp.maximum(jnp.abs(new_rep),
+                                                     1e-9)
+        conv = ((delta <= tol) & (drift < _DRIFT_TOL_SLOTS)
+                & (k >= min_k) & (k > _DRIFT_SPAN)) | (k >= K)
+        conv_at = jnp.where((conv_at < 0) & conv, k, conv_at)
+        unconv = jnp.sum(jnp.where(conv, 0, 1))
+        return (k, core, D, TD, t, Dh, TDh, Ph, new_rep, conv, conv_at,
+                unconv)
+
+    def cond(state):
+        k, unconv = state[0], state[-1]
+        return (k < K) & (unconv > budget)
+
+    init = (jnp.zeros((), jnp.int32),
+            tuple(zeros() for _ in range(7)),
+            zeros(), zeros(), zeros(),
+            jnp.zeros((K + 1, P, B, M), jnp.float32),
+            jnp.zeros((K + 1, P, B, M), jnp.float32),
+            jnp.zeros((K + 1, 5, P, B, M), jnp.float32),
+            zeros(), jnp.zeros((P, B, M), bool),
+            -jnp.ones((P, B, M), jnp.int32),
+            jnp.asarray(P * B * M + budget + 1, jnp.int32))
+    (k, _, _, _, _, _, _, _, rep, conv, conv_at, _) = jax.lax.while_loop(
+        cond, body, init)
+    return rep, conv, k, conv_at
+
+
+def _symmetric_cells_grid(pcells, xs, ys, bs, *, n_flits: int):
+    """Flat per-cell fixed-horizon program for straggler escalation: each
+    cell carries its own (param row, mix, backlog) — numerics identical to
+    the fixed grid core."""
+    point = lambda p, xx, yy, b: _symmetric_efficiency(p, xx, yy, b,
+                                                       n_flits)
+    return jax.vmap(point)(pcells, xs, ys, bs)
+
+
+def _asymmetric_grid_adaptive(pstack, x, y, *, n_accesses: int, chunk: int,
+                              unroll: int, tol: float, budget: int):
+    """Chunked early-exit asymmetric core over the ``[P, M]`` grid.
+
+    The busiest-lane time grows linearly in steady state, so the report
+    extrapolates the fixed-horizon value ``512 N / (lanes * T(N))`` from
+    the observed ``T(n)`` plus the trailing slope — killing the ``C/n``
+    tail a plain cumulative estimate would carry.
+    """
+    P = pstack.total_lanes.shape[0]
+    M = x.shape[0]
+    K = n_accesses // chunk
+    min_k = _MIN_EXIT_CHUNKS
+    ch = jnp.float32(chunk)
+    lanes = pstack.total_lanes[:, None]
+
+    def cell_chunk(p, xx, yy, core):
+        kernel = _asymmetric_stepfn(p, xx, yy)
+
+        def step(c, _):
+            return kernel(c), None
+
+        core, _ = jax.lax.scan(step, core, None, length=chunk,
+                               unroll=unroll)
+        return core
+
+    over_m = jax.vmap(cell_chunk, in_axes=(None, 0, 0, 0))
+    over_pm = jax.vmap(over_m, in_axes=(0, None, None, 0))
+
+    def report(k, Th):
+        T_k = jax.lax.dynamic_index_in_dim(Th, k, axis=0, keepdims=False)
+        ahat = (T_k - Th[1]) / jnp.maximum(
+            (k - 1).astype(jnp.float32) * ch, 1.0)
+        tail = (K - k).astype(jnp.float32) * ch
+        return 512.0 * n_accesses / (lanes * jnp.maximum(
+            T_k + ahat * tail, 1e-9))
+
+    def body(state):
+        k, core, Th, rep, conv, conv_at, unconv = state
+        core = over_pm(pstack, x, y, core)
+        k = k + 1
+        T = jnp.maximum(jnp.maximum(core[0], core[1]), core[2])
+        Th = Th.at[k].set(T)
+        new_rep = report(k, Th)
+        delta = jnp.abs(new_rep - rep) / jnp.maximum(jnp.abs(new_rep),
+                                                     1e-9)
+        conv = ((delta <= tol) & (k >= min_k)) | (k >= K)
+        conv_at = jnp.where((conv_at < 0) & conv, k, conv_at)
+        unconv = jnp.sum(jnp.where(conv, 0, 1))
+        return (k, core, Th, new_rep, conv, conv_at, unconv)
+
+    def cond(state):
+        k, unconv = state[0], state[-1]
+        return (k < K) & (unconv > budget)
+
+    zeros = lambda: jnp.zeros((P, M), jnp.float32)
+    init = (jnp.zeros((), jnp.int32),
+            tuple(zeros() for _ in range(4)),
+            jnp.zeros((K + 1, P, M), jnp.float32),
+            zeros(), jnp.zeros((P, M), bool),
+            -jnp.ones((P, M), jnp.int32),
+            jnp.asarray(P * M + budget + 1, jnp.int32))
+    (k, _, _, rep, conv, conv_at, _) = jax.lax.while_loop(cond, body, init)
+    return rep, conv, k, conv_at
+
+
+def _asymmetric_cells_grid(pcells, xs, ys, *, n_accesses: int):
+    """Flat per-cell fixed-horizon asymmetric program (escalation)."""
+    point = lambda p, xx, yy: _asymmetric_efficiency(p, xx, yy, n_accesses)
+    return jax.vmap(point)(pcells, xs, ys)
+
+
+def _pipelining_grid_adaptive(ks, ucie_line_uis, device_line_uis, *,
+                              max_k: int, n_lines: int, chunk: int,
+                              unroll: int, tol: float):
+    """Chunked early-exit Fig-13 pipelining core over ``[K, U, D]``.
+
+    Same linear-growth extrapolation as the asymmetric core (the link
+    free-time grows exactly linearly once the k-device rotation fills).
+    """
+    Kk = ks.shape[0]
+    U = ucie_line_uis.shape[0]
+    Dn = device_line_uis.shape[0]
+    K = n_lines // chunk
+    min_k = min(_MIN_EXIT_CHUNKS, K)
+    ch = jnp.float32(chunk)
+    ucie = ucie_line_uis[None, :, None]
+
+    def cell_chunk(k_dev, u, d, core):
+        kernel = _pipelining_stepfn(k_dev, u, d)
+
+        def step(c, _):
+            return kernel(c), None
+
+        core, _ = jax.lax.scan(step, core, None, length=chunk,
+                               unroll=unroll)
+        return core
+
+    over_d = jax.vmap(cell_chunk, in_axes=(None, None, 0, 0))
+    over_ud = jax.vmap(over_d, in_axes=(None, 0, None, 0))
+    over_kud = jax.vmap(over_ud, in_axes=(0, None, None, 0))
+
+    def report(k, Th):
+        T_k = jax.lax.dynamic_index_in_dim(Th, k, axis=0, keepdims=False)
+        ahat = (T_k - Th[1]) / jnp.maximum(
+            (k - 1).astype(jnp.float32) * ch, 1.0)
+        tail = (K - k).astype(jnp.float32) * ch
+        return n_lines * ucie / jnp.maximum(T_k + ahat * tail, 1e-9)
+
+    def body(state):
+        k, core, Th, rep, conv, conv_at, unconv = state
+        core = over_kud(ks, ucie_line_uis, device_line_uis, core)
+        k = k + 1
+        Th = Th.at[k].set(core[1])
+        new_rep = report(k, Th)
+        delta = jnp.abs(new_rep - rep) / jnp.maximum(jnp.abs(new_rep),
+                                                     1e-9)
+        conv = ((delta <= tol) & (k >= min_k)) | (k >= K)
+        conv_at = jnp.where((conv_at < 0) & conv, k, conv_at)
+        unconv = jnp.sum(jnp.where(conv, 0, 1))
+        return (k, core, Th, new_rep, conv, conv_at, unconv)
+
+    def cond(state):
+        k, unconv = state[0], state[-1]
+        return (k < K) & (unconv > 0)
+
+    init = (jnp.zeros((), jnp.int32),
+            (jnp.zeros((Kk, U, Dn, max_k), jnp.float32),
+             jnp.zeros((Kk, U, Dn), jnp.float32),
+             jnp.zeros((Kk, U, Dn), jnp.int32)),
+            jnp.zeros((K + 1, Kk, U, Dn), jnp.float32),
+            jnp.zeros((Kk, U, Dn), jnp.float32),
+            jnp.zeros((Kk, U, Dn), bool),
+            -jnp.ones((Kk, U, Dn), jnp.int32),
+            jnp.asarray(Kk * U * Dn + 1, jnp.int32))
+    (k, _, _, rep, conv, conv_at, _) = jax.lax.while_loop(cond, body, init)
+    return rep, conv, k, conv_at
+
+
 # -- shared compile cache (repro.core.space) ---------------------------------
 
 
@@ -387,33 +813,199 @@ def clear_compile_cache() -> None:
     space_mod.clear_cache(space_mod.FLITSIM_FAMILIES)
 
 
-def _run_symmetric(pstack, x, y, backlogs, n_flits: int):
+#: telemetry from the most recent ADAPTIVE run per engine family —
+#: cycles executed, horizon, straggler count, and the cycles-to-convergence
+#: histogram the benchmarks report (see :func:`last_run_info`)
+_LAST_RUN_INFO: Dict[str, Dict[str, Any]] = {}
+
+
+def last_run_info() -> Dict[str, Dict[str, Any]]:
+    """Per-family telemetry of the most recent adaptive run: ``cycles_run``
+    (main-loop chunks executed), ``sequential_depth`` (the run's true
+    sequential depth — the horizon whenever a straggler-escalation pass
+    ran), ``horizon`` / ``chunk`` / ``stragglers`` / ``cells``, plus a
+    ``converged_cycles`` histogram ({cycles: cell count}; stragglers and
+    horizon-exits count under ``"horizon"``).  Fixed-mode runs do not
+    update it.  The raw arrays are kept lazily on device so the hot path
+    pays no host sync; this accessor materializes them."""
+    out: Dict[str, Dict[str, Any]] = {}
+    for fam, info in _LAST_RUN_INFO.items():
+        d = {k: v for k, v in info.items() if not k.startswith("_")}
+        chunk = d["chunk"]
+        conv_at = np.asarray(info["_conv_at"]).reshape(-1)
+        d["cycles_run"] = int(np.asarray(info["_k_exit"])) * chunk
+        # the straggler escalation pass runs the FULL horizon, so the
+        # run's true sequential depth is the horizon whenever any cell
+        # was escalated — cycles_run alone would overstate the depth cut
+        d["sequential_depth"] = (d["horizon"] if d["stragglers"]
+                                 else d["cycles_run"])
+        d["cells"] = int(conv_at.size)
+        vals, counts = np.unique(conv_at, return_counts=True)
+        d["converged_cycles"] = {
+            ("horizon" if v < 0 else str(int(v) * chunk)): int(c)
+            for v, c in zip(vals, counts)}
+        out[fam] = d
+    return out
+
+
+def _record_adaptive(family: str, horizon: int, chunk: int, k_exit,
+                     conv_at, stragglers: int) -> None:
+    _LAST_RUN_INFO[family] = {
+        "mode": "adaptive", "horizon": int(horizon), "chunk": int(chunk),
+        "stragglers": int(stragglers),
+        "_k_exit": k_exit, "_conv_at": conv_at,
+    }
+
+
+def _escalate_stragglers(family: str, cells_grid_fn, horizon: int, rep,
+                         conv_np: np.ndarray, args_builder):
+    """Re-simulate unconverged straggler cells EXACTLY at the full fixed
+    horizon in a padded flat-cell program, scattering the exact values
+    back over the adaptive reports.  ``args_builder(idx)`` maps the padded
+    ``[S, ndim]`` straggler indices to the flat-cell program's arguments.
+    """
+    idx = _pad_pow2(np.argwhere(~conv_np))
+    args = args_builder(idx)
+    cells_fn = cached_program(family, ("cells", idx.shape[0], horizon),
+                              cells_grid_fn, args)
+    exact = np.asarray(cells_fn(*args))
+    rep_np = np.asarray(rep).copy()
+    rep_np[~conv_np] = exact[:int((~conv_np).sum())]
+    return jnp.asarray(rep_np)
+
+
+def _escalation_budget(cells: int, chunk: int, horizon: int) -> int:
+    """Max stragglers the early exit may strand: roughly the break-even
+    point where re-simulating S cells at the full horizon costs what one
+    more full-grid chunk would (S * horizon ~= cells * chunk), floored by
+    the cells // _ESCALATION_BUDGET_DIV policy cap."""
+    if cells < _ESCALATION_MIN_CELLS:
+        return 0
+    return min(cells // _ESCALATION_BUDGET_DIV,
+               max((cells * chunk) // horizon, 1))
+
+
+def _gather_cells(pstack, rows) -> Any:
+    """Per-cell parameter pytree: row ``rows[i]`` of every stacked leaf."""
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.asarray(np.asarray(leaf)[rows]), pstack)
+
+
+def _pad_pow2(idx: np.ndarray) -> np.ndarray:
+    """Pad straggler indices to the next power-of-two bucket (repeating
+    the first row) so escalation compiles once per bucket size."""
+    bucket = 1 << max(idx.shape[0] - 1, 0).bit_length()
+    return np.concatenate([idx, np.repeat(idx[:1], bucket - idx.shape[0],
+                                          axis=0)])
+
+
+def _run_symmetric(pstack, x, y, backlogs, n_flits: int,
+                   sim: Optional[SimConfig] = None):
+    sim = sim if sim is not None else FIXED_SIM
+    P, B, M = pstack.g_slots.shape[0], backlogs.shape[0], x.shape[0]
+    if sim.mode == "fixed":
+        fn = cached_program(
+            "flitsim.symmetric", (P, B, M, n_flits) + sim.key(),
+            functools.partial(_symmetric_grid, n_flits=n_flits),
+            (pstack, x, y, backlogs))
+        return fn(pstack, x, y, backlogs)
+    horizon = sim.horizon(n_flits)
+    chunk = _divisor_chunk(horizon, sim.chunk)
+    if chunk < 8:               # divisor-poor horizon: adaptive degrades
+        return _run_symmetric(pstack, x, y, backlogs, horizon,
+                              sim=FIXED_SIM)
+    budget = _escalation_budget(P * B * M, chunk, horizon)
     fn = cached_program(
-        "flitsim.symmetric",
-        (pstack.g_slots.shape[0], backlogs.shape[0], x.shape[0], n_flits),
-        functools.partial(_symmetric_grid, n_flits=n_flits),
+        "flitsim.symmetric", (P, B, M, horizon) + sim.key(),
+        functools.partial(_symmetric_grid_adaptive, n_flits=horizon,
+                          chunk=chunk, unroll=int(sim.unroll),
+                          tol=float(sim.tol), budget=budget),
         (pstack, x, y, backlogs))
-    return fn(pstack, x, y, backlogs)
+    rep, conv, k_exit, conv_at = fn(pstack, x, y, backlogs)
+    stragglers = 0
+    if budget > 0:                      # budget 0 can only exit converged
+        conv_np = np.asarray(conv)
+        stragglers = int((~conv_np).sum())
+        if stragglers:
+            rep = _escalate_stragglers(
+                "flitsim.symmetric",
+                functools.partial(_symmetric_cells_grid, n_flits=horizon),
+                horizon, rep, conv_np,
+                lambda idx: (_gather_cells(pstack, idx[:, 0]),
+                             jnp.asarray(np.asarray(x)[idx[:, 2]]),
+                             jnp.asarray(np.asarray(y)[idx[:, 2]]),
+                             jnp.asarray(np.asarray(backlogs)[idx[:, 1]])))
+    _record_adaptive("flitsim.symmetric", horizon, chunk, k_exit, conv_at,
+                     stragglers)
+    return rep
 
 
-def _run_asymmetric(pstack, x, y, n_accesses: int):
+def _run_asymmetric(pstack, x, y, n_accesses: int,
+                    sim: Optional[SimConfig] = None):
+    sim = sim if sim is not None else FIXED_SIM
+    P, M = pstack.total_lanes.shape[0], x.shape[0]
+    if sim.mode == "fixed":
+        fn = cached_program(
+            "flitsim.asymmetric", (P, M, n_accesses) + sim.key(),
+            functools.partial(_asymmetric_grid, n_accesses=n_accesses),
+            (pstack, x, y))
+        return fn(pstack, x, y)
+    horizon = sim.horizon(n_accesses)
+    chunk = _divisor_chunk(horizon, sim.chunk)
+    if chunk < 8:
+        return _run_asymmetric(pstack, x, y, horizon, sim=FIXED_SIM)
+    budget = _escalation_budget(P * M, chunk, horizon)
     fn = cached_program(
-        "flitsim.asymmetric",
-        (pstack.total_lanes.shape[0], x.shape[0], n_accesses),
-        functools.partial(_asymmetric_grid, n_accesses=n_accesses),
+        "flitsim.asymmetric", (P, M, horizon) + sim.key(),
+        functools.partial(_asymmetric_grid_adaptive, n_accesses=horizon,
+                          chunk=chunk, unroll=int(sim.unroll),
+                          tol=float(sim.tol), budget=budget),
         (pstack, x, y))
-    return fn(pstack, x, y)
+    rep, conv, k_exit, conv_at = fn(pstack, x, y)
+    stragglers = 0
+    if budget > 0:
+        conv_np = np.asarray(conv)
+        stragglers = int((~conv_np).sum())
+        if stragglers:
+            rep = _escalate_stragglers(
+                "flitsim.asymmetric",
+                functools.partial(_asymmetric_cells_grid,
+                                  n_accesses=horizon),
+                horizon, rep, conv_np,
+                lambda idx: (_gather_cells(pstack, idx[:, 0]),
+                             jnp.asarray(np.asarray(x)[idx[:, 1]]),
+                             jnp.asarray(np.asarray(y)[idx[:, 1]])))
+    _record_adaptive("flitsim.asymmetric", horizon, chunk, k_exit, conv_at,
+                     stragglers)
+    return rep
 
 
 def _run_pipelining(ks, ucie_line_uis, device_line_uis, max_k: int,
-                    n_lines: int):
+                    n_lines: int, sim: Optional[SimConfig] = None):
+    sim = sim if sim is not None else FIXED_SIM
+    shape = (ks.shape[0], ucie_line_uis.shape[0], device_line_uis.shape[0])
+    if sim.mode == "fixed":
+        fn = cached_program(
+            "flitsim.pipelining", shape + (max_k, n_lines) + sim.key(),
+            functools.partial(_pipelining_grid, max_k=max_k,
+                              n_lines=n_lines),
+            (ks, ucie_line_uis, device_line_uis))
+        return fn(ks, ucie_line_uis, device_line_uis)
+    horizon = sim.horizon(n_lines)
+    chunk = _divisor_chunk(horizon, sim.chunk)
+    if chunk < 8:
+        return _run_pipelining(ks, ucie_line_uis, device_line_uis, max_k,
+                               horizon, sim=FIXED_SIM)
     fn = cached_program(
-        "flitsim.pipelining",
-        (ks.shape[0], ucie_line_uis.shape[0], device_line_uis.shape[0],
-         max_k, n_lines),
-        functools.partial(_pipelining_grid, max_k=max_k, n_lines=n_lines),
+        "flitsim.pipelining", shape + (max_k, horizon) + sim.key(),
+        functools.partial(_pipelining_grid_adaptive, max_k=max_k,
+                          n_lines=horizon, chunk=chunk,
+                          unroll=int(sim.unroll), tol=float(sim.tol)),
         (ks, ucie_line_uis, device_line_uis))
-    return fn(ks, ucie_line_uis, device_line_uis)
+    rep, conv, k_exit, conv_at = fn(ks, ucie_line_uis, device_line_uis)
+    _record_adaptive("flitsim.pipelining", horizon, chunk, k_exit, conv_at,
+                     0)                 # exits only converged / at horizon
+    return rep
 
 
 # -- engine entry point (what DesignSpace lowers onto) ------------------------
@@ -423,7 +1015,8 @@ def simulate_grid(protocols: Sequence[str], x, y, backlogs, *,
                   perturbations: Optional[Sequence[Mapping[str, float]]]
                   = None,
                   n_flits: int = 2048,
-                  n_accesses: int = 4096) -> jnp.ndarray:
+                  n_accesses: int = 4096,
+                  sim: Optional[SimConfig] = None) -> jnp.ndarray:
     """Evaluate the full ``[Q perturbations, P protocols, B backlogs,
     M mixes]`` grid, one compiled call per simulator family.
 
@@ -433,6 +1026,11 @@ def simulate_grid(protocols: Sequence[str], x, y, backlogs, *,
     folded into the parameter stacks (the protocol axis becomes ``Q*P``
     rows of one pytree), so sensitivity sweeps ride the exact same
     executables as the baseline.  Returns efficiency ``[Q, P, B, M]``.
+
+    ``sim`` selects the execution config: :data:`FIXED_SIM` (default,
+    bit-identical full-horizon scan) or :data:`ADAPTIVE_SIM` (chunked
+    early-exit cores, <= tol-scale deviation; see
+    :func:`last_run_info` for the cycles-to-convergence telemetry).
     """
     keys = tuple(protocols)
     unknown = [k for k in keys
@@ -468,7 +1066,7 @@ def simulate_grid(protocols: Sequence[str], x, y, backlogs, *,
         pstack = SymmetricFlitParams.stack(
             [SYMMETRIC_PARAMS[k].perturbed(p) for p in perts
              for k in sym_keys])
-        grid = _run_symmetric(pstack, x, y, b, int(n_flits))
+        grid = _run_symmetric(pstack, x, y, b, int(n_flits), sim=sim)
         grid = grid.reshape((n_q, len(sym_keys), n_b, n_m))
         for i, k in enumerate(sym_keys):
             per_key[k] = grid[:, i]
@@ -477,7 +1075,7 @@ def simulate_grid(protocols: Sequence[str], x, y, backlogs, *,
         pstack = AsymmetricLaneParams.stack(
             [ASYMMETRIC_PARAMS[k].perturbed(p) for p in perts
              for k in asym_keys])
-        grid = _run_asymmetric(pstack, x, y, int(n_accesses))
+        grid = _run_asymmetric(pstack, x, y, int(n_accesses), sim=sim)
         grid = grid.reshape((n_q, len(asym_keys), n_m))
         for i, k in enumerate(asym_keys):
             per_key[k] = jnp.broadcast_to(grid[:, i, None, :],
@@ -577,7 +1175,8 @@ def _normalize_mixes(mixes) -> Tuple[Tuple[float, float], ...]:
 def sweep(protocols: Optional[Sequence[str]] = None,
           mixes=None,
           backlogs: Union[None, float, Sequence[float]] = None,
-          *, n_flits: int = 2048, n_accesses: int = 4096) -> SweepResult:
+          *, n_flits: int = 2048, n_accesses: int = 4096,
+          sim: Optional[SimConfig] = None) -> SweepResult:
     """Evaluate a full ``protocols x backlogs x mixes`` grid in one compiled
     call per simulator family.
 
@@ -593,6 +1192,9 @@ def sweep(protocols: Optional[Sequence[str]] = None,
         adds a ``B`` axis; backlog only affects the symmetric family (the
         asymmetric rows are broadcast across it).
       n_flits / n_accesses: static simulation lengths per family.
+      sim: execution config — :data:`FIXED_SIM` (default) or
+        :data:`ADAPTIVE_SIM` (chunked early-exit; the benchmarks/explorer
+        default).
 
     Returns a :class:`SweepResult` whose ``efficiency`` grid is directly
     comparable to ``ANALYTIC[key].bw_eff(x, y)``.
@@ -613,7 +1215,7 @@ def sweep(protocols: Optional[Sequence[str]] = None,
     x = _f32([m[0] for m in mix_tuples])
     y = _f32([m[1] for m in mix_tuples])
     eff = simulate_grid(keys, x, y, backlog_vals, n_flits=n_flits,
-                        n_accesses=n_accesses)[0]          # [P, B, M]
+                        n_accesses=n_accesses, sim=sim)[0]  # [P, B, M]
     if squeeze_b:
         return SweepResult(protocols=keys, mixes=mix_tuples, backlogs=None,
                            efficiency=eff[:, 0, :])
@@ -625,7 +1227,8 @@ def sweep_perturbed(perturbations: Sequence[Mapping[str, float]],
                     protocols: Optional[Sequence[str]] = None,
                     mixes=None,
                     backlogs: Union[None, float, Sequence[float]] = None,
-                    *, n_flits: int = 2048, n_accesses: int = 4096):
+                    *, n_flits: int = 2048, n_accesses: int = 4096,
+                    sim: Optional[SimConfig] = None):
     """Protocol-parameter sensitivity sweep: multiplicative ``{field:
     scale}`` perturbations (slot counts, credit limits, lane splits) over
     the existing pytree param stacks.
@@ -646,8 +1249,8 @@ def sweep_perturbed(perturbations: Sequence[Mapping[str, float]],
     else:
         default_backlog = 64.0 if backlogs is None else float(backlogs)
     return DesignSpace(axes, default_backlog=default_backlog,
-                       n_flits=n_flits, n_accesses=n_accesses).evaluate(
-        metrics=("sim_efficiency",))
+                       n_flits=n_flits, n_accesses=n_accesses,
+                       sim=sim).evaluate(metrics=("sim_efficiency",))
 
 
 #: Default queue-depth axis for knee extraction — doubling steps wide
@@ -660,7 +1263,8 @@ def backlog_knees(mixes=None,
                   backlogs: Sequence[float] = KNEE_BACKLOGS,
                   knee_frac: float = 0.95,
                   n_flits: int = 2048,
-                  per_mix: bool = False) -> Dict[str, Any]:
+                  per_mix: bool = False,
+                  sim: Optional[SimConfig] = None) -> Dict[str, Any]:
     """Efficiency-cliff knee per simulated protocol: the smallest request
     backlog at which simulated data efficiency reaches ``knee_frac`` of
     that protocol's best efficiency over the backlog axis.
@@ -678,7 +1282,7 @@ def backlog_knees(mixes=None,
     backlog probed.  The result feeds ``SelectionConstraints.
     max_backlog_knee``: a queue-depth budget the selector enforces.
     """
-    res = sweep(mixes=mixes, backlogs=backlogs, n_flits=n_flits)
+    res = sweep(mixes=mixes, backlogs=backlogs, n_flits=n_flits, sim=sim)
     eff = np.asarray(res.efficiency)                    # [P, B, M]
     b = np.asarray(res.backlogs, dtype=np.float64)
     knees: Dict[str, Any] = {}
@@ -693,7 +1297,7 @@ def backlog_knees(mixes=None,
 def sweep_pipelining(ks: Sequence[int], n_lines: int = 512,
                      ucie_line_ui: Union[float, Sequence[float]] = 16,
                      device_line_ui: Union[float, Sequence[float]] = 64,
-                     ) -> jnp.ndarray:
+                     sim: Optional[SimConfig] = None) -> jnp.ndarray:
     """Batched Fig-13 model, one compiled call.
 
     Scalar ``ucie_line_ui`` / ``device_line_ui`` give link utilization
@@ -708,7 +1312,7 @@ def sweep_pipelining(ks: Sequence[int], n_lines: int = 512,
     ds = _f32(np.atleast_1d(np.asarray(device_line_ui, dtype=np.float64)))
     max_k = max(max(ks), _PIPELINING_PAD_K)
     util = _run_pipelining(jnp.asarray(ks, jnp.int32), us, ds,
-                           max_k, int(n_lines))
+                           max_k, int(n_lines), sim=sim)
     return util[:, 0, 0] if squeeze else util
 
 

@@ -22,6 +22,16 @@ cache families, which is what ``axis("phy", [...])`` lowers onto —
 :func:`approach_catalog_items` provides the PHY-less per-approach
 templates, and :func:`perturbed_catalog_items` folds ``catalog_param``
 perturbations (``UCIePhy.perturbed``) into the stack.
+
+Relation to the flit-simulation ``sim=`` config: the analytic programs
+here are closed forms (no cycle loop), so
+:class:`repro.core.space.SimConfig` does not change their numerics — only
+the flit-simulated metrics (``sim_efficiency`` / ``sim_bandwidth_gbs``)
+riding next to them in a joint ``DesignSpace`` evaluation switch between
+fixed-horizon and convergence-adaptive execution.  The PHY axis does feed
+the simulators through ``sim_bandwidth_gbs`` (simulated efficiency x
+``UCIePhy.raw_bandwidth_gbs``), which is how the simulation-corrected
+frontier sweeps 32G/48G generations like the closed forms do.
 """
 from __future__ import annotations
 

@@ -90,6 +90,29 @@ def sim_key_for(catalog_key: str) -> Optional[str]:
     return CATALOG_SIM_KEYS.get(catalog_key.split("/")[0])
 
 
+#: flit-simulator key -> canonical catalog approach prefix (the inverse of
+#: :data:`CATALOG_SIM_KEYS`; ``lpddr6_asym`` resolves to approach A, its
+#: primary mapping — A2 shares the same lane-group simulator)
+SIM_APPROACH_KEYS = {
+    "lpddr6_asym": "A:lpddr6-asym",
+    "hbm_asym": "B:hbm-asym",
+    "chi": "C:chi-sym",
+    "cxl_unopt": "D:cxl-mem",
+    "cxl_opt": "E:cxl-mem-opt",
+}
+
+
+def approach_key_for(sim_key: str) -> str:
+    """Catalog approach prefix for a flit-simulator protocol key — how the
+    sim-phy frontier labels simulated winners in catalog vocabulary."""
+    try:
+        return SIM_APPROACH_KEYS[sim_key]
+    except KeyError:
+        raise KeyError(f"no catalog approach backs simulator key "
+                       f"{sim_key!r}; choose from "
+                       f"{sorted(SIM_APPROACH_KEYS)}") from None
+
+
 @functools.lru_cache(maxsize=1)
 def _default_knees() -> Dict[str, float]:
     """Memoized default-grid backlog knees — deterministic constants, so

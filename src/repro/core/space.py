@@ -64,6 +64,27 @@ Feasible-set masks are plain boolean :class:`SpaceArray` values:
 (masked-out cells become NaN under ``sel``, are excluded from ``argbest``
 / ``frontier``, and grid points with no admissible system read
 ``"(none)"``, matching ``GridRanking.best_keys()``).
+
+Simulation execution config (:class:`SimConfig`)
+------------------------------------------------
+The flit simulators run in one of two modes, selected by a
+:class:`SimConfig` threaded through ``DesignSpace(sim=...)`` /
+``evaluate(sim=...)`` and every legacy front-end (``flitsim.sweep*``,
+``backlog_knees``, ``joint_frontier``, ``bridge_design_space``):
+
+* ``mode="fixed"`` (default) — the full fixed-horizon ``lax.scan``
+  (n_flits=2048 / n_accesses=4096 / n_lines=512), bit-identical to the
+  pre-config engine.  All pinned goldens are produced in this mode.
+* ``mode="adaptive"`` — chunked ``lax.while_loop`` cores with batched
+  early exit: the whole vmapped grid stops as soon as every cell's
+  reconstructed fixed-window estimate has converged (see
+  :mod:`repro.core.flitsim` for the algorithm).  Deviates from fixed by
+  <= ``tol``-scale amounts while cutting the sequential depth several-x.
+
+The config participates in the shared compile-cache key
+(:meth:`SimConfig.key`), so switching between configs never invalidates
+warm executables of other configs — each (family, grid shape, config)
+triple compiles once and stays warm.
 """
 from __future__ import annotations
 
@@ -92,6 +113,72 @@ class CacheStats:
 
     hits: int = 0
     misses: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Execution config for the flit-simulation engines.
+
+    ``mode="fixed"`` runs the full fixed-horizon ``lax.scan`` — bit-identical
+    to the pre-config engine and to every pinned golden.  ``mode="adaptive"``
+    runs the chunked early-exit cores: a ``lax.while_loop`` over chunks of
+    ``chunk`` cycles (inner ``lax.scan`` with ``unroll=``) that stops as
+    soon as every grid cell's reconstructed fixed-window estimate is stable
+    to within ``tol`` (relative), or the horizon is hit.
+
+    ``max_cycles`` overrides the per-family horizon (defaults: the caller's
+    ``n_flits`` / ``n_accesses`` / ``n_lines``); ``chunk`` is shrunk per
+    family to an exact divisor of the horizon (>= 8 chunks per run).  The
+    config participates in the shared compile-cache key (:meth:`key`), so
+    alternating configs never invalidates other configs' warm executables.
+    """
+
+    mode: str = "fixed"
+    chunk: int = 128
+    unroll: int = 4
+    tol: float = 1e-3
+    max_cycles: Optional[int] = None
+
+    def __post_init__(self):
+        if self.mode not in ("fixed", "adaptive"):
+            raise ValueError(f"SimConfig.mode must be 'fixed' or "
+                             f"'adaptive', got {self.mode!r}")
+        if int(self.chunk) < 8:
+            raise ValueError(f"SimConfig.chunk must be >= 8, got "
+                             f"{self.chunk}")
+        if int(self.unroll) < 1:
+            raise ValueError(f"SimConfig.unroll must be >= 1, got "
+                             f"{self.unroll}")
+        if not self.tol > 0.0:
+            raise ValueError(f"SimConfig.tol must be > 0, got {self.tol}")
+        if self.max_cycles is not None and int(self.max_cycles) < 1:
+            raise ValueError(f"SimConfig.max_cycles must be >= 1, got "
+                             f"{self.max_cycles}")
+
+    def horizon(self, default: int) -> int:
+        """Resolved horizon for a family whose fixed length is ``default``.
+
+        The adaptive runner shrinks ``chunk`` to an exact divisor of the
+        horizon (at least 8 chunks per run) so the chunked loop can always
+        reproduce the fixed window exactly at full depth.
+        """
+        return int(self.max_cycles) if self.max_cycles is not None \
+            else int(default)
+
+    def key(self) -> Tuple:
+        """Static cache-key component — distinct configs get distinct
+        compiled executables; re-using a config re-uses its executable."""
+        if self.mode == "fixed":
+            return ("fixed",)
+        return ("adaptive", int(self.chunk), int(self.unroll),
+                float(self.tol), self.max_cycles)
+
+
+#: the default config: bit-identical fixed-horizon simulation
+FIXED_SIM = SimConfig()
+#: convergence-adaptive early-exit simulation (benchmarks / explorer
+#: default; <= tol-scale deviation from FIXED_SIM)
+ADAPTIVE_SIM = SimConfig(mode="adaptive")
 
 
 _PROGRAMS: Dict[Tuple, Any] = {}
@@ -555,11 +642,14 @@ class SpaceResult:
 
     ``arrays`` maps metric name -> :class:`SpaceArray`; every array's dims
     are a subset of the implicit stack dims (``system`` / ``protocol`` /
-    ``approach``) plus the requested axes, in canonical order.
+    ``approach``) plus the requested axes, in canonical order.  ``sim``
+    records the :class:`SimConfig` the flit-simulated metrics were
+    evaluated under (``None`` for results predating the config).
     """
 
     axes: AxisSet
     arrays: Dict[str, SpaceArray]
+    sim: Optional["SimConfig"] = None
 
     def __getitem__(self, metric: str) -> SpaceArray:
         return self.arrays[metric]
@@ -600,7 +690,7 @@ class SpaceResult:
             if w_sel is not None and set(w_sel.dims) <= set(a2.dims):
                 a2 = a2.sel(where=w_sel)
             out[name] = a2
-        return SpaceResult(axes=self.axes, arrays=out)
+        return SpaceResult(axes=self.axes, arrays=out, sim=self.sim)
 
     def argbest(self, metric: str, dim: str = "system",
                 mode: str = "max", where=None) -> SpaceArray:
@@ -617,7 +707,8 @@ class SpaceResult:
         return self.argbest(metric, dim, mode, where=where)
 
     def feasible(self, constraints=None, *,
-                 catalog: Optional[Mapping[str, Any]] = None) -> SpaceArray:
+                 catalog: Optional[Mapping[str, Any]] = None,
+                 sim: Optional["SimConfig"] = None) -> SpaceArray:
         """First-class feasibility: a boolean :class:`SpaceArray` marking
         which (system, grid-point) cells satisfy ``constraints``
         (:class:`repro.core.selector.SelectionConstraints`).
@@ -639,6 +730,9 @@ class SpaceResult:
 
         ``catalog`` must echo the ``DesignSpace(catalog=...)`` mapping when
         a custom one was evaluated (the result only carries keys).
+        ``sim`` selects the :class:`SimConfig` the backlog-knee extraction
+        runs under (default: this result's config, falling back to the
+        fixed engine — the mode every pinned knee golden was produced in).
         """
         from repro.core import memsys
         from repro.core import selector as selector_mod
@@ -694,7 +788,8 @@ class SpaceResult:
             mask &= apply(("system",), static)
 
         if constraints.max_backlog_knee is not None:
-            mask &= self._knee_mask(keys, constraints, apply)
+            mask &= self._knee_mask(keys, constraints, apply,
+                                    sim if sim is not None else self.sim)
 
         if constraints.max_power_w is not None:
             pw = self.arrays.get("power_w")
@@ -712,7 +807,8 @@ class SpaceResult:
                           bw.values >= constraints.required_bandwidth_gbs)
         return SpaceArray(dims, coords, mask)
 
-    def _knee_mask(self, keys, constraints, apply) -> np.ndarray:
+    def _knee_mask(self, keys, constraints, apply,
+                   sim: Optional["SimConfig"] = None) -> np.ndarray:
         """Backlog-knee admissibility at the most specific mix available:
         per workload config, else per mix point, else the envelope."""
         from repro.core import flitsim
@@ -735,7 +831,7 @@ class SpaceResult:
             knees = selector_mod._default_knees()
             sub = [sk is None or knees[sk] <= budget for sk in simkeys]
             return apply(("system",), sub)
-        per = flitsim.backlog_knees(mixes=mixes, per_mix=True)
+        per = flitsim.backlog_knees(mixes=mixes, per_mix=True, sim=sim)
         sub = np.ones((len(keys), len(mixes)), dtype=bool)
         for i, sk in enumerate(simkeys):
             if sk is not None:
@@ -773,6 +869,11 @@ ANALYTIC_METRICS: Tuple[str, ...] = (
 SYSTEM_METRICS: Tuple[str, ...] = ("latency_ns", "relative_bit_cost")
 #: flit-simulated metrics (dims: [pert x] protocol [x backlog] ...)
 SIM_METRICS: Tuple[str, ...] = ("sim_efficiency", "analytic_efficiency")
+#: PHY-absolute flit-simulated metric (needs a ``phy`` axis or
+#: ``DesignSpace(phy=...)``): simulated efficiency x the PHY's raw link
+#: bandwidth -> absolute GB/s, so the simulation-corrected frontier sweeps
+#: PHY generations (32G/48G) like the closed forms do
+SIM_PHY_METRICS: Tuple[str, ...] = ("sim_bandwidth_gbs",)
 #: approach-density metrics on a PHY (dims: approach [x configs] [x mix])
 APPROACH_METRICS: Tuple[str, ...] = (
     "linear_density_gbs_mm", "areal_density_gbs_mm2", "approach_pj_per_bit")
@@ -809,7 +910,8 @@ class DesignSpace:
                  default_shoreline_mm: float = 8.0,
                  default_backlog: float = 64.0,
                  n_flits: int = 2048, n_accesses: int = 4096,
-                 n_lines: int = 512):
+                 n_lines: int = 512,
+                 sim: Optional[SimConfig] = None):
         self.axes = axes if isinstance(axes, AxisSet) else AxisSet(axes)
         self.catalog = catalog
         self.phy = phy
@@ -818,6 +920,7 @@ class DesignSpace:
         self.n_flits = int(n_flits)
         self.n_accesses = int(n_accesses)
         self.n_lines = int(n_lines)
+        self.sim = sim if sim is not None else FIXED_SIM
         mix_ax = self.axes.mix_axis()
         if mix_ax is not None and mix_ax.name == "mix":
             if OWN_MIX in mix_ax.values and \
@@ -889,6 +992,8 @@ class DesignSpace:
             if ("backlog" in names or "protocol" in names
                     or "protocol_param" in names):
                 out += list(SIM_METRICS)
+                if "phy" in names or self.phy is not None:
+                    out += list(SIM_PHY_METRICS)
         if "k" in names:
             out += list(PIPELINE_METRICS)
         if not out:
@@ -900,13 +1005,20 @@ class DesignSpace:
 
     # -- evaluation ---------------------------------------------------------
 
-    def evaluate(self, metrics: Optional[Sequence[str]] = None
-                 ) -> SpaceResult:
-        """Resolve the requested metrics over the full joint axis space."""
+    def evaluate(self, metrics: Optional[Sequence[str]] = None, *,
+                 sim: Optional[SimConfig] = None) -> SpaceResult:
+        """Resolve the requested metrics over the full joint axis space.
+
+        ``sim`` overrides the ``DesignSpace(sim=...)`` config for this
+        evaluation only — the flit-simulated metrics run fixed-horizon or
+        convergence-adaptive accordingly (analytic metrics are closed
+        forms and unaffected).
+        """
+        cfg = sim if sim is not None else self.sim
         wanted = tuple(metrics) if metrics is not None else \
             self._default_metrics()
         known = (ANALYTIC_METRICS + SYSTEM_METRICS + SIM_METRICS
-                 + APPROACH_METRICS + PIPELINE_METRICS)
+                 + SIM_PHY_METRICS + APPROACH_METRICS + PIPELINE_METRICS)
         unknown = [m for m in wanted if m not in known]
         if unknown:
             raise ValueError(f"unknown metrics {unknown}; choose from "
@@ -916,11 +1028,11 @@ class DesignSpace:
             arrays.update(self._eval_catalog(wanted))
         if any(m in wanted for m in APPROACH_METRICS):
             arrays.update(self._eval_approaches(wanted))
-        if any(m in wanted for m in SIM_METRICS):
-            arrays.update(self._eval_sim(wanted))
+        if any(m in wanted for m in SIM_METRICS + SIM_PHY_METRICS):
+            arrays.update(self._eval_sim(wanted, cfg))
         if any(m in wanted for m in PIPELINE_METRICS):
-            arrays.update(self._eval_pipelining(wanted))
-        return SpaceResult(axes=self.axes, arrays=arrays)
+            arrays.update(self._eval_pipelining(wanted, cfg))
+        return SpaceResult(axes=self.axes, arrays=arrays, sim=cfg)
 
     def _perturbations(self) -> List[Dict[str, float]]:
         cp_ax = self.axes.get("catalog_param")
@@ -1050,7 +1162,7 @@ class DesignSpace:
                              f"from {sorted(flitsim.SIMULATORS)}")
         return keys
 
-    def _eval_sim(self, wanted) -> Dict[str, SpaceArray]:
+    def _eval_sim(self, wanted, sim: SimConfig) -> Dict[str, SpaceArray]:
         from repro.core import flitsim
         keys = self._sim_protocols()
         x, y, mix_dims = self._mix_arrays()
@@ -1067,7 +1179,7 @@ class DesignSpace:
                  if pert_ax is not None else [{}])
         eff = np.asarray(flitsim.simulate_grid(
             keys, xf, yf, backlogs, perturbations=perts,
-            n_flits=self.n_flits, n_accesses=self.n_accesses))
+            n_flits=self.n_flits, n_accesses=self.n_accesses, sim=sim))
         # eff: [Q, P, B, Mf] -> named dims, dropping absent axes
         eff = eff.reshape(eff.shape[:3] + mix_shape)
         dims: List[str] = ["protocol_param", "protocol", "backlog"]
@@ -1090,6 +1202,33 @@ class DesignSpace:
         if "sim_efficiency" in wanted:
             out["sim_efficiency"] = SpaceArray(
                 tuple(dims), tuple(coords), np.asarray(eff))
+        if "sim_bandwidth_gbs" in wanted:
+            phy_ax = self.axes.get("phy")
+            if phy_ax is not None:
+                phys = list(phy_ax.values)
+            elif self.phy is not None:
+                phys = [self.phy]
+            else:
+                raise ValueError(
+                    "the 'sim_bandwidth_gbs' metric threads the PHY's raw "
+                    "link bandwidth into the simulated efficiency — add a "
+                    "'phy' axis or pass DesignSpace(phy=...)")
+            raw = np.asarray([p.raw_bandwidth_gbs for p in phys],
+                             np.float32)
+            ax_p = dims.index("protocol")
+            v = (np.expand_dims(np.asarray(eff), ax_p + 1)
+                 * raw.reshape((len(raw),)
+                               + (1,) * (np.ndim(eff) - ax_p - 1)))
+            bdims = tuple(dims[:ax_p + 1]) + ("phy",) \
+                + tuple(dims[ax_p + 1:])
+            bcoords = tuple(coords[:ax_p + 1]) \
+                + (tuple(p.name for p in phys),) \
+                + tuple(coords[ax_p + 1:])
+            if phy_ax is None:          # DesignSpace(phy=...): no phy dim
+                v = np.take(v, 0, axis=ax_p + 1)
+                bdims = bdims[:ax_p + 1] + bdims[ax_p + 2:]
+                bcoords = bcoords[:ax_p + 1] + bcoords[ax_p + 2:]
+            out["sim_bandwidth_gbs"] = SpaceArray(bdims, bcoords, v)
         if "analytic_efficiency" in wanted:
             an = np.stack([np.asarray(flitsim.ANALYTIC[k].bw_eff(xf, yf),
                                       np.float32) for k in keys])
@@ -1102,7 +1241,8 @@ class DesignSpace:
             out["analytic_efficiency"] = SpaceArray(adims, acoords, an)
         return out
 
-    def _eval_pipelining(self, wanted) -> Dict[str, SpaceArray]:
+    def _eval_pipelining(self, wanted, sim: SimConfig
+                         ) -> Dict[str, SpaceArray]:
         from repro.core import flitsim
         k_ax = self.axes.get("k")
         if k_ax is None:
@@ -1113,7 +1253,7 @@ class DesignSpace:
         ds = tuple(d_ax.values) if d_ax is not None else (64.0,)
         util = np.asarray(flitsim.sweep_pipelining(
             k_ax.values, n_lines=self.n_lines, ucie_line_ui=us,
-            device_line_ui=ds))                 # [K, U, D]
+            device_line_ui=ds, sim=sim))        # [K, U, D]
         dims: List[str] = ["k"]
         coords: List[Tuple] = [k_ax.labels]
         if u_ax is not None:
@@ -1142,7 +1282,8 @@ def joint_frontier(n_fracs: int = 21,
                    shorelines: Sequence[float] = (4.0, 8.0, 16.0),
                    catalog: Optional[Dict[str, Any]] = None,
                    n_flits: int = 2048,
-                   constraints=None) -> Dict[str, Any]:
+                   constraints=None,
+                   sim: Optional[SimConfig] = None) -> Dict[str, Any]:
     """Joint (mix x backlog x shoreline) frontier merging the flit-simulated
     efficiency grid with the analytic catalog grid.
 
@@ -1164,6 +1305,10 @@ def joint_frontier(n_fracs: int = 21,
     SelectionConstraints`) restricts BOTH frontiers to the feasible set
     via :meth:`SpaceResult.feasible` — infeasible cells never win, and
     cells with no admissible system read ``"(none)"``.
+
+    ``sim`` selects the flit-simulation config (:data:`FIXED_SIM`
+    default; pass :data:`ADAPTIVE_SIM` for the convergence-adaptive
+    early-exit engine — what the benchmarks and the explorer use).
     """
     from repro.core.selector import sim_key_for
     fracs = np.linspace(0.0, 1.0, n_fracs)
@@ -1171,7 +1316,7 @@ def joint_frontier(n_fracs: int = 21,
         [axis("read_fraction", fracs),
          axis("backlog", backlogs),
          axis("shoreline_mm", shorelines)],
-        catalog=catalog, n_flits=n_flits)
+        catalog=catalog, n_flits=n_flits, sim=sim)
     metrics = ANALYTIC_METRICS[:1] + SIM_METRICS
     if constraints is not None:
         metrics = metrics + ("power_w",)

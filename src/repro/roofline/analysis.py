@@ -299,7 +299,8 @@ def bridge_design_space(reports: Dict[str, RooflineReport],
                         n_fracs: int = 41,
                         shorelines=(2.0, 4.0, 8.0, 16.0),
                         constraints=None,
-                        objective: str = "bandwidth") -> Dict[str, Any]:
+                        objective: str = "bandwidth",
+                        sim=None) -> Dict[str, Any]:
     """Per-workload design-space frontier over the full
     ``[configs x catalog x mix-grid x shoreline]`` space in ONE batched
     evaluation — a compatibility wrapper over the axes-first
@@ -334,6 +335,11 @@ def bridge_design_space(reports: Dict[str, RooflineReport],
     mix into :func:`repro.core.flitsim.backlog_knees` (``per_mix=True``),
     so a protocol is excluded for the workloads whose own mix needs a
     deeper queue than the budget — not by the canonical-mix envelope.
+
+    ``sim`` (optional :class:`repro.core.space.SimConfig`) selects the
+    flit-simulation config the knee extraction runs under — the analytic
+    catalog metrics are closed forms and unaffected.  Default: the fixed
+    engine (what every pinned knee golden was produced in).
     """
     from repro.core import TrafficMix, mix_grid
     from repro.core import space as space_mod
@@ -360,7 +366,7 @@ def bridge_design_space(reports: Dict[str, RooflineReport],
         space_mod.axis("mix",
                        [space_mod.OWN_MIX] + list(zip(gx, gy))),
         space_mod.axis("shoreline_mm", sl),
-    ))
+    ), sim=sim)
     res = space.evaluate(metrics=space_mod.ANALYTIC_METRICS
                          + space_mod.SYSTEM_METRICS)
     # first-class feasibility: one boolean mask for the whole space; the

@@ -1,0 +1,353 @@
+"""Convergence-adaptive flit-simulation engine (SimConfig) tests.
+
+Contracts:
+
+  * ``mode="fixed"`` (the default) is the exact pre-config engine — the
+    pinned seed goldens in test_flitsim_sweep.py keep covering it, and the
+    explicit ``sim=FIXED_SIM`` spelling is bit-identical to the default.
+  * ``mode="adaptive"`` tracks the fixed engine within 1e-3 across mixes,
+    backlogs, perturbations and all five protocols (property-based when
+    hypothesis is available), while running fewer sequential cycles.
+  * switching SimConfig never invalidates other configs' warm cache
+    entries (the config participates in the shared cache key).
+  * the PHY-absolute ``sim_bandwidth_gbs`` metric threads UCIePhy raw
+    bandwidth into the simulated efficiency (phy axis or phy=).
+  * the ``write_buffer_lines`` bugfix field: default preserves numerics
+    bit-for-bit, and the write path is now independently perturbable.
+"""
+import numpy as np
+import pytest
+
+from repro.core import flitsim
+from repro.core import space as space_mod
+from repro.core.flitsim import (
+    ADAPTIVE_SIM, FIXED_SIM, SYMMETRIC_PARAMS, SimConfig,
+    SymmetricFlitParams, simulate_symmetric, sweep, sweep_pipelining,
+)
+from repro.core.space import DesignSpace, axis
+from repro.core.ucie import UCIE_A_48G_45U, UCIE_S_32G
+
+DENSE_BACKLOGS = (1.0, 2.0, 8.0, 64.0)
+
+
+def _dense_mixes(n=13):
+    fr = np.linspace(0.0, 1.0, n)
+    return list(zip((100.0 * fr).tolist(), (100.0 - 100.0 * fr).tolist()))
+
+
+class TestSimConfig:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="mode"):
+            SimConfig(mode="turbo")
+        with pytest.raises(ValueError, match="chunk"):
+            SimConfig(chunk=1)
+        with pytest.raises(ValueError, match="tol"):
+            SimConfig(tol=0.0)
+        with pytest.raises(ValueError, match="unroll"):
+            SimConfig(unroll=0)
+        with pytest.raises(ValueError, match="max_cycles"):
+            SimConfig(max_cycles=0)
+
+    def test_cache_keys_distinguish_configs(self):
+        assert FIXED_SIM.key() == ("fixed",)
+        assert ADAPTIVE_SIM.key() != FIXED_SIM.key()
+        assert SimConfig(mode="adaptive", tol=1e-4).key() != \
+            ADAPTIVE_SIM.key()
+
+    def test_horizon_override(self):
+        assert FIXED_SIM.horizon(2048) == 2048
+        assert SimConfig(max_cycles=512).horizon(2048) == 512
+
+    def test_divisor_chunk_lands_on_horizon(self):
+        for horizon in (2048, 4096, 512, 1000):
+            c = flitsim._divisor_chunk(horizon, 128)
+            assert horizon % c == 0
+            assert horizon // c >= 8
+
+    def test_divisor_chunk_prefers_warm_window_alignment(self):
+        # a chunk count divisible by 4 makes the reconstructed warm
+        # window start exactly at horizon // 4
+        for horizon in (2048, 4096, 512, 1024, 1100):
+            c = flitsim._divisor_chunk(horizon, 128)
+            assert (horizon // c) % 4 == 0, (horizon, c)
+
+    def test_prime_horizon_falls_back_to_fixed(self):
+        # 1021 is prime: no usable chunk divisor — adaptive must degrade
+        # to the fixed engine at that horizon, not to per-cycle chunking
+        assert flitsim._divisor_chunk(1021, 128) < 8
+        cfg = SimConfig(mode="adaptive", max_cycles=1021)
+        a = sweep(protocols=["chi"], mixes=[(1, 1)], sim=cfg)
+        f = sweep(protocols=["chi"], mixes=[(1, 1)], n_flits=1021)
+        np.testing.assert_array_equal(np.asarray(a.efficiency),
+                                      np.asarray(f.efficiency))
+
+
+class TestFixedModeUnchanged:
+    def test_default_is_fixed_and_bit_identical(self):
+        base = sweep(mixes=[(2, 1), (1, 1)])
+        explicit = sweep(mixes=[(2, 1), (1, 1)], sim=FIXED_SIM)
+        np.testing.assert_array_equal(np.asarray(base.efficiency),
+                                      np.asarray(explicit.efficiency))
+
+    def test_fixed_warm_after_adaptive_run(self):
+        """Alternating configs must not invalidate each other's entries."""
+        flitsim.clear_compile_cache()
+        mixes = [(3, 2), (1, 1)]
+        sweep(mixes=mixes)                      # fixed: 2 compiles
+        sweep(mixes=mixes, sim=ADAPTIVE_SIM)    # adaptive: 2 more
+        after_both = flitsim.compile_cache_stats()
+        assert after_both.misses == 4
+        sweep(mixes=mixes)                      # fixed again: warm
+        sweep(mixes=mixes, sim=ADAPTIVE_SIM)    # adaptive again: warm
+        final = flitsim.compile_cache_stats()
+        assert final.misses == after_both.misses, \
+            "switching SimConfig invalidated a warm cache entry"
+        assert final.hits > after_both.hits
+
+
+class TestAdaptiveMatchesFixed:
+    def test_canonical_sweep(self):
+        f = np.asarray(sweep().efficiency)
+        a = np.asarray(sweep(sim=ADAPTIVE_SIM).efficiency)
+        assert float(np.max(np.abs(f - a))) <= 1e-3
+
+    def test_dense_mix_backlog_grid(self):
+        mixes = _dense_mixes()
+        f = np.asarray(sweep(mixes=mixes,
+                             backlogs=list(DENSE_BACKLOGS)).efficiency)
+        a = np.asarray(sweep(mixes=mixes, backlogs=list(DENSE_BACKLOGS),
+                             sim=ADAPTIVE_SIM).efficiency)
+        assert float(np.max(np.abs(f - a))) <= 1e-3
+
+    def test_adaptive_runs_fewer_cycles(self):
+        sweep(sim=ADAPTIVE_SIM)
+        info = flitsim.last_run_info()
+        assert set(info) >= {"flitsim.symmetric", "flitsim.asymmetric"}
+        for fam, v in info.items():
+            assert v["cycles_run"] < v["horizon"], (fam, v)
+            assert sum(v["converged_cycles"].values()) == v["cells"]
+
+    def test_pipelining_adaptive(self):
+        ks = [1, 2, 3, 4, 6]
+        f = np.asarray(sweep_pipelining(ks))
+        a = np.asarray(sweep_pipelining(ks, sim=ADAPTIVE_SIM))
+        assert float(np.max(np.abs(f - a))) <= 1e-3
+        # the k=4 saturation claim survives the adaptive engine
+        assert a[3] == pytest.approx(1.0, abs=2e-3)
+
+    def test_joint_pipelining_adaptive(self):
+        f = np.asarray(sweep_pipelining((1, 2, 4), ucie_line_ui=(8.0, 16.0),
+                                        device_line_ui=(32.0, 64.0)))
+        a = np.asarray(sweep_pipelining((1, 2, 4), ucie_line_ui=(8.0, 16.0),
+                                        device_line_ui=(32.0, 64.0),
+                                        sim=ADAPTIVE_SIM))
+        assert float(np.max(np.abs(f - a))) <= 1e-3
+
+    def test_straggler_escalation_on_large_grid(self):
+        """A grid above the escalation floor may strand stragglers; they
+        must be re-simulated exactly (match the fixed engine ~exactly,
+        not just within tol)."""
+        mixes = _dense_mixes(41)
+        backlogs = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0]
+        f = np.asarray(sweep(protocols=tuple(SYMMETRIC_PARAMS),
+                             mixes=mixes, backlogs=backlogs).efficiency)
+        a = np.asarray(sweep(protocols=tuple(SYMMETRIC_PARAMS),
+                             mixes=mixes, backlogs=backlogs,
+                             sim=ADAPTIVE_SIM).efficiency)
+        info = flitsim.last_run_info()["flitsim.symmetric"]
+        assert info["cells"] == 3 * len(backlogs) * len(mixes)
+        assert float(np.max(np.abs(f - a))) <= 1e-3
+        if info["stragglers"]:
+            # straggler cells ran the full fixed horizon — their rows in
+            # the histogram count under "horizon"
+            assert info["converged_cycles"].get("horizon", 0) >= \
+                info["stragglers"]
+
+    def test_perturbations_adaptive(self):
+        perts = [{}, {"credit_lines": 0.5}, {"g_slots": 0.8}]
+        f = flitsim.sweep_perturbed(perts, protocols=("cxl_opt", "chi"),
+                                    mixes=[(2, 1), (1, 1)])
+        a = flitsim.sweep_perturbed(perts, protocols=("cxl_opt", "chi"),
+                                    mixes=[(2, 1), (1, 1)],
+                                    sim=ADAPTIVE_SIM)
+        dev = np.max(np.abs(f["sim_efficiency"].values
+                            - a["sim_efficiency"].values))
+        assert float(dev) <= 1e-3
+
+
+@pytest.mark.parametrize("protocol", sorted(flitsim.SIMULATORS))
+def test_adaptive_property_per_protocol(protocol):
+    """Deterministic per-protocol spot check (the hypothesis sweep below
+    covers random combinations)."""
+    mixes = [(1, 0), (5, 3), (1, 1), (2, 7), (0, 1)]
+    f = np.asarray(sweep(protocols=[protocol], mixes=mixes,
+                         backlogs=[2.0, 64.0]).efficiency)
+    a = np.asarray(sweep(protocols=[protocol], mixes=mixes,
+                         backlogs=[2.0, 64.0],
+                         sim=ADAPTIVE_SIM).efficiency)
+    assert float(np.max(np.abs(f - a))) <= 1e-3, protocol
+
+
+class TestAdaptiveHypothesis:
+    """Property-based fixed-vs-adaptive agreement (needs hypothesis)."""
+
+    @classmethod
+    def setup_class(cls):
+        pytest.importorskip(
+            "hypothesis",
+            reason="property tests need hypothesis; the deterministic "
+                   "grids above cover the bare environment")
+
+    def test_random_mixes_backlogs_perturbations(self):
+        from hypothesis import given, settings, strategies as st
+
+        mix = st.tuples(st.integers(0, 8), st.integers(0, 8)).filter(
+            lambda t: t[0] + t[1] > 0)
+        backlog = st.sampled_from([1.0, 2.0, 4.0, 16.0, 64.0, 128.0])
+        pert = st.sampled_from([{}, {"credit_lines": 0.5},
+                                {"write_buffer_lines": 0.5},
+                                {"g_slots": 0.8}, {"read_lanes": 0.8},
+                                {"total_lanes": 1.2}])
+
+        @settings(max_examples=10, deadline=None)
+        @given(mix=mix, bl=backlog, pert=pert)
+        def inner(mix, bl, pert):
+            perts = [{}, pert] if pert else [{}]
+            kw = dict(mixes=[mix], backlogs=[bl])
+            f = flitsim.sweep_perturbed(perts, **kw)
+            a = flitsim.sweep_perturbed(perts, sim=ADAPTIVE_SIM, **kw)
+            dev = np.max(np.abs(f["sim_efficiency"].values
+                                - a["sim_efficiency"].values))
+            assert float(dev) <= 1e-3, (mix, bl, pert)
+
+        inner()
+
+
+class TestDesignSpaceSimThreading:
+    def test_space_and_evaluate_override(self):
+        axes = [axis("mix", [(2, 1), (1, 1)]), axis("backlog", [4.0, 64.0])]
+        fixed = DesignSpace(axes).evaluate(metrics=("sim_efficiency",))
+        adapt = DesignSpace(axes, sim=ADAPTIVE_SIM).evaluate(
+            metrics=("sim_efficiency",))
+        override = DesignSpace(axes).evaluate(
+            metrics=("sim_efficiency",), sim=ADAPTIVE_SIM)
+        assert fixed.sim.mode == "fixed"
+        assert adapt.sim.mode == "adaptive"
+        dev = np.max(np.abs(fixed["sim_efficiency"].values
+                            - adapt["sim_efficiency"].values))
+        assert float(dev) <= 1e-3
+        np.testing.assert_array_equal(adapt["sim_efficiency"].values,
+                                      override["sim_efficiency"].values)
+
+    def test_bridge_accepts_sim(self):
+        from repro.roofline.analysis import (
+            RooflineReport, bridge_design_space,
+        )
+        rep = RooflineReport(
+            arch="w", shape="s", mesh="m", chips=16,
+            hlo_flops_per_chip=1e12, hlo_bytes_per_chip=1e10,
+            collective_bytes_per_chip=1e9, compute_s=1e-3, memory_s=1e-2,
+            collective_s=1e-2, dominant="memory", model_flops=1e13,
+            useful_flops_ratio=0.5, read_bytes_per_chip=7e9,
+            write_bytes_per_chip=3e9)
+        base = bridge_design_space({"w": rep}, n_fracs=5)
+        adap = bridge_design_space({"w": rep}, n_fracs=5,
+                                   sim=ADAPTIVE_SIM)
+        # analytic closed forms are sim-independent -> identical report
+        assert base["workloads"]["w"]["best"] == \
+            adap["workloads"]["w"]["best"]
+
+    def test_joint_frontier_accepts_sim(self):
+        f = space_mod.joint_frontier(n_fracs=5, backlogs=(2.0, 64.0),
+                                     shorelines=(8.0,), n_flits=1024)
+        a = space_mod.joint_frontier(n_fracs=5, backlogs=(2.0, 64.0),
+                                     shorelines=(8.0,), n_flits=1024,
+                                     sim=SimConfig(mode="adaptive",
+                                                   max_cycles=1024))
+        assert f["keys"] == a["keys"]
+
+
+class TestSimPhyMetric:
+    def test_values_and_dims(self):
+        phys = [UCIE_S_32G, UCIE_A_48G_45U]
+        res = DesignSpace([
+            axis("phy", phys),
+            axis("read_fraction", [0.0, 0.5, 1.0]),
+            axis("backlog", [64.0]),
+        ]).evaluate(metrics=("sim_efficiency", "sim_bandwidth_gbs"))
+        eff = res["sim_efficiency"]
+        bw = res["sim_bandwidth_gbs"]
+        assert bw.dims == ("protocol", "phy", "backlog", "read_fraction")
+        assert bw.coord("phy") == tuple(p.name for p in phys)
+        for i, p in enumerate(phys):
+            np.testing.assert_allclose(
+                bw.values[:, i], eff.values * p.raw_bandwidth_gbs,
+                rtol=1e-6)
+
+    def test_phy_kwarg_drops_dim(self):
+        res = DesignSpace([axis("read_fraction", [0.5]),
+                           axis("backlog", [64.0])],
+                          phy=UCIE_S_32G).evaluate(
+            metrics=("sim_efficiency", "sim_bandwidth_gbs"))
+        assert "phy" not in res["sim_bandwidth_gbs"].dims
+
+    def test_requires_phy(self):
+        with pytest.raises(ValueError, match="phy"):
+            DesignSpace([axis("read_fraction", [0.5])]).evaluate(
+                metrics=("sim_bandwidth_gbs",))
+
+    def test_default_metrics_include_sim_phy(self):
+        space = DesignSpace([axis("phy", [UCIE_S_32G]),
+                             axis("read_fraction", [0.5]),
+                             axis("backlog", [64.0])])
+        assert "sim_bandwidth_gbs" in space._default_metrics()
+
+    def test_48g_scales_simulated_bandwidth(self):
+        res = DesignSpace([
+            axis("phy", [UCIE_S_32G, UCIE_A_48G_45U]),
+            axis("read_fraction", [0.7]),
+            axis("backlog", [64.0]),
+        ]).evaluate(metrics=("sim_bandwidth_gbs",))
+        bw = res["sim_bandwidth_gbs"]
+        g32 = bw.sel(phy=UCIE_S_32G.name).values
+        g48 = bw.sel(phy=UCIE_A_48G_45U.name).values
+        # 48G advanced package carries more absolute GB/s at identical
+        # simulated efficiency
+        assert (g48 > g32).all()
+
+
+class TestWriteBufferLines:
+    def test_default_aliases_credit_lines(self):
+        p = SymmetricFlitParams.cxl_opt()
+        assert float(p.write_buffer_lines) == float(p.credit_lines)
+        deep = SymmetricFlitParams.cxl_opt()
+        import dataclasses
+        custom = dataclasses.replace(deep, credit_lines=4.0,
+                                     write_buffer_lines=None)
+        assert float(custom.write_buffer_lines) == 4.0
+
+    def test_default_numerics_preserved(self):
+        """The split field must not change the engine's outputs — the
+        pinned seed goldens in test_flitsim_sweep.py double-cover this."""
+        eff = simulate_symmetric(SymmetricFlitParams.cxl_opt(), 2, 1)
+        assert eff == pytest.approx(0.68565327, abs=1e-6)
+
+    def test_field_is_perturbable(self):
+        assert "write_buffer_lines" in flitsim.PERTURBABLE_FIELDS
+        res = flitsim.sweep_perturbed(
+            [{}, {"write_buffer_lines": 0.05}], protocols=("cxl_opt",),
+            mixes=[(0, 1), (1, 0)], backlogs=[64.0])
+        eff = res["sim_efficiency"].values      # [pert, proto, bl, mix]
+        # squeezing the write buffer throttles the write-heavy mix...
+        assert eff[1, 0, 0, 0] < eff[0, 0, 0, 0] - 0.01
+        # ...and leaves the pure-read mix untouched
+        assert eff[1, 0, 0, 1] == pytest.approx(eff[0, 0, 0, 1], abs=1e-6)
+
+    def test_credit_perturbation_no_longer_moves_write_path(self):
+        """Pre-fix, credit_lines doubled as the write-buffer bound; now a
+        pure-write mix is insensitive to it."""
+        res = flitsim.sweep_perturbed(
+            [{}, {"credit_lines": 0.05}], protocols=("cxl_opt",),
+            mixes=[(0, 1)], backlogs=[64.0])
+        eff = res["sim_efficiency"].values
+        assert eff[1, 0, 0, 0] == pytest.approx(eff[0, 0, 0, 0], abs=1e-6)

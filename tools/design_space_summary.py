@@ -58,6 +58,20 @@ def summarize(ds: dict) -> dict:
                 phy: [r["best"] for r in regs]
                 for phy, regs in sorted(pf["regimes_by_phy"].items())},
         }
+    spf = ds.get("sim_phy_frontier")
+    if spf is not None:
+        # winner labels only — adaptive convergence cycles and absolute
+        # GB/s are floats/timing-ish and excluded by design
+        out["sim_phy_frontier"] = {
+            "phys": spf["phys"],
+            "best_protocol_by_phy": spf["best_protocol_by_phy"],
+            "shallow_queue_disagrees": spf["shallow_queue_disagrees"],
+            "regime_winners_by_phy_backlog": {
+                phy: {bl: [r["best"] for r in regs]
+                      for bl, regs in sorted(by_bl.items())}
+                for phy, by_bl in sorted(
+                    spf["regimes_by_phy_backlog"].items())},
+        }
     return out
 
 
