@@ -17,11 +17,12 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import time_us
 from repro.core import flitsim, mix_grid
 from repro.core.flitsim import (
-    ADAPTIVE_SIM, ANALYTIC, SIMULATORS, SYMMETRIC_PARAMS, sweep,
-    sweep_perturbed, sweep_pipelining,
+    ADAPTIVE_SIM, ANALYTIC, PALLAS_SIM, SIMULATORS, SYMMETRIC_PARAMS,
+    simulate_grid, sweep, sweep_perturbed, sweep_pipelining,
 )
 
 
@@ -48,7 +49,11 @@ def run(rows: list):
             a = float(ANALYTIC[key].bw_eff(x, y))
             s = float(res.efficiency[i, j])
             worst = max(worst, abs(a - s) / a)
-        rows.append((f"flitsim/{key}", 0.0,
+        # scalar-call steady-state cost; auto-scaled so the sub-resolution
+        # per-point dispatch still yields a real fractional-us figure
+        us_scalar_pt = time_us(SIMULATORS[key], 2.0, 1.0,
+                               warmup=1, iters=5, min_total_us=10_000.0)
+        rows.append((f"flitsim/{key}", us_scalar_pt,
                      f"worst_err_vs_analytic={worst:.4%}"))
     rows.append(("flitsim/sweep_compiles", 0.0,
                  f"families_compiled={stats.misses};cache_hits={stats.hits}"))
@@ -96,6 +101,106 @@ def run(rows: list):
         rows.append((f"flitsim/convergence_hist/{fam.split('.')[1]}", 0.0,
                      f"cells={v['cells']};stragglers={v['stragglers']};"
                      f"cycles_to_convergence={hist}"))
+
+    # -- fused-kernel engine (SimConfig engine="pallas") on the same grid ---
+    # interpret-mode on CPU (the kernel bodies trace to XLA); the row pins
+    # numerical agreement and IDENTICAL design-space winners vs the fixed
+    # engine, plus the per-launch telemetry the TPU path reports
+    eff_pallas = np.asarray(sweep(mixes=mixes, sim=PALLAS_SIM).efficiency)
+    max_dev_p = float(np.max(np.abs(eff_fixed - eff_pallas)))
+    assert max_dev_p <= 1e-3, (
+        f"pallas engine deviates {max_dev_p:.2e} > 1e-3 from the fixed "
+        f"engine on the {n_points}-pt sweep")
+    assert (eff_fixed.argmax(axis=0) == eff_pallas.argmax(axis=0)).all(), (
+        "pallas engine flips a per-mix protocol winner vs the fixed engine")
+    us_pallas = time_us(
+        lambda: np.asarray(sweep(mixes=mixes, sim=PALLAS_SIM).efficiency),
+        warmup=1, iters=5)
+    rows.append((f"flitsim/sweep_pallas_{n_points}pt", us_pallas,
+                 f"fixed_us={us_batched:.0f};"
+                 f"adaptive_xla_us={us_adapt:.0f};"
+                 f"max_dev_vs_fixed={max_dev_p:.1e};winners=identical"))
+    for fam, v in sorted(flitsim.last_run_info().items()):
+        rows.append((f"flitsim/pallas_{fam.split('.')[1]}", 0.0,
+                     f"engine={v['engine']};launches={v['launches']};"
+                     f"cycles_run={v['cycles_run']};"
+                     f"cycles_per_sec_per_cell="
+                     f"{v.get('cycles_per_sec_per_cell', 0.0):.0f}"))
+
+    # -- period-exact asymmetric cut: dense perturbation grid ---------------
+    # [31 lane-count scales x 2 asym protocols x 41 mixes]; every mix has a
+    # small credit denominator, so the detector closes the warm window at
+    # PERIOD_OBS steps instead of the 4096-access horizon — this is where
+    # the adaptive depth cut becomes a wall-clock cut
+    gx41, gy41 = mix_grid(41)
+    asym_keys = ("lpddr6_asym", "hbm_asym")
+    perts_dense = [{}] + [{"total_lanes": round(0.6 + 0.03 * q, 4)}
+                          for q in range(30)]
+    dense_cells = len(perts_dense) * len(asym_keys) * 41
+
+    def _dense(sim=None):
+        return np.asarray(simulate_grid(asym_keys, gx41, gy41, [64.0],
+                                        perturbations=perts_dense, sim=sim))
+
+    eff_fixed_d, eff_pallas_d = _dense(), _dense(PALLAS_SIM)
+    max_dev_d = float(np.max(np.abs(eff_fixed_d - eff_pallas_d)))
+    assert max_dev_d <= 1e-3, (
+        f"period-exact engine deviates {max_dev_d:.2e} > 1e-3 on the "
+        f"dense asymmetric grid")
+    assert (eff_fixed_d.argmax(axis=1)
+            == eff_pallas_d.argmax(axis=1)).all(), (
+        "period-exact engine flips a protocol winner on the dense grid")
+    us_fixed_d = time_us(_dense, warmup=1, iters=3)
+    us_pallas_d = time_us(lambda: _dense(PALLAS_SIM), warmup=1, iters=3)
+    speedup_d = us_fixed_d / us_pallas_d
+    if not common.SMOKE:
+        assert speedup_d >= 2.5, (
+            f"period-exact asymmetric cut only x{speedup_d:.2f} vs fixed "
+            f"XLA on the {dense_cells}-cell grid (expected >= x2.5)")
+    vi = flitsim.last_run_info()["flitsim.asymmetric"]
+    rows.append((f"flitsim/pallas_dense_asym_{dense_cells}pt", us_pallas_d,
+                 f"fixed_us={us_fixed_d:.0f};wall_speedup=x{speedup_d:.2f};"
+                 f"max_dev_vs_fixed={max_dev_d:.1e};"
+                 f"cycles_run={vi['cycles_run']}/{vi['horizon']};"
+                 f"stragglers={vi['stragglers']};"
+                 f"n_periods={len(vi.get('periods', {}))}"))
+
+    # -- million-cell asymmetric grid: cycles/sec/cell per engine -----------
+    # the fixed engine is rate-measured at a reduced 256-access horizon
+    # (full 4096 x 1e6 cells is minutes of CPU); adaptive engines run the
+    # real 4096-access problem and report their own retired-cycle rate
+    if not common.SMOKE:
+        m_mixes = 41
+        m_q = 1_000_000 // (len(asym_keys) * m_mixes) + 1   # -> 1,000,072
+        perts_m = [{}] + [{"total_lanes": round(0.5 + 1.0 * q / m_q, 6)}
+                          for q in range(1, m_q)]
+        m_cells = m_q * len(asym_keys) * m_mixes
+
+        def _million(sim=None, n_accesses=4096):
+            return np.asarray(simulate_grid(
+                asym_keys, gx41, gy41, [64.0], perturbations=perts_m,
+                n_accesses=n_accesses, sim=sim))
+
+        us_fixed_m = time_us(lambda: _million(n_accesses=256),
+                             warmup=1, iters=1)
+        rate_fixed = 256 / (us_fixed_m * 1e-6)
+        parts = [f"cells={m_cells}",
+                 f"xla_fixed_256acc={rate_fixed:.0f}c/s/cell"]
+        eng_eff = {}
+        for label, s in (("xla_adaptive", ADAPTIVE_SIM),
+                         ("pallas", PALLAS_SIM)):
+            us_m = time_us(lambda s=s: _million(sim=s), warmup=1, iters=1)
+            vm = flitsim.last_run_info()["flitsim.asymmetric"]
+            eng_eff[label] = _million(sim=s)
+            parts.append(
+                f"{label}={vm['cycles_run'] / (us_m * 1e-6):.0f}c/s/cell"
+                f"(launches={vm['launches']},stragglers={vm['stragglers']})")
+            last_us = us_m
+        dev_m = float(np.max(np.abs(eng_eff["xla_adaptive"]
+                                    - eng_eff["pallas"])))
+        parts.append(f"xla_vs_pallas_dev={dev_m:.1e}")
+        rows.append((f"flitsim/million_cell_asym_{m_cells}", last_us,
+                     ";".join(parts)))
 
     # -- backlog-sensitivity grid (symmetric family only) -------------------
     bl = sweep(protocols=tuple(SYMMETRIC_PARAMS), mixes=[(2, 1)],

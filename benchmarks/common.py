@@ -16,7 +16,7 @@ SMOKE = False
 
 
 def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 10,
-            reduce: str = "median") -> float:
+            reduce: str = "median", min_total_us: float = 0.0) -> float:
     """Time ``fn(*args)`` in microseconds.
 
     ``warmup`` un-timed calls absorb trace+compile time so the reported
@@ -25,17 +25,33 @@ def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 10,
     ``reduce`` picks the statistic: "median" (default, robust to scheduler
     noise), "mean", or "min".  Under :data:`SMOKE`, warmup/iters clamp
     to 1.
+
+    ``min_total_us`` auto-scales the measurement for sub-timer-resolution
+    calls: when a probe call suggests the ``iters`` samples would span
+    less than this total, each sample times an inner batch of calls and
+    reports the per-call mean, so microsecond-scale kernels produce real
+    fractional-``us`` rows instead of quantizing to 0.  Ignored under
+    :data:`SMOKE` (timings there are indicative only).
     """
     if SMOKE:
         warmup, iters = min(warmup, 1), 1
+    iters = max(iters, 1)
     for _ in range(max(warmup, 0)):
         jax.block_until_ready(fn(*args))
-    samples: List[float] = []
-    for _ in range(max(iters, 1)):
+    inner = 1
+    if min_total_us > 0.0 and not SMOKE:
         t0 = time.perf_counter()
-        out = fn(*args)
+        jax.block_until_ready(fn(*args))
+        probe_us = max((time.perf_counter() - t0) * 1e6, 1e-3)
+        if probe_us * iters < min_total_us:
+            inner = int(min_total_us / (probe_us * iters)) + 1
+    samples: List[float] = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = fn(*args)
         jax.block_until_ready(out)
-        samples.append((time.perf_counter() - t0) * 1e6)
+        samples.append((time.perf_counter() - t0) * 1e6 / inner)
     try:
         return {"median": statistics.median, "mean": statistics.fmean,
                 "min": min}[reduce](samples)

@@ -26,11 +26,29 @@ returning a named-axis :class:`SpaceResult` with ``sel()`` /
     res.frontier("bandwidth_gbs", where=mask)   # feasible-set winners
 
 Flit-simulated metrics run under a :class:`repro.core.space.SimConfig`
-(``sim=`` on ``DesignSpace`` and every legacy wrapper): :data:`FIXED_SIM`
-(default, bit-identical fixed horizon) or :data:`ADAPTIVE_SIM`
-(convergence-adaptive chunked cores with batched early exit — the
-benchmarks/explorer default; <= tol-scale deviation, several-x fewer
-sequential cycles).
+(``sim=`` on ``DesignSpace`` and every legacy wrapper).  Migration table
+— pick the row matching what you need; every row shares the same compile
+cache and the same report numerics:
+
+    ==================  =========================================  =======
+    config              engine / guarantee                         use for
+    ==================  =========================================  =======
+    ``FIXED_SIM``       full-horizon XLA scan; bit-identical to    goldens,
+    (default)           the seed goldens                           CI gates
+    ``ADAPTIVE_SIM``    chunked XLA cores, batched early exit +    CPU
+                        period-exact asymmetric detector;          sweeps
+                        <= ``tol`` deviation, several-x fewer
+                        sequential cycles
+    ``PALLAS_SIM``      same adaptive schedule through the fused   TPU,
+    ``SimConfig(        :mod:`repro.kernels.flit_sim` kernels —    dense
+    engine="pallas")``  ONE launch per chunk, state on-chip;       grids
+                        interpret-mode (traced to XLA) off-TPU
+    ==================  =========================================  =======
+
+``flitsim.last_run_info()`` reports per-family telemetry for the last
+adaptive run: ``engine``, ``launches``, ``cycles_run``, ``elapsed_s``,
+``cycles_per_sec_per_cell``, and the detected-period histogram when the
+asymmetric periodic detector closed the run.
 
 Legacy front-ends (``flitsim.sweep*``, ``memsys.catalog_grid`` /
 ``approach_grid``, ``selector.rank_grid``,
@@ -56,8 +74,8 @@ from repro.core.latency import (
 )
 from repro.core.space import (
     ADAPTIVE_SIM, Axis, AxisSet, DesignSpace, FIXED_SIM, OWN_MIX,
-    SimConfig, SpaceArray, SpaceResult, axis, cache_stats, clear_cache,
-    joint_frontier, regimes,
+    PALLAS_SIM, SimConfig, SpaceArray, SpaceResult, axis, cache_stats,
+    clear_cache, joint_frontier, regimes,
 )
 from repro.core.memsys import (
     CatalogGrid, MemorySystem, catalog_grid, grid_cache_stats,

@@ -82,6 +82,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
@@ -90,7 +91,8 @@ import numpy as np
 
 from repro.core import space as space_mod
 from repro.core.space import (
-    ADAPTIVE_SIM, FIXED_SIM, CacheStats, SimConfig, cached_program,
+    ADAPTIVE_SIM, FIXED_SIM, PALLAS_SIM, CacheStats, SimConfig,
+    cached_program,
 )
 from repro.core.protocols.chi_ucie import CHIOnUCIe
 from repro.core.protocols.cxl_mem import CXLMemOnUCIe
@@ -825,9 +827,21 @@ def last_run_info() -> Dict[str, Dict[str, Any]]:
     sequential depth — the horizon whenever a straggler-escalation pass
     ran), ``horizon`` / ``chunk`` / ``stragglers`` / ``cells``, plus a
     ``converged_cycles`` histogram ({cycles: cell count}; stragglers and
-    horizon-exits count under ``"horizon"``).  Fixed-mode runs do not
-    update it.  The raw arrays are kept lazily on device so the hot path
-    pays no host sync; this accessor materializes them."""
+    horizon-exits count under ``"horizon"``).
+
+    Engine telemetry (PR 6): ``engine`` (``"xla"`` / ``"pallas"``),
+    ``launches`` (device programs the runner dispatched — the pallas host
+    loop issues one per chunk plus one per escalation pass; the XLA
+    ``while_loop`` cores are a single launch), ``elapsed_s`` (runner wall
+    time, device work blocked to completion), and
+    ``cycles_per_sec_per_cell`` (executed main-loop cycles per second per
+    grid cell — the throughput number the BENCH million-cell row reports).
+    The asymmetric periodic detector additionally reports a ``periods``
+    histogram ({detected credit period: cell count}).
+
+    Fixed-mode runs do not update it.  The raw arrays are kept lazily on
+    device so the hot path pays no host sync; this accessor materializes
+    them."""
     out: Dict[str, Dict[str, Any]] = {}
     for fam, info in _LAST_RUN_INFO.items():
         d = {k: v for k, v in info.items() if not k.startswith("_")}
@@ -844,16 +858,25 @@ def last_run_info() -> Dict[str, Dict[str, Any]]:
         d["converged_cycles"] = {
             ("horizon" if v < 0 else str(int(v) * chunk)): int(c)
             for v, c in zip(vals, counts)}
+        if d.get("elapsed_s"):
+            d["cycles_per_sec_per_cell"] = d["cycles_run"] / d["elapsed_s"]
+        if info.get("_periods") is not None:
+            p = np.asarray(info["_periods"]).reshape(-1)
+            pv, pc = np.unique(p[p > 0], return_counts=True)
+            d["periods"] = {int(v): int(c) for v, c in zip(pv, pc)}
         out[fam] = d
     return out
 
 
 def _record_adaptive(family: str, horizon: int, chunk: int, k_exit,
-                     conv_at, stragglers: int) -> None:
+                     conv_at, stragglers: int, *, engine: str = "xla",
+                     launches: int = 1, elapsed_s: Optional[float] = None,
+                     periods=None) -> None:
     _LAST_RUN_INFO[family] = {
         "mode": "adaptive", "horizon": int(horizon), "chunk": int(chunk),
-        "stragglers": int(stragglers),
-        "_k_exit": k_exit, "_conv_at": conv_at,
+        "stragglers": int(stragglers), "engine": engine,
+        "launches": int(launches), "elapsed_s": elapsed_s,
+        "_k_exit": k_exit, "_conv_at": conv_at, "_periods": periods,
     }
 
 
@@ -899,6 +922,252 @@ def _pad_pow2(idx: np.ndarray) -> np.ndarray:
                                           axis=0)])
 
 
+# -- fused-kernel engine (SimConfig engine="pallas") + periodic detector ------
+#
+# The row-stacked operand layouts and the per-chunk compute contracts live
+# in repro.kernels.flit_sim (ref.py documents them; kernel.py is the
+# Pallas transcription sharing the same compute bodies).  The kernels
+# package imports this module for the step functions, so everything below
+# imports it lazily.
+#
+# The asymmetric family additionally gets a PERIOD-EXACT detector (both
+# engines): the credit accumulator advances by the rational read fraction
+# x/(x+y) each access, so the credit state — which alone determines every
+# future lane increment — is exactly periodic with denominator
+# q = (x+y)/gcd(x,y).  The runner observes ~2 maximal periods
+# (ref.PERIOD_OBS sequential steps), detects each cell's period from the
+# credit phase, extrapolates the per-lane busy times exactly to the full
+# horizon, and escalates the (rare) undetected cells through the usual
+# exact full-horizon path — closing the asymmetric warm window at ~128
+# steps instead of the chunked core's ~1280/4096.
+
+
+def _sym_param_rows(pstack, x, y, backlogs):
+    """Row-stack a symmetric grid into the kernels' [SYM_ROWS, P*B*M]
+    layout (cell order matches ``rep.reshape(P, B, M)``)."""
+    from repro.kernels.flit_sim import ref as fs_ref
+    P, B, M = pstack.g_slots.shape[0], backlogs.shape[0], x.shape[0]
+    rows = [jnp.repeat(_f32(getattr(pstack, f.name)), B * M)
+            for f in dataclasses.fields(SymmetricFlitParams)]
+    rows.append(jnp.tile(_f32(x), P * B))
+    rows.append(jnp.tile(_f32(y), P * B))
+    rows.append(jnp.tile(jnp.repeat(_f32(backlogs), M), P))
+    pad = jnp.zeros_like(rows[0])
+    return jnp.stack(rows + [pad] * (fs_ref.SYM_ROWS - len(rows)))
+
+
+def _asym_param_rows(pstack, x, y):
+    """Row-stack an asymmetric grid into [ASYM_ROWS, P*M]."""
+    from repro.kernels.flit_sim import ref as fs_ref
+    P, M = pstack.total_lanes.shape[0], x.shape[0]
+    rows = [jnp.repeat(_f32(getattr(pstack, f.name)), M)
+            for f in dataclasses.fields(AsymmetricLaneParams)]
+    rows.append(jnp.tile(_f32(x), P))
+    rows.append(jnp.tile(_f32(y), P))
+    pad = jnp.zeros_like(rows[0])
+    return jnp.stack(rows + [pad] * (fs_ref.ASYM_ROWS - len(rows)))
+
+
+def _pipe_param_rows(ks, ucie_line_uis, device_line_uis):
+    """Row-stack a pipelining grid into [ASYM_ROWS, K*U*D]."""
+    from repro.kernels.flit_sim import ref as fs_ref
+    Kk, U, Dn = (ks.shape[0], ucie_line_uis.shape[0],
+                 device_line_uis.shape[0])
+    rows = [jnp.repeat(_f32(ks), U * Dn),
+            jnp.tile(jnp.repeat(_f32(ucie_line_uis), Dn), Kk),
+            jnp.tile(_f32(device_line_uis), Kk * U)]
+    pad = jnp.zeros_like(rows[0])
+    return jnp.stack(rows + [pad] * (fs_ref.ASYM_ROWS - len(rows)))
+
+
+def _scal_row(values) -> jnp.ndarray:
+    """Broadcast-scalar [1, SCAL_COLS] operand from leading values."""
+    from repro.kernels.flit_sim import ref as fs_ref
+    row = np.zeros((1, fs_ref.SCAL_COLS), np.float32)
+    row[0, :len(values)] = values
+    return jnp.asarray(row)
+
+
+def _run_asymmetric_periodic(pstack, x, y, horizon: int, sim: SimConfig):
+    """Period-exact asymmetric run (one launch + exact escalation of
+    undetected cells).  Returns the report grid, or ``None`` when the
+    grid is mostly aperiodic and the chunked core is the better tool."""
+    from repro.kernels.flit_sim import ops as fs_ops
+    from repro.kernels.flit_sim import ref as fs_ref
+    P, M = pstack.total_lanes.shape[0], x.shape[0]
+    cells = P * M
+    t0 = time.perf_counter()
+    # the row-stacking runs INSIDE the cached program: the whole periodic
+    # run is one dispatch from the host's point of view
+    if sim.engine == "pallas":
+        tile, cpad = fs_ops.tile_for(cells)
+
+        def build(ps, xs, ys):
+            rows = fs_ops.pad_cells(_asym_param_rows(ps, xs, ys), cpad)
+            return fs_ops.asymmetric_periodic_launch(
+                rows, n_accesses=horizon, tile=tile, cells=cells)[0]
+    else:
+        def build(ps, xs, ys):
+            return fs_ref.asymmetric_periodic_compute(
+                _asym_param_rows(ps, xs, ys), n_accesses=horizon)
+    fn = cached_program("flitsim.asymmetric",
+                        (P, M, horizon, "periodic") + sim.key(),
+                        build, (pstack, x, y))
+    out = fn(pstack, x, y)
+    det_np = np.asarray(out[1, :cells]) > 0.5
+    undet = int((~det_np).sum())
+    if undet > max(cells // 4, 8):
+        return None
+    rep = out[0, :cells].reshape(P, M)
+    launches = 1
+    if undet:
+        conv_np = det_np.reshape(P, M)
+        rep = _escalate_stragglers(
+            "flitsim.asymmetric",
+            functools.partial(_asymmetric_cells_grid, n_accesses=horizon),
+            horizon, rep, conv_np,
+            lambda idx: (_gather_cells(pstack, idx[:, 0]),
+                         jnp.asarray(np.asarray(x)[idx[:, 1]]),
+                         jnp.asarray(np.asarray(y)[idx[:, 1]])))
+        launches += 1
+    jax.block_until_ready(rep)
+    conv_at = np.where(det_np, 1, -1).astype(np.int32).reshape(P, M)
+    _record_adaptive("flitsim.asymmetric", horizon, fs_ref.PERIOD_OBS, 1,
+                     conv_at, undet, engine=sim.engine, launches=launches,
+                     elapsed_s=time.perf_counter() - t0,
+                     periods=out[2, :cells])
+    return rep
+
+
+def _run_symmetric_pallas(pstack, x, y, backlogs, horizon: int,
+                          chunk: int, sim: SimConfig):
+    """Host-driven adaptive symmetric loop on the fused chunk kernel: one
+    launch per chunk; report / drift / convergence evaluated in-kernel;
+    the host reads back one flag row per chunk to steer the early exit.
+    Chunk-boundary histories stay as a host-side list of device rows (the
+    kernel receives exactly the rows the report formula needs)."""
+    from repro.kernels.flit_sim import ops as fs_ops
+    P, B, M = pstack.g_slots.shape[0], backlogs.shape[0], x.shape[0]
+    cells = P * B * M
+    K = horizon // chunk
+    K0 = max(K // 4, 1)
+    min_k = max(_MIN_EXIT_CHUNKS, K0 + 1)
+    budget = _escalation_budget(cells, chunk, horizon)
+    t0 = time.perf_counter()
+    tile, cpad = fs_ops.tile_for(cells)
+    params = fs_ops.pad_cells(_sym_param_rows(pstack, x, y, backlogs),
+                              cpad)
+    state = jnp.zeros((fs_ops.SYM_ROWS, cpad), jnp.float32)
+    zrow = jnp.zeros((1, cpad), jnp.float32)
+    z5 = jnp.zeros((5, cpad), jnp.float32)
+    z6 = jnp.zeros((6, cpad), jnp.float32)
+    Dh, TDh, Ph = [zrow], [zrow], [z5]
+
+    def hist_for(k: int):
+        m = max(k - 4, (k + 1) // 2)
+        mid = (m + k + 1) // 2
+        return m, mid, jnp.concatenate([
+            Ph[max(k - _DRIFT_SPAN, 0)],
+            Dh[m] if m < k else zrow, TDh[m] if m < k else zrow,
+            Dh[mid] if mid < k else zrow, TDh[mid] if mid < k else zrow,
+            Dh[K0] if k > K0 else zrow, z6])
+
+    def scal_for(k: int, m: int, mid: int):
+        return _scal_row([k, m, mid, K0, K, chunk, sim.tol,
+                          1.0 if (k >= min_k and k > _DRIFT_SPAN) else 0.0,
+                          1.0 if k >= K else 0.0, _DRIFT_TOL_SLOTS])
+
+    m1, mid1, hist1 = hist_for(1)
+    launch = cached_program(
+        "flitsim.symmetric",
+        (P, B, M, horizon, "pallas-chunk") + sim.key(),
+        functools.partial(fs_ops.symmetric_chunk_launch, chunk=chunk,
+                          tile=tile, cells=cells),
+        (params, state, hist1, scal_for(1, m1, mid1)))
+    conv_at = np.full(cells, -1, np.int32)
+    conv_np = np.zeros(cells, bool)
+    k = 0
+    while k < K:
+        k += 1
+        m, mid, hist = hist_for(k)
+        state, conv = launch(params, state, hist, scal_for(k, m, mid))
+        Dh.append(state[7:8])
+        TDh.append(state[8:9])
+        Ph.append(state[0:5])
+        conv_np = np.asarray(conv)
+        conv_at[(conv_at < 0) & conv_np] = k
+        if int((~conv_np).sum()) <= budget:
+            break
+    rep = state[10, :cells].reshape(P, B, M)
+    stragglers = int((~conv_np).sum()) if budget > 0 else 0
+    launches = k
+    if stragglers:
+        rep = _escalate_stragglers(
+            "flitsim.symmetric",
+            functools.partial(_symmetric_cells_grid, n_flits=horizon),
+            horizon, rep, conv_np.reshape(P, B, M),
+            lambda idx: (_gather_cells(pstack, idx[:, 0]),
+                         jnp.asarray(np.asarray(x)[idx[:, 2]]),
+                         jnp.asarray(np.asarray(y)[idx[:, 2]]),
+                         jnp.asarray(np.asarray(backlogs)[idx[:, 1]])))
+        launches += 1
+    jax.block_until_ready(rep)
+    _record_adaptive("flitsim.symmetric", horizon, chunk, k,
+                     conv_at.reshape(P, B, M), stragglers,
+                     engine="pallas", launches=launches,
+                     elapsed_s=time.perf_counter() - t0)
+    return rep
+
+
+def _run_pipelining_pallas(ks, ucie_line_uis, device_line_uis,
+                           horizon: int, chunk: int, sim: SimConfig):
+    """Host-driven adaptive pipelining loop on the fused chunk kernel
+    (same shape as the symmetric loop; no drift guard / escalation —
+    the rotation report converges monotonically)."""
+    from repro.kernels.flit_sim import ops as fs_ops
+    Kk, U, Dn = (ks.shape[0], ucie_line_uis.shape[0],
+                 device_line_uis.shape[0])
+    cells = Kk * U * Dn
+    K = horizon // chunk
+    min_k = min(_MIN_EXIT_CHUNKS, K)
+    t0 = time.perf_counter()
+    tile, cpad = fs_ops.tile_for(cells)
+    params = fs_ops.pad_cells(
+        _pipe_param_rows(ks, ucie_line_uis, device_line_uis), cpad)
+    state = jnp.zeros((fs_ops.PIPE_ROWS, cpad), jnp.float32)
+    hist = jnp.zeros((fs_ops.ASYM_ROWS, cpad), jnp.float32)
+
+    def scal_for(k: int):
+        return _scal_row([k, K, chunk, sim.tol,
+                          1.0 if k >= min_k else 0.0,
+                          1.0 if k >= K else 0.0, horizon])
+
+    launch = cached_program(
+        "flitsim.pipelining",
+        (Kk, U, Dn, horizon, "pallas-chunk") + sim.key(),
+        functools.partial(fs_ops.pipelining_chunk_launch, chunk=chunk,
+                          tile=tile, cells=cells),
+        (params, state, hist, scal_for(1)))
+    conv_at = np.full(cells, -1, np.int32)
+    k = 0
+    while k < K:
+        k += 1
+        state, conv = launch(params, state, hist, scal_for(k))
+        if k == 1:      # T1 anchor for the linear-growth extrapolation
+            hist = jnp.concatenate(
+                [state[8:9], jnp.zeros((7, cpad), jnp.float32)])
+        conv_np = np.asarray(conv)
+        conv_at[(conv_at < 0) & conv_np] = k
+        if int((~conv_np).sum()) == 0:
+            break
+    rep = state[10, :cells].reshape(Kk, U, Dn)
+    jax.block_until_ready(rep)
+    _record_adaptive("flitsim.pipelining", horizon, chunk, k,
+                     conv_at.reshape(Kk, U, Dn), 0, engine="pallas",
+                     launches=k, elapsed_s=time.perf_counter() - t0)
+    return rep
+
+
 def _run_symmetric(pstack, x, y, backlogs, n_flits: int,
                    sim: Optional[SimConfig] = None):
     sim = sim if sim is not None else FIXED_SIM
@@ -914,6 +1183,10 @@ def _run_symmetric(pstack, x, y, backlogs, n_flits: int,
     if chunk < 8:               # divisor-poor horizon: adaptive degrades
         return _run_symmetric(pstack, x, y, backlogs, horizon,
                               sim=FIXED_SIM)
+    if sim.engine == "pallas":
+        return _run_symmetric_pallas(pstack, x, y, backlogs, horizon,
+                                     chunk, sim)
+    t0 = time.perf_counter()
     budget = _escalation_budget(P * B * M, chunk, horizon)
     fn = cached_program(
         "flitsim.symmetric", (P, B, M, horizon) + sim.key(),
@@ -935,8 +1208,11 @@ def _run_symmetric(pstack, x, y, backlogs, n_flits: int,
                              jnp.asarray(np.asarray(x)[idx[:, 2]]),
                              jnp.asarray(np.asarray(y)[idx[:, 2]]),
                              jnp.asarray(np.asarray(backlogs)[idx[:, 1]])))
+    jax.block_until_ready(rep)
     _record_adaptive("flitsim.symmetric", horizon, chunk, k_exit, conv_at,
-                     stragglers)
+                     stragglers, engine="xla",
+                     launches=1 + (1 if stragglers else 0),
+                     elapsed_s=time.perf_counter() - t0)
     return rep
 
 
@@ -954,6 +1230,15 @@ def _run_asymmetric(pstack, x, y, n_accesses: int,
     chunk = _divisor_chunk(horizon, sim.chunk)
     if chunk < 8:
         return _run_asymmetric(pstack, x, y, horizon, sim=FIXED_SIM)
+    from repro.kernels.flit_sim.ref import PERIOD_OBS
+    if horizon >= PERIOD_OBS:
+        # period-exact cut (both engines): observe ~2 credit periods and
+        # extrapolate; falls through to the chunked core on mostly
+        # aperiodic grids (None)
+        rep = _run_asymmetric_periodic(pstack, x, y, horizon, sim)
+        if rep is not None:
+            return rep
+    t0 = time.perf_counter()
     budget = _escalation_budget(P * M, chunk, horizon)
     fn = cached_program(
         "flitsim.asymmetric", (P, M, horizon) + sim.key(),
@@ -975,8 +1260,11 @@ def _run_asymmetric(pstack, x, y, n_accesses: int,
                 lambda idx: (_gather_cells(pstack, idx[:, 0]),
                              jnp.asarray(np.asarray(x)[idx[:, 1]]),
                              jnp.asarray(np.asarray(y)[idx[:, 1]])))
+    jax.block_until_ready(rep)
     _record_adaptive("flitsim.asymmetric", horizon, chunk, k_exit, conv_at,
-                     stragglers)
+                     stragglers, engine="xla",
+                     launches=1 + (1 if stragglers else 0),
+                     elapsed_s=time.perf_counter() - t0)
     return rep
 
 
@@ -996,6 +1284,13 @@ def _run_pipelining(ks, ucie_line_uis, device_line_uis, max_k: int,
     if chunk < 8:
         return _run_pipelining(ks, ucie_line_uis, device_line_uis, max_k,
                                horizon, sim=FIXED_SIM)
+    if sim.engine == "pallas":
+        from repro.kernels.flit_sim.ref import PIPE_MAX_K
+        if max_k <= PIPE_MAX_K:     # kernel holds PIPE_MAX_K device rows
+            return _run_pipelining_pallas(ks, ucie_line_uis,
+                                          device_line_uis, horizon, chunk,
+                                          sim)
+    t0 = time.perf_counter()
     fn = cached_program(
         "flitsim.pipelining", shape + (max_k, horizon) + sim.key(),
         functools.partial(_pipelining_grid_adaptive, max_k=max_k,
@@ -1003,8 +1298,11 @@ def _run_pipelining(ks, ucie_line_uis, device_line_uis, max_k: int,
                           unroll=int(sim.unroll), tol=float(sim.tol)),
         (ks, ucie_line_uis, device_line_uis))
     rep, conv, k_exit, conv_at = fn(ks, ucie_line_uis, device_line_uis)
+    jax.block_until_ready(rep)
     _record_adaptive("flitsim.pipelining", horizon, chunk, k_exit, conv_at,
-                     0)                 # exits only converged / at horizon
+                     0,                 # exits only converged / at horizon
+                     engine="xla", launches=1,
+                     elapsed_s=time.perf_counter() - t0)
     return rep
 
 

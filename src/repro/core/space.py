@@ -131,6 +131,14 @@ class SimConfig:
     family to an exact divisor of the horizon (>= 8 chunks per run).  The
     config participates in the shared compile-cache key (:meth:`key`), so
     alternating configs never invalidates other configs' warm executables.
+
+    ``engine`` picks the adaptive execution backend: ``"xla"`` (default)
+    runs the chunked ``lax.while_loop`` cores; ``"pallas"`` runs the fused
+    single-launch-per-chunk Pallas kernels from
+    :mod:`repro.kernels.flit_sim` (``interpret=True`` off-TPU, real
+    lowering on TPU).  The fixed mode is engine-independent by design —
+    it must stay bit-identical to every pinned golden — so
+    ``engine="pallas"`` requires ``mode="adaptive"``.
     """
 
     mode: str = "fixed"
@@ -138,11 +146,20 @@ class SimConfig:
     unroll: int = 4
     tol: float = 1e-3
     max_cycles: Optional[int] = None
+    engine: str = "xla"
 
     def __post_init__(self):
         if self.mode not in ("fixed", "adaptive"):
             raise ValueError(f"SimConfig.mode must be 'fixed' or "
                              f"'adaptive', got {self.mode!r}")
+        if self.engine not in ("xla", "pallas"):
+            raise ValueError(f"SimConfig.engine must be 'xla' or "
+                             f"'pallas', got {self.engine!r}")
+        if self.engine == "pallas" and self.mode != "adaptive":
+            raise ValueError(
+                "SimConfig(engine='pallas') requires mode='adaptive': the "
+                "fixed mode is pinned bit-identical to the golden numerics "
+                "and always runs the XLA scan core")
         if int(self.chunk) < 8:
             raise ValueError(f"SimConfig.chunk must be >= 8, got "
                              f"{self.chunk}")
@@ -171,7 +188,7 @@ class SimConfig:
         if self.mode == "fixed":
             return ("fixed",)
         return ("adaptive", int(self.chunk), int(self.unroll),
-                float(self.tol), self.max_cycles)
+                float(self.tol), self.max_cycles, self.engine)
 
 
 #: the default config: bit-identical fixed-horizon simulation
@@ -179,6 +196,10 @@ FIXED_SIM = SimConfig()
 #: convergence-adaptive early-exit simulation (benchmarks / explorer
 #: default; <= tol-scale deviation from FIXED_SIM)
 ADAPTIVE_SIM = SimConfig(mode="adaptive")
+#: convergence-adaptive simulation on the fused Pallas kernels — one
+#: launch per chunk instead of ~chunk dispatched ops (<= tol-scale
+#: deviation from FIXED_SIM, same gate as ADAPTIVE_SIM)
+PALLAS_SIM = SimConfig(mode="adaptive", engine="pallas")
 
 
 _PROGRAMS: Dict[Tuple, Any] = {}

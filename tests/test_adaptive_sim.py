@@ -81,6 +81,43 @@ class TestSimConfig:
         np.testing.assert_array_equal(np.asarray(a.efficiency),
                                       np.asarray(f.efficiency))
 
+    def test_chunk_larger_than_horizon(self):
+        # configured chunk above the horizon: the cap clamps to
+        # horizon // 8, so short horizons still get >= 8 checks
+        for horizon in (64, 128, 256):
+            c = flitsim._divisor_chunk(horizon, 1024)
+            assert horizon % c == 0 and horizon // c >= 8, (horizon, c)
+
+    def test_divisor_poor_small_horizon_bit_identical_to_fixed(self):
+        # 2 * 31: the only divisors <= horizon // 8 are 1 and 2 — below
+        # the usable-chunk floor, so the runner must hand the run to the
+        # fixed engine verbatim (bit-identity, not merely within tol)
+        assert flitsim._divisor_chunk(62, 128) < 8
+        for engine in ("xla", "pallas"):
+            cfg = SimConfig(mode="adaptive", max_cycles=62, engine=engine)
+            a = sweep(protocols=["cxl_opt"], mixes=[(2, 1), (0, 1)],
+                      sim=cfg)
+            f = sweep(protocols=["cxl_opt"], mixes=[(2, 1), (0, 1)],
+                      n_flits=62)
+            np.testing.assert_array_equal(np.asarray(a.efficiency),
+                                          np.asarray(f.efficiency))
+
+    def test_chunk_count_not_divisible_by_4_still_lands(self):
+        # 162 = 2 * 81 carries a single factor of 2, so NO divisor can
+        # make the chunk count a multiple of 4 — _divisor_chunk must
+        # still take the best usable divisor (18 -> 9 chunks) rather
+        # than fall back to the fixed engine
+        c162 = flitsim._divisor_chunk(162, 128)
+        assert c162 == 18 and (162 // c162) % 4 != 0
+        cfg = SimConfig(mode="adaptive", max_cycles=162)
+        a = sweep(protocols=["chi"], mixes=[(1, 1)], sim=cfg)
+        f = sweep(protocols=["chi"], mixes=[(1, 1)], n_flits=162)
+        # a usable divisor exists, so this runs the ADAPTIVE engine
+        # (within tol), not the fixed fall-back
+        assert float(np.max(np.abs(np.asarray(a.efficiency)
+                                   - np.asarray(f.efficiency)))) <= 1e-3
+        assert flitsim.last_run_info()["flitsim.symmetric"]["chunk"] == c162
+
 
 class TestFixedModeUnchanged:
     def test_default_is_fixed_and_bit_identical(self):
@@ -123,7 +160,10 @@ class TestAdaptiveMatchesFixed:
         sweep(sim=ADAPTIVE_SIM)
         info = flitsim.last_run_info()
         assert set(info) >= {"flitsim.symmetric", "flitsim.asymmetric"}
-        for fam, v in info.items():
+        # scope to the families THIS sweep ran — other tests may leave
+        # run info (e.g. a pipelining grid that legitimately hit horizon)
+        for fam in ("flitsim.symmetric", "flitsim.asymmetric"):
+            v = info[fam]
             assert v["cycles_run"] < v["horizon"], (fam, v)
             assert sum(v["converged_cycles"].values()) == v["cells"]
 
