@@ -1,0 +1,26 @@
+"""repro-lint wall-clock: the static pass gates CI ahead of the test
+matrix, so it must stay fast — the row records the full-tree runtime and
+the suite asserts the ~5 s budget from the lint README."""
+from __future__ import annotations
+
+import time
+
+#: CI budget for the full-tree static pass (seconds); the gate runs
+#: before every matrix leg, so regressions here tax every push
+LINT_BUDGET_S = 5.0
+
+
+def run(rows):
+    from repro.lint import run_lint   # stdlib-only import
+
+    t0 = time.perf_counter()
+    report = run_lint()
+    elapsed = time.perf_counter() - t0
+    rows.append(("lint/full_tree", elapsed * 1e6,
+                 f"files={report.files};checks={len(report.checks)};"
+                 f"unsuppressed={len(report.unsuppressed)};"
+                 f"suppressed={len(report.suppressed)}"))
+    assert not report.unsuppressed, \
+        [f.format() for f in report.unsuppressed]
+    assert elapsed < LINT_BUDGET_S, \
+        f"repro-lint took {elapsed:.2f}s over the {LINT_BUDGET_S}s budget"

@@ -31,10 +31,13 @@ def main() -> None:
 
     rows = []
     from benchmarks import (
-        bench_flitsim, bench_kernels, bench_paper_figures, bench_roofline,
-        bench_serving, bench_train_loop,
+        bench_flitsim, bench_kernels, bench_lint, bench_paper_figures,
+        bench_roofline, bench_serving, bench_train_loop,
     )
     suites = [
+        # lint first: the same pass gates CI, and the row keeps its
+        # wall-clock on the trend (budget: bench_lint.LINT_BUDGET_S)
+        ("lint", bench_lint.run),
         ("paper_figures", bench_paper_figures.run),
         ("flitsim", bench_flitsim.run),
         ("kernels", bench_kernels.run),

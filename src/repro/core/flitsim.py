@@ -243,7 +243,7 @@ def check_perturbation(pert: Mapping[str, float]) -> None:
     """Reject ``{field: scale}`` perturbations naming unknown flit-simulator
     parameter fields (catalog perturbations are validated by
     ``UCIePhy.perturbed`` against its own field set)."""
-    unknown = [k for k in pert if k not in PERTURBABLE_FIELDS]
+    unknown = sorted(k for k in pert if k not in PERTURBABLE_FIELDS)
     if unknown:
         raise ValueError(f"unknown perturbation fields {unknown}; choose "
                          f"from {PERTURBABLE_FIELDS}")
@@ -1331,8 +1331,9 @@ def simulate_grid(protocols: Sequence[str], x, y, backlogs, *,
     :func:`last_run_info` for the cycles-to-convergence telemetry).
     """
     keys = tuple(protocols)
-    unknown = [k for k in keys
-               if k not in SYMMETRIC_PARAMS and k not in ASYMMETRIC_PARAMS]
+    unknown = sorted(k for k in keys
+                     if k not in SYMMETRIC_PARAMS
+                     and k not in ASYMMETRIC_PARAMS)
     if unknown:
         raise ValueError(f"unknown protocol keys {unknown}; "
                          f"choose from {sorted(SIMULATORS)}")

@@ -382,8 +382,8 @@ def axis(name: str, values: Sequence[Any],
         from repro.core.ucie import PERTURBABLE_PHY_FIELDS
         norm = [_as_perturbation(v) for v in vals]
         for _, items in norm:
-            unknown = [k for k, _ in items
-                       if k not in PERTURBABLE_PHY_FIELDS]
+            unknown = sorted(k for k, _ in items
+                             if k not in PERTURBABLE_PHY_FIELDS)
             if unknown:
                 raise ValueError(
                     f"unknown catalog perturbation fields {unknown}; "

@@ -92,7 +92,7 @@ class UCIePhy:
         raises rather than silently producing a baseline labelled as
         perturbed.
         """
-        unknown = [k for k in pert if k not in PERTURBABLE_PHY_FIELDS]
+        unknown = sorted(k for k in pert if k not in PERTURBABLE_PHY_FIELDS)
         if unknown:
             raise ValueError(
                 f"unknown catalog perturbation fields {unknown}; choose "

@@ -15,6 +15,12 @@ MXU-aligned (multiples of 128) for the score matmuls [bq,hd]x[hd,bk].
 Causal + local-window masking by absolute positions (q_offset supports
 continuation chunks).  Fully-masked kv blocks are skipped via @pl.when.
 """
+# repro-lint: disable-file=RL002
+# This kernel deliberately does NOT share compute bodies with ref.py:
+# ref.py materializes the full [T,T] softmax as the oracle, while the
+# kernel runs the streaming (online-softmax) recurrence with running
+# max/normalizer scratch.  Equivalence is pinned numerically against
+# attention_ref in tests/test_kernels.py, not by construction.
 from __future__ import annotations
 
 import functools

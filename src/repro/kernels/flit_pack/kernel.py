@@ -28,7 +28,10 @@ from repro.kernels.flit_pack.ref import (
 
 
 def _xor_reduce(x, axis):
-    """log2 XOR reduction tree along `axis` (power-of-two padded)."""
+    """log2 XOR reduction tree along `axis` (power-of-two padded) — the
+    lane-parallel equivalent of ref.py's sequential ``_xor_fold`` (XOR is
+    associative, so the tree and the fold agree bit-for-bit; pinned
+    against ``pack_flits_ref`` in tests/test_kernels.py)."""
     n = x.shape[axis]
     # pad to power of two with zeros (xor identity)
     p = 1

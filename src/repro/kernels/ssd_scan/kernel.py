@@ -16,6 +16,12 @@ Within the chunk the SSD closed form is evaluated with MXU matmuls:
 Q defaults to 128/256 (MXU-aligned); VMEM per program ~ Q*(P+2N) + Q^2 +
 P*N floats.
 """
+# repro-lint: disable-file=RL002
+# This kernel deliberately does NOT share compute bodies with ref.py:
+# ref.py is the O(T) sequential lax.scan oracle, while the kernel
+# evaluates the algebraically equivalent chunked closed form on the MXU
+# (segsum decay matrices + matmuls).  Equivalence is pinned numerically
+# against ssd_ref in tests/test_kernels.py, not by construction.
 from __future__ import annotations
 
 import functools

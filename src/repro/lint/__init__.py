@@ -1,0 +1,74 @@
+"""repro-lint: the repo's own static invariant checker.
+
+``python -m repro.lint`` (or ``tools/lint.py``) runs five AST checks
+(RL001–RL005) over ``src/`` — cache-key integrity, kernel/ref parity,
+float-encoded-int bounds, traced control flow, registry consistency —
+and exits non-zero on any unsuppressed finding.  See
+``src/repro/lint/README.md`` for the check catalogue and the
+``# repro-lint: disable=RLxxx`` suppression syntax.
+
+The static pass is stdlib-only; the runtime tracer-safety sanitizer
+(retrace counting + ``jax.transfer_guard`` wiring) lives in
+:mod:`repro.lint.runtime` and is the only part that imports JAX.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.lint.engine import (
+    Finding, LintError, LintReport, default_root, load_sources, run_lint,
+)
+
+__all__ = ["Finding", "LintError", "LintReport", "default_root",
+           "load_sources", "run_lint", "main"]
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    from repro.lint.checks import CHECKS
+
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="AST invariant checks RL001-RL005 over the repo's "
+                    "own source tree")
+    ap.add_argument("root", nargs="?", default=None,
+                    help="file or tree to lint (default: the repo's src/)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the full JSON report on stdout")
+    ap.add_argument("--output", metavar="PATH", default=None,
+                    help="also write the JSON report to PATH (the CI "
+                         "artifact)")
+    ap.add_argument("--select", metavar="IDS", default=None,
+                    help="comma-separated check ids to run (default: all)")
+    ap.add_argument("--list", action="store_true",
+                    help="list the check catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for check_id, (title, fn) in CHECKS.items():
+            print(f"{check_id}  {title}")
+        return 0
+    select = [s.strip() for s in args.select.split(",")] \
+        if args.select else None
+    try:
+        report = run_lint(args.root, select=select)
+    except LintError as e:
+        print(f"repro-lint: error: {e}", file=sys.stderr)
+        return 2
+    payload = report.to_json()
+    if args.output:
+        with open(args.output, "w") as f:
+            json.dump(payload, f, indent=1)
+    if args.json:
+        json.dump(payload, sys.stdout, indent=1)
+        print()
+    else:
+        for finding in report.findings:
+            print(finding.format())
+        n, m = len(report.unsuppressed), len(report.suppressed)
+        print(f"repro-lint: checked {report.files} files "
+              f"({', '.join(report.checks)}) in {report.elapsed_s:.2f}s — "
+              f"{n} finding(s), {m} suppressed")
+    return 1 if report.unsuppressed else 0

@@ -1,0 +1,598 @@
+"""The five repro-lint checks (RL001–RL005).
+
+Each check is a pure function ``(sources) -> Iterable[Finding]`` over the
+parsed AST of the whole tree; suppression filtering happens in the
+engine.  The checks encode the repo's own normative invariants (the
+prose contracts in ``kernels/flit_sim/README.md`` and the PR 5/6
+incident history — see ``src/repro/lint/README.md`` for the catalogue):
+
+RL001  cache-key integrity      every numerics-affecting config field
+                                participates in the compile-cache key
+RL002  kernel/ref parity        kernel.py shares ref.py compute bodies
+                                and keeps the rows-leading layout
+RL003  float-encoded-int bounds constants/horizons feeding f32 counters
+                                stay <= 2**24
+RL004  traced control flow      no Python branching / host syncs /
+                                stray numpy on traced values
+RL005  registry consistency     *_FIELDS registries track the dataclass
+                                fields they claim to cover, sorted
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.lint.engine import Finding, Source
+
+MAX_EXACT_F32_INT = 2 ** 24
+
+# ---------------------------------------------------------------- helpers
+
+
+def _is_dataclass_decorator(dec: ast.expr) -> bool:
+    if isinstance(dec, ast.Call):
+        dec = dec.func
+    if isinstance(dec, ast.Name):
+        return dec.id == "dataclass"
+    if isinstance(dec, ast.Attribute):
+        return dec.attr == "dataclass"
+    return False
+
+
+def _dataclass_fields(cls: ast.ClassDef) -> List[Tuple[str, int]]:
+    """(name, lineno) of every dataclass field declared on ``cls``
+    (annotated assignments, skipping ClassVar and private names)."""
+    out = []
+    for node in cls.body:
+        if not isinstance(node, ast.AnnAssign) or \
+                not isinstance(node.target, ast.Name):
+            continue
+        if node.target.id.startswith("_"):
+            continue
+        ann = ast.dump(node.annotation)
+        if "ClassVar" in ann:
+            continue
+        out.append((node.target.id, node.lineno))
+    return out
+
+
+def _dataclasses_in(tree: ast.Module) -> List[ast.ClassDef]:
+    return [n for n in ast.walk(tree)
+            if isinstance(n, ast.ClassDef)
+            and any(_is_dataclass_decorator(d) for d in n.decorator_list)]
+
+
+def _int_value(node: ast.expr) -> Optional[int]:
+    """Constant-fold an integer expression (literals and +,-,*,//,%,**,
+    <<); None when the value is not a compile-time int."""
+    if isinstance(node, ast.Constant):
+        v = node.value
+        return v if isinstance(v, int) and not isinstance(v, bool) else None
+    if isinstance(node, ast.UnaryOp) and \
+            isinstance(node.op, (ast.USub, ast.UAdd)):
+        v = _int_value(node.operand)
+        if v is None:
+            return None
+        return -v if isinstance(node.op, ast.USub) else v
+    if isinstance(node, ast.BinOp):
+        lhs, rhs = _int_value(node.left), _int_value(node.right)
+        if lhs is None or rhs is None:
+            return None
+        ops = {ast.Add: lambda a, b: a + b, ast.Sub: lambda a, b: a - b,
+               ast.Mult: lambda a, b: a * b,
+               ast.FloorDiv: lambda a, b: a // b if b else None,
+               ast.Mod: lambda a, b: a % b if b else None,
+               ast.Pow: lambda a, b: a ** b if b >= 0 else None,
+               ast.LShift: lambda a, b: a << b if 0 <= b < 64 else None}
+        fn = ops.get(type(node.op))
+        return fn(lhs, rhs) if fn else None
+    return None
+
+
+def _callee_name(func: ast.expr) -> Optional[str]:
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+def _caps_int_consts(tree: ast.Module):
+    """Module-level ``ALL_CAPS = <int>`` assignments -> (name, value,
+    lineno)."""
+    for node in tree.body:
+        targets: Sequence[ast.expr]
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = [node.target], node.value
+        else:
+            continue
+        v = _int_value(value)
+        if v is None:
+            continue
+        for t in targets:
+            if isinstance(t, ast.Name) and t.id.isupper():
+                yield t.id, v, node.lineno
+
+
+# ------------------------------------------------- RL001 cache-key integrity
+
+
+def check_rl001(sources: List[Source]) -> Iterable[Finding]:
+    """Cache-key integrity.
+
+    (a) Every field of a dataclass that exposes a ``key()`` method (the
+        compile-cache key protocol, e.g. ``SimConfig``) must be read by
+        ``key()``: a numerics-affecting field outside the key silently
+        reuses a stale compiled executable for different numerics — the
+        exact PR 5 (``mode/chunk/tol``) and PR 6 (``engine``) incidents.
+    (b) A positional row reconstruction ``Cls(*[rows[i] for i in
+        range(N)])`` (the kernel-side pytree unpacking in
+        ``kernels/flit_sim/ref.py``) must use exactly as many rows as
+        ``Cls`` has dataclass fields, or the row-stacked operands and
+        the pytree drift apart.
+    """
+    findings: List[Finding] = []
+    field_counts: Dict[str, Tuple[int, str]] = {}
+    for src in sources:
+        for cls in _dataclasses_in(src.tree):
+            fields = _dataclass_fields(cls)
+            field_counts[cls.name] = (len(fields), src.rel)
+            key_fn = next((n for n in cls.body
+                           if isinstance(n, ast.FunctionDef)
+                           and n.name == "key"), None)
+            if key_fn is None or not fields:
+                continue
+            used = {n.attr for n in ast.walk(key_fn)
+                    if isinstance(n, ast.Attribute)
+                    and isinstance(n.value, ast.Name)
+                    and n.value.id == "self"}
+            for fname, fline in fields:
+                if fname not in used:
+                    findings.append(Finding(
+                        "RL001", src.rel, fline,
+                        f"{cls.name}.{fname} never participates in "
+                        f"{cls.name}.key(): the field can change numerics "
+                        f"without changing the compile-cache key, so a "
+                        f"stale executable would be reused"))
+    for src in sources:
+        for call in ast.walk(src.tree):
+            n = _reconstruction_arity(call)
+            if n is None:
+                continue
+            cls_name = call.func.id  # type: ignore[union-attr]
+            if cls_name not in field_counts:
+                continue
+            n_fields, decl_rel = field_counts[cls_name]
+            if n != n_fields:
+                findings.append(Finding(
+                    "RL001", src.rel, call.lineno,
+                    f"rebuilds {cls_name} from {n} positional rows but the "
+                    f"dataclass ({decl_rel}) declares {n_fields} fields — "
+                    f"the row-stacked operand layout and the pytree are "
+                    f"out of sync"))
+    return findings
+
+
+def _reconstruction_arity(node: ast.AST) -> Optional[int]:
+    """Arity N of a ``Cls(*[seq[i] for i in range(N)])`` call."""
+    if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and len(node.args) == 1
+            and isinstance(node.args[0], ast.Starred)):
+        return None
+    comp = node.args[0].value
+    if not isinstance(comp, (ast.ListComp, ast.GeneratorExp)) or \
+            len(comp.generators) != 1:
+        return None
+    it = comp.generators[0].iter
+    if isinstance(it, ast.Call) and _callee_name(it.func) == "range" \
+            and len(it.args) == 1:
+        return _int_value(it.args[0])
+    return None
+
+
+# --------------------------------------------------- RL002 kernel/ref parity
+
+
+def check_rl002(sources: List[Source]) -> Iterable[Finding]:
+    """Kernel/ref parity for every sibling ``kernel.py`` / ``ref.py``
+    pair: the kernel must import from its reference module (shared
+    compute bodies, the PR 6 contract), must not re-define a function
+    ref already defines (re-implementation drift), and ``pl.BlockSpec``
+    block shapes must keep the ``*_ROWS`` dimension leading (operands
+    are row-stacked with cells last, so cells land on TPU lanes)."""
+    findings: List[Finding] = []
+    by_dir: Dict[str, Dict[str, Source]] = {}
+    for src in sources:
+        parts = src.rel.rsplit("/", 1)
+        d, name = (parts[0], parts[1]) if len(parts) == 2 else ("", parts[0])
+        by_dir.setdefault(d, {})[name] = src
+    for d, files in sorted(by_dir.items()):
+        kernel, ref = files.get("kernel.py"), files.get("ref.py")
+        if kernel is None or ref is None:
+            continue
+        if not _imports_sibling_ref(kernel.tree):
+            findings.append(Finding(
+                "RL002", kernel.rel, 1,
+                "kernel.py never imports from its sibling ref.py — compute "
+                "bodies and layout constants must be shared with the "
+                "reference implementation, not re-implemented"))
+        ref_defs = {n.name: n.lineno for n in ref.tree.body
+                    if isinstance(n, ast.FunctionDef)}
+        for n in kernel.tree.body:
+            if isinstance(n, ast.FunctionDef) and n.name in ref_defs:
+                findings.append(Finding(
+                    "RL002", kernel.rel, n.lineno,
+                    f"re-defines '{n.name}' (ref.py:{ref_defs[n.name]}) "
+                    f"instead of importing the ref body — the two copies "
+                    f"will drift"))
+        rows_names = {name for name, _, _ in _caps_int_consts(ref.tree)
+                      if name.endswith("_ROWS")}
+        if rows_names:
+            findings.extend(_blockspec_rows_last(kernel, rows_names))
+    return findings
+
+
+def _imports_sibling_ref(tree: ast.Module) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod == "ref" or mod.endswith(".ref"):
+                return True
+            if node.level > 0 and any(a.name == "ref" for a in node.names):
+                return True
+        elif isinstance(node, ast.Import):
+            if any(a.name.endswith(".ref") for a in node.names):
+                return True
+    return False
+
+
+def _blockspec_rows_last(kernel: Source, rows_names: Set[str]):
+    for call in ast.walk(kernel.tree):
+        if not (isinstance(call, ast.Call)
+                and _callee_name(call.func) == "BlockSpec"):
+            continue
+        shape = call.args[0] if call.args else None
+        if not isinstance(shape, ast.Tuple) or len(shape.elts) < 2:
+            continue
+        for elt in shape.elts[1:]:
+            if isinstance(elt, ast.Name) and elt.id in rows_names:
+                yield Finding(
+                    "RL002", kernel.rel, call.lineno,
+                    f"BlockSpec block shape puts the row dimension "
+                    f"({elt.id}) after the cell dimension — operands are "
+                    f"row-stacked with cells LAST (rows must be the "
+                    f"leading block dim so cells land on lanes)")
+
+
+# --------------------------------------------- RL003 float-encoded-int bounds
+
+
+#: keyword/positional defaults that flow into f32-encoded cycle counters
+#: in the simulation engines
+_HORIZON_PARAMS = {"n_flits", "n_accesses", "n_lines", "n_cycles",
+                   "n_steps", "max_cycles", "horizon", "chunk"}
+
+
+def check_rl003(sources: List[Source]) -> Iterable[Finding]:
+    """Float-encoded-int bounds: the Pallas cores carry cycle counters,
+    periods and histogram bins as f32 lanes, exact only up to 2**24.
+    Flags (a) module-level ALL_CAPS integer constants above the bound in
+    kernel-scope files (under ``kernels/`` or importing pallas), and
+    (b) horizon-like parameter defaults above the bound anywhere."""
+    findings: List[Finding] = []
+    for src in sources:
+        kernelish = "kernels/" in src.rel or _imports_pallas(src.tree)
+        if kernelish:
+            for name, value, lineno in _caps_int_consts(src.tree):
+                if value > MAX_EXACT_F32_INT:
+                    findings.append(Finding(
+                        "RL003", src.rel, lineno,
+                        f"{name} = {value} exceeds 2**24 = "
+                        f"{MAX_EXACT_F32_INT}: f32-encoded counters lose "
+                        f"integer exactness above that bound"))
+        for fn in ast.walk(src.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for pname, default, lineno in _defaults_of(fn):
+                if pname in _HORIZON_PARAMS:
+                    v = _int_value(default)
+                    if v is not None and v > MAX_EXACT_F32_INT:
+                        findings.append(Finding(
+                            "RL003", src.rel, lineno,
+                            f"default {pname}={v} in {fn.name}() exceeds "
+                            f"2**24 = {MAX_EXACT_F32_INT}: horizons feed "
+                            f"f32-encoded cycle counters which lose "
+                            f"exactness above that bound"))
+    return findings
+
+
+def _imports_pallas(tree: ast.Module) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            if "pallas" in (node.module or "") or \
+                    any("pallas" in a.name for a in node.names):
+                return True
+        if isinstance(node, ast.Import) and \
+                any("pallas" in a.name for a in node.names):
+            return True
+    return False
+
+
+def _defaults_of(fn):
+    args = fn.args
+    positional = list(args.posonlyargs) + list(args.args)
+    for arg, default in zip(positional[len(positional)
+                                       - len(args.defaults):],
+                            args.defaults):
+        yield arg.arg, default, arg.lineno
+    for arg, default in zip(args.kwonlyargs, args.kw_defaults):
+        if default is not None:
+            yield arg.arg, default, arg.lineno
+
+
+# ---------------------------------------------- RL004 traced control flow
+
+
+#: callables whose listed positional-arg indices receive traced bodies
+_TRACED_ENTRY = {"pallas_call": (0,), "scan": (0,), "while_loop": (0, 1),
+                 "fori_loop": (2,), "cond": (1, 2),
+                 "associative_scan": (0,)}
+
+#: attribute accesses that are static at trace time — reading them off a
+#: traced value is safe, so taint does not flow through them
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size"}
+
+
+def check_rl004(sources: List[Source]) -> Iterable[Finding]:
+    """Traced-control-flow / sync-point detector.
+
+    A *traced scope* is a function passed (directly or through
+    ``functools.partial``) to ``pl.pallas_call`` or to
+    ``lax.scan/while_loop/fori_loop/cond/associative_scan``.  Inside
+    such scopes the positional parameters are traced values; Python
+    ``if``/``while`` on them, ``bool()``/``int()``/``float()``/
+    ``.item()``/``.tolist()`` of them, and ``numpy`` calls on them
+    either crash at trace time or silently bake one trace's value into
+    the compiled program.  Keyword-only parameters are static (the
+    ``functools.partial`` convention for grid constants) and stay
+    exempt, as do ``.shape``/``.dtype`` reads."""
+    findings: List[Finding] = []
+    for src in sources:
+        np_aliases = _numpy_aliases(src.tree)
+        defs: Dict[str, List[ast.FunctionDef]] = {}
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.FunctionDef):
+                defs.setdefault(node.name, []).append(node)
+        aliases: Dict[str, str] = {}
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                root = _body_arg_name(node.value)
+                if root:
+                    aliases[node.targets[0].id] = root
+        traced_names: Set[str] = set()
+        for call in ast.walk(src.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            indices = _TRACED_ENTRY.get(_callee_name(call.func) or "")
+            if not indices:
+                continue
+            for idx in indices:
+                if idx < len(call.args):
+                    name = _body_arg_name(call.args[idx])
+                    if name:
+                        # chase `body = functools.partial(_kernel, ...)`
+                        # style aliases (bounded, cycle-safe)
+                        for _ in range(8):
+                            if name not in aliases or \
+                                    aliases[name] == name:
+                                break
+                            name = aliases[name]
+                        traced_names.add(name)
+        seen: Set[int] = set()
+        for name in sorted(traced_names):
+            for fn in defs.get(name, []):
+                if id(fn) in seen:
+                    continue
+                seen.add(id(fn))
+                findings.extend(_lint_traced_fn(src, fn, np_aliases))
+    return findings
+
+
+def _body_arg_name(arg: ast.expr) -> Optional[str]:
+    if isinstance(arg, ast.Name):
+        return arg.id
+    if isinstance(arg, ast.Call) and _callee_name(arg.func) == "partial" \
+            and arg.args and isinstance(arg.args[0], ast.Name):
+        return arg.args[0].id
+    return None
+
+
+def _numpy_aliases(tree: ast.Module) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "numpy" or a.name.startswith("numpy."):
+                    out.add((a.asname or a.name).split(".")[0])
+    return out
+
+
+def _tainted(node: ast.AST, taint: Set[str]) -> bool:
+    if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+        return False
+    if isinstance(node, ast.Name):
+        return node.id in taint
+    return any(_tainted(child, taint)
+               for child in ast.iter_child_nodes(node))
+
+
+def _target_names(target: ast.expr) -> Iterable[str]:
+    if isinstance(target, ast.Name):
+        yield target.id
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            yield from _target_names(elt)
+    elif isinstance(target, ast.Starred):
+        yield from _target_names(target.value)
+
+
+def _lint_traced_fn(src: Source, fn: ast.FunctionDef,
+                    np_aliases: Set[str]) -> Iterable[Finding]:
+    args = fn.args
+    taint = {a.arg for a in list(args.posonlyargs) + list(args.args)}
+    taint.discard("self")
+    # propagate through simple assignments to a fixed point
+    for _ in range(16):
+        grew = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and _tainted(node.value, taint):
+                for t in node.targets:
+                    for name in _target_names(t):
+                        grew |= name not in taint
+                        taint.add(name)
+            elif isinstance(node, ast.AugAssign) and \
+                    _tainted(node.value, taint):
+                for name in _target_names(node.target):
+                    grew |= name not in taint
+                    taint.add(name)
+        if not grew:
+            break
+    where = f"traced scope {fn.name}() ({src.rel}:{fn.lineno})"
+    for node in ast.walk(fn):
+        if isinstance(node, ast.If) and _tainted(node.test, taint):
+            yield Finding("RL004", src.rel, node.lineno,
+                          f"Python `if` on a traced value inside {where} — "
+                          f"use jnp.where / lax.cond / lax.select")
+        elif isinstance(node, ast.While) and _tainted(node.test, taint):
+            yield Finding("RL004", src.rel, node.lineno,
+                          f"Python `while` on a traced value inside {where} "
+                          f"— use lax.while_loop")
+        elif isinstance(node, ast.Call):
+            cname = _callee_name(node.func)
+            if isinstance(node.func, ast.Name) and \
+                    cname in ("bool", "int", "float") and \
+                    any(_tainted(a, taint) for a in node.args):
+                yield Finding("RL004", src.rel, node.lineno,
+                              f"host sync: {cname}() on a traced value "
+                              f"inside {where} — forces a blocking "
+                              f"device readback at trace time")
+            elif isinstance(node.func, ast.Attribute) and \
+                    cname in ("item", "tolist") and \
+                    _tainted(node.func.value, taint):
+                yield Finding("RL004", src.rel, node.lineno,
+                              f"host sync: .{cname}() on a traced value "
+                              f"inside {where}")
+            elif isinstance(node.func, ast.Attribute) and \
+                    _attr_root(node.func) in np_aliases and \
+                    any(_tainted(a, taint) for a in node.args):
+                yield Finding("RL004", src.rel, node.lineno,
+                              f"stray numpy call on a traced value inside "
+                              f"{where} — numpy executes on the host at "
+                              f"trace time and bakes in one trace's value")
+
+
+def _attr_root(node: ast.Attribute) -> Optional[str]:
+    value = node.value
+    while isinstance(value, ast.Attribute):
+        value = value.value
+    return value.id if isinstance(value, ast.Name) else None
+
+
+# ---------------------------------------------- RL005 registry consistency
+
+
+def check_rl005(sources: List[Source]) -> Iterable[Finding]:
+    """Registry consistency: module-level ``*_FIELDS`` registries (e.g.
+    ``PERTURBABLE_FIELDS`` / ``PERTURBABLE_PHY_FIELDS``) must name real
+    fields of the dataclasses defined in the same module, stay sorted
+    and duplicate-free (deterministic unknown-field errors / goldens),
+    and — when derived — be computed from ``dataclasses.fields(...)``
+    through ``sorted(...)`` so they track the dataclass automatically."""
+    findings: List[Finding] = []
+    for src in sources:
+        cls_fields: Set[str] = set()
+        for cls in _dataclasses_in(src.tree):
+            cls_fields |= {name for name, _ in _dataclass_fields(cls)}
+        for node in src.tree.body:
+            name, value = _fields_registry(node)
+            if name is None:
+                continue
+            entries = _str_tuple(value)
+            if entries is not None:
+                if cls_fields:
+                    for e in entries:
+                        if e not in cls_fields:
+                            findings.append(Finding(
+                                "RL005", src.rel, node.lineno,
+                                f"{name} entry '{e}' is not a field of any "
+                                f"dataclass in this module — the registry "
+                                f"drifted from the dataclass it covers"))
+                if list(entries) != sorted(entries):
+                    findings.append(Finding(
+                        "RL005", src.rel, node.lineno,
+                        f"{name} is not sorted — unknown-field error "
+                        f"messages and lint goldens become "
+                        f"nondeterministic"))
+                if len(set(entries)) != len(entries):
+                    findings.append(Finding(
+                        "RL005", src.rel, node.lineno,
+                        f"{name} contains duplicate entries"))
+            else:
+                has_sorted = any(isinstance(n, ast.Call)
+                                 and _callee_name(n.func) == "sorted"
+                                 for n in ast.walk(value))
+                has_fields = any(isinstance(n, ast.Call)
+                                 and _callee_name(n.func) == "fields"
+                                 for n in ast.walk(value))
+                if not (has_sorted and has_fields):
+                    findings.append(Finding(
+                        "RL005", src.rel, node.lineno,
+                        f"{name} should be derived from "
+                        f"dataclasses.fields(...) wrapped in sorted(...) "
+                        f"so it tracks the dataclass and stays "
+                        f"deterministic"))
+    return findings
+
+
+def _fields_registry(node: ast.stmt):
+    if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+            isinstance(node.targets[0], ast.Name):
+        name = node.targets[0].id
+        value = node.value
+    elif isinstance(node, ast.AnnAssign) and \
+            isinstance(node.target, ast.Name) and node.value is not None:
+        name = node.target.id
+        value = node.value
+    else:
+        return None, None
+    if name.isupper() and name.endswith("_FIELDS"):
+        return name, value
+    return None, None
+
+
+def _str_tuple(value: ast.expr) -> Optional[List[str]]:
+    if isinstance(value, ast.Call) and \
+            _callee_name(value.func) in ("tuple", "list") and \
+            len(value.args) == 1:
+        value = value.args[0]
+    if not isinstance(value, (ast.Tuple, ast.List)):
+        return None
+    out = []
+    for elt in value.elts:
+        if not (isinstance(elt, ast.Constant) and isinstance(elt.value, str)):
+            return None
+        out.append(elt.value)
+    return out
+
+
+#: check registry: id -> (human title, implementation)
+CHECKS = {
+    "RL001": ("cache-key integrity", check_rl001),
+    "RL002": ("kernel/ref parity", check_rl002),
+    "RL003": ("float-encoded-int bounds", check_rl003),
+    "RL004": ("traced control flow / sync points", check_rl004),
+    "RL005": ("registry consistency", check_rl005),
+}

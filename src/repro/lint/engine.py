@@ -1,0 +1,178 @@
+"""repro-lint engine: source loading, suppression parsing, reporting.
+
+The static pass is **stdlib-only** (``ast`` + ``re``): the CI lint job
+runs it on a bare Python with no JAX installed, before the test matrix
+spends any compute.  Only :mod:`repro.lint.runtime` (the runtime
+sanitizer) imports ``jax``, and nothing here imports that module.
+
+Suppression syntax
+------------------
+
+``# repro-lint: disable=RL003`` on a line suppresses findings of that
+check on the annotated line and the line directly below it (so the
+directive can trail the offending statement or sit on its own line
+above).  ``# repro-lint: disable-file=RL002`` anywhere in a file
+suppresses the check for the whole file.  Several IDs may be
+comma-separated.  Suppressed findings still appear in the JSON report
+with ``"suppressed": true`` — they are audited, not hidden.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+import time
+from pathlib import Path
+from typing import Dict, FrozenSet, Iterable, List, Optional, Tuple
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*disable(?P<scope>-file)?\s*=\s*"
+    r"(?P<ids>RL\d{3}(?:\s*,\s*RL\d{3})*)")
+
+#: directories never descended into
+_SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", ".venv",
+              "node_modules", "build", "dist"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint finding, stable across runs (sorted by path, line, id)."""
+
+    check: str          # e.g. "RL001"
+    path: str           # root-relative posix path
+    line: int           # 1-based
+    message: str
+    suppressed: bool = False
+
+    def format(self) -> str:
+        tag = " (suppressed)" if self.suppressed else ""
+        return f"{self.path}:{self.line}: {self.check}{tag}: {self.message}"
+
+
+@dataclasses.dataclass
+class Source:
+    """A parsed source file plus its suppression directives."""
+
+    path: Path
+    rel: str
+    text: str
+    tree: ast.Module
+    file_suppressions: FrozenSet[str]
+    line_suppressions: Dict[int, FrozenSet[str]]
+
+    def suppresses(self, check: str, line: int) -> bool:
+        if check in self.file_suppressions:
+            return True
+        for ln in (line, line - 1):
+            if check in self.line_suppressions.get(ln, frozenset()):
+                return True
+        return False
+
+
+def _parse_suppressions(text: str):
+    file_level: set = set()
+    per_line: Dict[int, FrozenSet[str]] = {}
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(line)
+        if not m:
+            continue
+        ids = frozenset(s.strip() for s in m.group("ids").split(","))
+        if m.group("scope"):
+            file_level |= ids
+        else:
+            per_line[lineno] = per_line.get(lineno, frozenset()) | ids
+    return frozenset(file_level), per_line
+
+
+def load_sources(root: Path) -> List[Source]:
+    """Parse every ``*.py`` under ``root`` (or ``root`` itself, if it is
+    a file) into :class:`Source` records, sorted by path."""
+    root = Path(root).resolve()
+    if root.is_file():
+        paths = [root]
+        base = root.parent
+    else:
+        paths = sorted(p for p in root.rglob("*.py")
+                       if not any(part in _SKIP_DIRS or part.startswith(".")
+                                  for part in p.relative_to(root).parts))
+        base = root
+    out: List[Source] = []
+    for p in paths:
+        text = p.read_text()
+        try:
+            tree = ast.parse(text, filename=str(p))
+        except SyntaxError as e:
+            raise LintError(f"{p}: cannot parse: {e}") from e
+        file_sup, line_sup = _parse_suppressions(text)
+        out.append(Source(path=p, rel=p.relative_to(base).as_posix(),
+                          text=text, tree=tree,
+                          file_suppressions=file_sup,
+                          line_suppressions=line_sup))
+    return out
+
+
+class LintError(RuntimeError):
+    """Internal linter failure (unparseable input, bad check id)."""
+
+
+@dataclasses.dataclass
+class LintReport:
+    root: str
+    checks: Tuple[str, ...]
+    files: int
+    findings: List[Finding]
+    elapsed_s: float
+
+    @property
+    def unsuppressed(self) -> List[Finding]:
+        return [f for f in self.findings if not f.suppressed]
+
+    @property
+    def suppressed(self) -> List[Finding]:
+        return [f for f in self.findings if f.suppressed]
+
+    def to_json(self) -> dict:
+        return {
+            "root": self.root,
+            "checks": list(self.checks),
+            "files": self.files,
+            "elapsed_s": round(self.elapsed_s, 4),
+            "counts": {"total": len(self.findings),
+                       "unsuppressed": len(self.unsuppressed),
+                       "suppressed": len(self.suppressed)},
+            "findings": [dataclasses.asdict(f) for f in self.findings],
+        }
+
+
+def default_root() -> Path:
+    """The repo's ``src/`` tree (this package lives at ``src/repro/lint``),
+    independent of the caller's working directory."""
+    return Path(__file__).resolve().parents[2]
+
+
+def run_lint(root=None, select: Optional[Iterable[str]] = None) -> LintReport:
+    """Run the selected checks (default: all) over ``root`` (default:
+    the repo's ``src/`` tree) and return a :class:`LintReport`."""
+    from repro.lint import checks as checks_mod
+
+    root = Path(root) if root is not None else default_root()
+    wanted = tuple(select) if select is not None \
+        else tuple(checks_mod.CHECKS)
+    unknown = [c for c in wanted if c not in checks_mod.CHECKS]
+    if unknown:
+        raise LintError(f"unknown check ids {sorted(unknown)}; choose "
+                        f"from {sorted(checks_mod.CHECKS)}")
+    t0 = time.perf_counter()
+    sources = load_sources(root)
+    by_rel = {s.rel: s for s in sources}
+    findings: List[Finding] = []
+    for check_id in wanted:
+        _, fn = checks_mod.CHECKS[check_id]
+        for f in fn(sources):
+            src = by_rel.get(f.path)
+            if src is not None and src.suppresses(f.check, f.line):
+                f = dataclasses.replace(f, suppressed=True)
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.check, f.message))
+    return LintReport(root=str(root), checks=wanted, files=len(sources),
+                      findings=findings, elapsed_s=time.perf_counter() - t0)

@@ -1,0 +1,113 @@
+"""Runtime tracer-safety sanitizer: retrace counting + transfer guards.
+
+The static checks in :mod:`repro.lint.checks` prove properties of the
+source; this module enforces the complementary *runtime* claims — "this
+warm section triggers zero recompiles" and "this section moves no data
+across the host/device boundary" — so the compile-once acceptance tests
+(``tests/test_design_space.py``, ``tests/test_adaptive_sim.py``) verify
+no-retrace directly rather than only inferring it from cache counters.
+
+Retrace detection listens to JAX's own compile logging
+(``jax_log_compiles``): every trace+compile emits log records from the
+``jax.*`` loggers ("Compiling ...", "Finished tracing + transforming
+..."), and a fully warm path emits none — the C++ jit fast path never
+re-enters Python.  This is version-robust (the flag and messages are
+stable across the repo's 0.4.37 floor and latest) and catches *any*
+compile in the section, including internal jits the shared
+``cached_program`` cache never sees.
+
+This is the only :mod:`repro.lint` module that imports JAX; keep it out
+of the static pass so the CI lint job runs on a bare interpreter.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import logging
+import re
+from typing import Iterator, List, Optional
+
+import jax
+
+__all__ = ["CompileLog", "RetraceError", "count_compiles", "no_retrace"]
+
+#: one compile produces one or more of these records; a warm path
+#: produces none.  ``count`` therefore means "compile log events", an
+#: upper bound on compiles that is exactly zero iff no retrace happened.
+_COMPILE_EVENT_RE = re.compile(
+    r"Compiling |Finished tracing \+ transforming|Finished XLA compilation")
+
+
+class RetraceError(AssertionError):
+    """A section declared retrace-free compiled something."""
+
+
+@dataclasses.dataclass
+class CompileLog:
+    """Compile log events captured inside a :func:`count_compiles`
+    section."""
+
+    events: List[str]
+
+    @property
+    def count(self) -> int:
+        return len(self.events)
+
+
+class _CaptureHandler(logging.Handler):
+    def __init__(self, sink: List[str]):
+        super().__init__(level=logging.DEBUG)
+        self._sink = sink
+
+    def emit(self, record: logging.LogRecord) -> None:
+        try:
+            msg = record.getMessage()
+        except Exception:      # a malformed record must not kill the test
+            return
+        if _COMPILE_EVENT_RE.search(msg):
+            self._sink.append(msg)
+
+
+@contextlib.contextmanager
+def count_compiles() -> Iterator[CompileLog]:
+    """Capture JAX compile log events for the duration of the block.
+
+    Temporarily enables ``jax_log_compiles`` and attaches a handler to
+    the ``jax`` logger (all ``jax._src.*`` loggers propagate through
+    it); both are restored on exit.
+    """
+    log = CompileLog(events=[])
+    handler = _CaptureHandler(log.events)
+    jax_logger = logging.getLogger("jax")
+    prev = bool(getattr(jax.config, "jax_log_compiles", False))
+    jax.config.update("jax_log_compiles", True)
+    jax_logger.addHandler(handler)
+    try:
+        yield log
+    finally:
+        jax_logger.removeHandler(handler)
+        jax.config.update("jax_log_compiles", prev)
+
+
+@contextlib.contextmanager
+def no_retrace(max_compiles: int = 0,
+               transfer: Optional[str] = None) -> Iterator[CompileLog]:
+    """Assert that the block performs at most ``max_compiles`` compile
+    events (default: a fully warm, zero-retrace section).
+
+    ``transfer`` optionally arms ``jax.transfer_guard`` for the block
+    ("allow" / "log" / "disallow" / the explicit variants), so a section
+    can additionally assert it moves no data across the host/device
+    boundary.  Raises :class:`RetraceError` on violation, annotated with
+    the first captured compile events.
+    """
+    guard = jax.transfer_guard(transfer) if transfer is not None \
+        else contextlib.nullcontext()
+    with guard, count_compiles() as log:
+        yield log
+    if log.count > max_compiles:
+        head = "\n  ".join(log.events[:8])
+        raise RetraceError(
+            f"{log.count} compile event(s) inside a "
+            f"no_retrace(max_compiles={max_compiles}) section — a warm "
+            f"path retraced.  First events:\n  {head}")

@@ -1,0 +1,28 @@
+"""RL001 bad: ``staleness`` changes numerics but never reaches key(), so
+two configs differing only in staleness share one compiled executable —
+the exact PR 5/6 incident class this check exists for."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class BadSimConfig:
+    mode: str = "fixed"
+    chunk: int = 128
+    staleness: float = 1e-3
+
+    def key(self):
+        if self.mode == "fixed":
+            return ("fixed",)
+        return ("adaptive", int(self.chunk))
+
+
+@dataclasses.dataclass(frozen=True)
+class RowParams:
+    alpha: float = 1.0
+    beta: float = 2.0
+    gamma: float = 3.0
+
+
+def rebuild(rows):
+    # three-field dataclass rebuilt from only two rows: layout drift
+    return RowParams(*[rows[i] for i in range(2)])

@@ -1,0 +1,14 @@
+"""RL001 good: every numerics-affecting field participates in key()."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class GoodSimConfig:
+    mode: str = "fixed"
+    chunk: int = 128
+    staleness: float = 1e-3
+
+    def key(self):
+        if self.mode == "fixed":
+            return ("fixed",)
+        return ("adaptive", int(self.chunk), float(self.staleness))

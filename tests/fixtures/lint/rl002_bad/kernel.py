@@ -1,0 +1,21 @@
+"""RL002 bad fixture: no ref import, a re-implemented compute body, and
+a BlockSpec that puts the row dimension after the cell dimension."""
+from jax.experimental import pallas as pl
+
+DEMO_ROWS = 4
+
+
+def demo_compute(params, state):
+    # drifted re-implementation of the ref body
+    return params + state + 0.0
+
+
+def _kernel(p_ref, s_ref, o_ref):
+    o_ref[...] = demo_compute(p_ref[...], s_ref[...])
+
+
+def launch(p, s, tile=128):
+    return pl.pallas_call(
+        _kernel,
+        in_specs=[pl.BlockSpec((tile, DEMO_ROWS), lambda i: (i, 0))],
+    )(p, s)

@@ -1,0 +1,6 @@
+"""RL002 bad fixture: same oracle as the good twin."""
+DEMO_ROWS = 4
+
+
+def demo_compute(params, state):
+    return params + state

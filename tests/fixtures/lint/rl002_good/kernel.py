@@ -1,0 +1,15 @@
+"""RL002 good fixture: kernel imports the ref body, rows-leading specs."""
+from jax.experimental import pallas as pl
+
+from .ref import DEMO_ROWS, demo_compute
+
+
+def _kernel(p_ref, s_ref, o_ref):
+    o_ref[...] = demo_compute(p_ref[...], s_ref[...])
+
+
+def launch(p, s, tile=128):
+    return pl.pallas_call(
+        _kernel,
+        in_specs=[pl.BlockSpec((DEMO_ROWS, tile), lambda i: (0, i))],
+    )(p, s)

@@ -1,0 +1,6 @@
+"""RL002 good fixture: the reference oracle owns the compute body."""
+DEMO_ROWS = 4
+
+
+def demo_compute(params, state):
+    return params + state

@@ -1,0 +1,9 @@
+"""RL003 bad: a 2**25 horizon constant and a 50M default both overflow
+the exact-integer range of the f32-encoded cycle counters."""
+from jax.experimental import pallas as pl  # noqa: F401  (kernel scope)
+
+HORIZON = 1 << 25
+
+
+def run(x, n_flits=50_000_000):
+    return x

@@ -1,0 +1,9 @@
+"""RL003 good: kernel-scope constants and horizons stay within 2**24."""
+from jax.experimental import pallas as pl  # noqa: F401  (kernel scope)
+
+HORIZON = 4096
+PERIOD_OBS = 128
+
+
+def run(x, n_flits=4096, *, chunk=128):
+    return x

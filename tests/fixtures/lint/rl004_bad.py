@@ -1,0 +1,18 @@
+"""RL004 bad: Python control flow, host syncs and stray numpy on traced
+values inside a lax.scan step."""
+import jax
+import numpy as np
+
+
+def step(carry, x):
+    gain = carry + x
+    if gain > 0:                      # Python branch on a traced value
+        carry = gain
+    while carry < 0:                  # Python loop on a traced value
+        carry = carry + 1.0
+    level = np.log1p(gain)            # stray numpy on a traced value
+    return carry, float(level)        # host sync on a traced value
+
+
+def run(xs):
+    return jax.lax.scan(step, 0.0, xs)

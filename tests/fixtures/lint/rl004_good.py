@@ -1,0 +1,17 @@
+"""RL004 good: traced step uses jnp.where; branches only on static
+keyword-only parameters and shapes."""
+import jax
+import jax.numpy as jnp
+
+
+def step(carry, x, *, saturate=True):
+    if saturate:                      # static kwonly — exempt
+        carry = jnp.minimum(carry + x, 1.0)
+    if carry.shape[0] > 1:            # shape read — static, exempt
+        carry = carry[:1]
+    carry = jnp.where(carry > 0, carry + x, carry)
+    return carry, carry
+
+
+def run(xs):
+    return jax.lax.scan(step, jnp.zeros(1), xs)

@@ -1,0 +1,15 @@
+"""RL005 bad: the registry names a field that does not exist on the
+dataclass (renamed/typo drift) and is not sorted."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DemoPhy:
+    linear_density_gbs_mm: float = 880.0
+    power_pj_per_bit: float = 0.5
+
+
+PERTURBABLE_DEMO_FIELDS = ("power_pj_per_bit", "linear_density_gbs_mm2")
+
+#: derived without sorted()/fields(): nondeterministic, does not track
+DERIVED_DEMO_FIELDS = tuple(vars(DemoPhy))

@@ -1,0 +1,15 @@
+"""RL005 good: the registry names real dataclass fields, sorted."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DemoPhy:
+    linear_density_gbs_mm: float = 880.0
+    power_pj_per_bit: float = 0.5
+
+
+PERTURBABLE_DEMO_FIELDS = ("linear_density_gbs_mm", "power_pj_per_bit")
+
+#: derived registries must go through sorted(dataclasses.fields(...))
+DERIVED_DEMO_FIELDS = tuple(sorted(
+    f.name for f in dataclasses.fields(DemoPhy)))

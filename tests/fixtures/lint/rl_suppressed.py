@@ -1,0 +1,7 @@
+"""Suppression fixture: a real RL003 violation silenced inline — it must
+surface in the JSON report as suppressed but not fail the run."""
+from jax.experimental import pallas as pl  # noqa: F401  (kernel scope)
+
+# deliberate overflow, suppressed with an explanation as the syntax
+# requires
+BIG_HORIZON = 1 << 25  # repro-lint: disable=RL003

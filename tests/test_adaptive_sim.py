@@ -127,15 +127,20 @@ class TestFixedModeUnchanged:
                                       np.asarray(explicit.efficiency))
 
     def test_fixed_warm_after_adaptive_run(self):
-        """Alternating configs must not invalidate each other's entries."""
+        """Alternating configs must not invalidate each other's entries —
+        enforced both by the shared-cache counters and by the runtime
+        retrace sanitizer (zero compile events on the warm replay)."""
+        from repro.lint import runtime
+
         flitsim.clear_compile_cache()
         mixes = [(3, 2), (1, 1)]
         sweep(mixes=mixes)                      # fixed: 2 compiles
         sweep(mixes=mixes, sim=ADAPTIVE_SIM)    # adaptive: 2 more
         after_both = flitsim.compile_cache_stats()
         assert after_both.misses == 4
-        sweep(mixes=mixes)                      # fixed again: warm
-        sweep(mixes=mixes, sim=ADAPTIVE_SIM)    # adaptive again: warm
+        with runtime.no_retrace():              # any compile -> RetraceError
+            sweep(mixes=mixes)                  # fixed again: warm
+            sweep(mixes=mixes, sim=ADAPTIVE_SIM)  # adaptive again: warm
         final = flitsim.compile_cache_stats()
         assert final.misses == after_both.misses, \
             "switching SimConfig invalidated a warm cache entry"

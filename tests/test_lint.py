@@ -1,0 +1,177 @@
+"""repro-lint: fixture goldens per check, suppression semantics, the
+clean-tree CI gate, and the runtime tracer-safety sanitizer.
+
+Contracts:
+
+  * each check RL001–RL005 fires on its known-bad fixture and stays
+    silent on the known-good twin;
+  * ``# repro-lint: disable=RLxxx`` keeps the finding in the report
+    (suppressed) without failing the run;
+  * ``python -m repro.lint --json`` over the real ``src/`` tree exits 0
+    with zero unsuppressed findings — the CI lint gate;
+  * adding a numerics-affecting field to a ``key()``-carrying dataclass
+    without extending the key is caught (the PR 5/6 incident class);
+  * the runtime sanitizer detects a fresh compile inside a
+    ``no_retrace`` section, passes warm sections, and arms
+    ``jax.transfer_guard``.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.lint import run_lint
+from repro.lint.engine import LintError
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "lint"
+SRC = REPO / "src"
+
+
+def _ids(report):
+    return sorted({f.check for f in report.unsuppressed})
+
+
+class TestFixtures:
+    @pytest.mark.parametrize("check,good,bad", [
+        ("RL001", "rl001_good.py", "rl001_bad.py"),
+        ("RL002", "rl002_good", "rl002_bad"),
+        ("RL003", "rl003_good.py", "rl003_bad.py"),
+        ("RL004", "rl004_good.py", "rl004_bad.py"),
+        ("RL005", "rl005_good.py", "rl005_bad.py"),
+    ])
+    def test_good_bad_pair(self, check, good, bad):
+        assert check not in _ids(run_lint(FIXTURES / good)), \
+            f"{check} false positive on {good}"
+        assert check in _ids(run_lint(FIXTURES / bad)), \
+            f"{check} missed the seeded defect in {bad}"
+
+    def test_simconfig_style_key_omission_names_the_field(self):
+        """Acceptance: a numerics-affecting field added without extending
+        the compile-cache key fails the lint gate, by name."""
+        msgs = [f.message for f in run_lint(FIXTURES / "rl001_bad.py")
+                .unsuppressed if f.check == "RL001"]
+        assert any("staleness" in m and "key()" in m for m in msgs), msgs
+
+    def test_rl001_catches_row_count_drift(self):
+        msgs = [f.message for f in run_lint(FIXTURES / "rl001_bad.py")
+                .unsuppressed if f.check == "RL001"]
+        assert any("RowParams" in m and "2 positional rows" in m
+                   for m in msgs), msgs
+
+    def test_rl002_reports_all_three_contracts(self):
+        msgs = [f.message for f in run_lint(FIXTURES / "rl002_bad")
+                .unsuppressed if f.check == "RL002"]
+        assert any("never imports" in m for m in msgs)
+        assert any("re-defines 'demo_compute'" in m for m in msgs)
+        assert any("row-stacked with cells LAST" in m for m in msgs)
+
+    def test_rl004_reports_each_sync_point(self):
+        msgs = " | ".join(f.message
+                          for f in run_lint(FIXTURES / "rl004_bad.py")
+                          .unsuppressed if f.check == "RL004")
+        assert "Python `if`" in msgs
+        assert "Python `while`" in msgs
+        assert "stray numpy" in msgs
+        assert "float() on a traced value" in msgs
+
+    def test_suppression_keeps_finding_in_report(self):
+        rep = run_lint(FIXTURES / "rl_suppressed.py")
+        assert not rep.unsuppressed
+        assert [(f.check, f.suppressed) for f in rep.findings] == \
+            [("RL003", True)]
+
+    def test_unknown_check_id_rejected(self):
+        with pytest.raises(LintError, match="RL999"):
+            run_lint(FIXTURES / "rl001_good.py", select=["RL999"])
+
+    def test_select_runs_only_requested_checks(self):
+        rep = run_lint(FIXTURES / "rl004_bad.py", select=["RL003"])
+        assert rep.checks == ("RL003",)
+        assert not rep.findings
+
+
+class TestRealTree:
+    def test_src_tree_clean_in_process(self):
+        rep = run_lint(SRC)
+        assert rep.files > 50
+        assert not rep.unsuppressed, \
+            "\n".join(f.format() for f in rep.unsuppressed)
+        # the three pre-PR-6 kernels carry audited RL002 suppressions
+        assert {f.path for f in rep.suppressed} == {
+            "repro/kernels/flash_attention/kernel.py",
+            "repro/kernels/rglru_scan/kernel.py",
+            "repro/kernels/ssd_scan/kernel.py",
+        }
+
+    def test_cli_json_exit_zero(self):
+        """The CI gate: ``python -m repro.lint --json`` exits 0 on the
+        real tree and reports all five checks."""
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH",
+                                                            "")
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.lint", "--json"],
+            capture_output=True, text=True, env=env, cwd=REPO)
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        payload = json.loads(proc.stdout)
+        assert payload["checks"] == ["RL001", "RL002", "RL003", "RL004",
+                                     "RL005"]
+        assert payload["counts"]["unsuppressed"] == 0
+        assert payload["counts"]["suppressed"] == 3
+        assert payload["files"] > 50
+
+    def test_cli_fails_on_bad_fixture(self):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH",
+                                                            "")
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.lint",
+             str(FIXTURES / "rl001_bad.py")],
+            capture_output=True, text=True, env=env, cwd=REPO)
+        assert proc.returncode == 1
+        assert "RL001" in proc.stdout
+
+
+class TestRuntimeSanitizer:
+    def test_fresh_compile_detected(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.lint import runtime
+
+        @jax.jit
+        def fresh(x):
+            return x * 2.0 + 1.0
+
+        with pytest.raises(runtime.RetraceError, match="compile event"):
+            with runtime.no_retrace():
+                fresh(jnp.arange(7.0)).block_until_ready()
+
+    def test_warm_section_passes(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.lint import runtime
+
+        @jax.jit
+        def warm(x):
+            return x - 3.0
+
+        x = jnp.arange(5.0)
+        warm(x).block_until_ready()
+        with runtime.no_retrace() as log:
+            warm(x).block_until_ready()
+        assert log.count == 0
+
+    def test_transfer_guard_wiring(self):
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.lint import runtime
+
+        x = jnp.ones(3)
+        x.block_until_ready()
+        with pytest.raises(Exception, match="[Dd]isallow"):
+            with runtime.no_retrace(max_compiles=100, transfer="disallow"):
+                (x + np.arange(3.0)).block_until_ready()  # implicit h2d

@@ -1,0 +1,14 @@
+#!/usr/bin/env python
+"""Thin wrapper so ``tools/lint.py`` works without PYTHONPATH setup:
+inserts the repo's ``src/`` ahead of sys.path and runs ``repro.lint``
+(the same entry as ``python -m repro.lint``)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.lint import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
