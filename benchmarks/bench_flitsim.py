@@ -121,6 +121,8 @@ def run(rows: list):
                  f"adaptive_xla_us={us_adapt:.0f};"
                  f"max_dev_vs_fixed={max_dev_p:.1e};winners=identical"))
     for fam, v in sorted(flitsim.last_run_info().items()):
+        if v.get("mode") != "adaptive":
+            continue
         rows.append((f"flitsim/pallas_{fam.split('.')[1]}", 0.0,
                      f"engine={v['engine']};launches={v['launches']};"
                      f"cycles_run={v['cycles_run']};"

@@ -132,7 +132,8 @@ def _bench_joint_frontier_adaptive(rows: list):
     info = flitsim.last_run_info()
     cycles = ";".join(
         f"{fam.split('.')[1]}={v['cycles_run']}/{v['horizon']}"
-        for fam, v in sorted(info.items()))
+        for fam, v in sorted(info.items())
+        if v.get("mode") == "adaptive")
     n_pts = (len(jf_fixed["read_fractions"]) * len(jf_fixed["backlogs"])
              * len(jf_fixed["shorelines"]))
     rows.append((f"roofline/joint_frontier_adaptive_{n_pts}pt", us_adapt,

@@ -46,7 +46,9 @@ def main() -> None:
         ("roofline", bench_roofline.run),
     ]
     if args.smoke:
-        skipped = {"kernels", "train_loop", "serving"}
+        # serving stays: its trace-capacity rows need no model build
+        # (bench_serving skips the live-engine row itself under smoke)
+        skipped = {"kernels", "train_loop"}
         suites = [(n, fn) for n, fn in suites if n not in skipped]
         print(f"# smoke mode: skipping {sorted(skipped)}", file=sys.stderr)
     failed = []
@@ -69,11 +71,13 @@ def main() -> None:
                       f, indent=1)
         print(f"# wrote {args.json}", file=sys.stderr)
         # repo-root flit-simulation trend file: batched-sweep us, the
-        # adaptive-vs-fixed speedup, and the cycles-to-convergence
-        # histograms — the perf trajectory tracked in-repo (and uploaded
-        # per CI matrix cell)
+        # adaptive-vs-fixed speedup, the cycles-to-convergence
+        # histograms, and the serving trace-capacity rows (tokens/sec
+        # tied to sim_bandwidth_gbs) — the perf trajectory tracked
+        # in-repo (and uploaded per CI matrix cell)
         flit_rows = [{"name": n, "us_per_call": us, "derived": d}
-                     for n, us, d in rows if n.startswith("flitsim/")]
+                     for n, us, d in rows
+                     if n.startswith(("flitsim/", "serving/"))]
         if flit_rows:
             trend = os.path.join(os.path.dirname(os.path.dirname(
                 os.path.abspath(__file__))), "BENCH_flitsim.json")

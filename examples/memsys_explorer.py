@@ -1,6 +1,6 @@
 """Memory-system explorer: the paper bridge end-to-end.
 
-Three modes:
+Four modes:
 
   * artifact mode (default) — takes a compiled workload cell from the
     dry-run artifacts (or computes a fresh one for a reduced config),
@@ -41,6 +41,17 @@ Three modes:
     cell's estimate converges, deviating <= ~1e-3 from the fixed engine.
 
         PYTHONPATH=src python examples/memsys_explorer.py --bridge
+
+  * serving mode — the serving-trace frontier: synthetic serving traces
+    (per-model memory traffic under Poisson/diurnal/bursty arrival
+    processes, no weights needed) evaluated through the design space's
+    ``trace`` axis, with queue/credit state carried across phase
+    boundaries inside the flit simulators.  Reports which memory
+    approach wins at which (model, QPS) point plus the trace-scan
+    telemetry.  Bridge mode embeds the same report as the
+    ``serving_frontier`` section of design_space.json.
+
+        PYTHONPATH=src python examples/memsys_explorer.py --serving
 """
 import glob
 import json
@@ -130,6 +141,8 @@ def sweep_mode(n_fracs: int = 41, backlogs=(1, 2, 4, 8, 16, 32, 64, 128)):
           f"{n_fracs} read fractions) in {t_sim:.2f}s "
           f"[{stats.misses} compiles, {stats.hits} cache hits]")
     for fam, info in sorted(flitsim.last_run_info().items()):
+        if info.get("mode") != "adaptive":
+            continue
         print(f"    {fam.split('.')[1]:10s} adaptive: "
               f"{info['cycles_run']}/{info['horizon']} cycles "
               f"({info['stragglers']} stragglers re-simulated exactly)")
@@ -265,7 +278,8 @@ def sim_phy_frontier_report(n_fracs: int = 21, backlogs=(2.0, 64.0)):
     after = flitsim.compile_cache_stats()
     bw = res["sim_bandwidth_gbs"]      # [protocol, phy, backlog, mix]
     info = flitsim.last_run_info()
-    cycles = {fam.split(".")[1]: info[fam]["cycles_run"] for fam in info}
+    cycles = {fam.split(".")[1]: info[fam]["cycles_run"] for fam in info
+              if info[fam].get("mode") == "adaptive"}
     print(f"sim-phy frontier: {len(bw.coord('protocol'))} protocols x "
           f"{len(phys)} PHYs x {len(backlogs)} backlogs x {n_fracs} "
           f"read fractions = {int(np.prod(bw.shape))} points in {dt:.2f}s "
@@ -307,6 +321,57 @@ def sim_phy_frontier_report(n_fracs: int = 21, backlogs=(2.0, 64.0)):
     report["shallow_queue_disagrees"] = {
         name: shallow[name] != deep_w[name] for name in shallow}
     return report
+
+
+def serving_frontier_report(models=None, qps_points=None, **kwargs):
+    """Serving-trace frontier: which memory approach wins at which
+    (model, QPS) point.  Synthetic serving traces (config shapes only, no
+    weights) are evaluated through the design space's ``trace`` axis —
+    queue/credit state carried across phase boundaries — and each
+    (model, QPS) cell's winning protocol on the UCIe-A PHY is mapped to
+    its catalog memory approach.  Prints the frontier plus the trace-scan
+    telemetry; returns the JSON-able ``serving_frontier`` artifact
+    section."""
+    from repro.core.space import DesignSpace
+
+    t0 = time.perf_counter()
+    rep = DesignSpace.serving_frontier(models, qps_points, **kwargs)
+    dt = time.perf_counter() - t0
+    n_cells = len(rep["models"]) * len(rep["qps_points"])
+    print(f"serving frontier: {len(rep['models'])} models x "
+          f"{len(rep['qps_points'])} QPS points x "
+          f"{len(rep['protocols'])} protocols ({rep['n_phases']} phases "
+          f"per trace, {rep['arrival']} arrivals) in {dt:.2f}s "
+          f"[{rep['compiles']} compiles on {rep['phy']}]")
+    for fam, tele in sorted(rep["telemetry"].items()):
+        print(f"    {fam.split('.')[1]:10s} trace-scan: "
+              f"{tele['phases']} phases x {tele['cycles_per_phase']} "
+              f"cycles ({tele['trace_cells']} cells, state carried "
+              f"across {tele['state_carry_depth']} cycles)")
+    for m in rep["models"]:
+        wins = rep["winner_by_model_qps"][m]
+        gbs = rep["winner_gbs_by_model_qps"][m]
+        pts = "  ".join(
+            f"qps={q}: {wins[q]} ({gbs[q]:.0f} GB/s)" for q in wins)
+        tag = "QPS-SENSITIVE" if rep["qps_sensitive"][m] else \
+            "qps-insensitive"
+        print(f"    {m:14s} {pts}  [{tag}]")
+    if n_cells and not any(rep["qps_sensitive"].values()):
+        print("    (one approach serves every load point on this PHY)")
+    return rep
+
+
+def serving_mode():
+    """``--serving``: print the serving-trace frontier standalone."""
+    rep = serving_frontier_report()
+    traces = rep["traces"]
+    print(f"\n{len(traces)} synthetic traces "
+          f"({rep['n_ticks']} engine ticks each):")
+    for name in rep["trace_names"]:
+        t = traces[name]
+        rf = "/".join(f"{r:.2f}" for r in t["read_fractions"])
+        bl = "/".join(f"{b:.0f}" for b in t["backlogs"])
+        print(f"    {name:22s} read fraction {rf}  backlog {bl}")
 
 
 def bridge_mode(n_fracs: int = 41, shorelines=(2.0, 4.0, 8.0, 16.0)):
@@ -407,10 +472,16 @@ def bridge_mode(n_fracs: int = 41, shorelines=(2.0, 4.0, 8.0, 16.0)):
     print()
     spf = sim_phy_frontier_report()
 
+    # ...and the serving-trace frontier: time-varying traffic from the
+    # LLM serving workloads, winners per (model, QPS) point
+    print()
+    sf = serving_frontier_report()
+
     from repro.roofline.analysis import DESIGN_SPACE_JSON
     ds["joint_frontier"] = jf
     ds["phy_frontier"] = pf
     ds["sim_phy_frontier"] = spf
+    ds["serving_frontier"] = sf
     os.makedirs(DRYRUN, exist_ok=True)
     out_path = os.path.join(DRYRUN, DESIGN_SPACE_JSON)
     with open(out_path, "w") as f:
@@ -425,6 +496,9 @@ def main():
         return
     if "--bridge" in args:
         bridge_mode()
+        return
+    if "--serving" in args:
+        serving_mode()
         return
     if args:
         with open(args[0]) as fh:

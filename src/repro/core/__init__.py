@@ -43,12 +43,37 @@ cache and the same report numerics:
     ``SimConfig(        :mod:`repro.kernels.flit_sim` kernels —    dense
     engine="pallas")``  ONE launch per chunk, state on-chip;       grids
                         interpret-mode (traced to XLA) off-TPU
+    ``SimConfig(        trace-scan cores for the ``trace`` axis:   serving
+    trace_cycles=C)``   C cycles per phase, state carried across   traces
+                        phase boundaries; ``None`` = full horizon
+                        per phase (single phase bit-identical to
+                        the static cell)
     ==================  =========================================  =======
+
+Time-varying serving traffic rides the ``trace`` axis
+(:mod:`repro.traces`): a :class:`~repro.traces.trace.TrafficTrace` is a
+sequence of (duration, read_fraction, backlog) phases — recorded live
+from :class:`repro.serve.engine.ServingEngine` via
+:class:`~repro.traces.recorder.TraceRecorder`, or synthesized from model
+config shapes alone (no weights) by
+:func:`~repro.traces.synthetic.synthetic_serving_trace`.  Trace cells
+run through dedicated trace-scan simulator cores that CARRY queue and
+credit state across phase boundaries (a warm phase 2 differs from a cold
+steady-state run — that is the point), report duration-weighted
+``trace_efficiency`` / per-phase ``trace_phase_efficiency`` /
+PHY-absolute ``trace_bandwidth_gbs``, and share the same shape-keyed
+compile cache (trace VALUES are traced, so same-shaped trace sets reuse
+warm executables).  A single-phase trace is bit-identical to the static
+(mix, backlog) cell.  :meth:`DesignSpace.serving_frontier` maps the
+winning protocol per (model, QPS) point to its catalog approach — the
+``serving_frontier`` section of the CI design-space artifact.
 
 ``flitsim.last_run_info()`` reports per-family telemetry for the last
 adaptive run: ``engine``, ``launches``, ``cycles_run``, ``elapsed_s``,
 ``cycles_per_sec_per_cell``, and the detected-period histogram when the
-asymmetric periodic detector closed the run.
+asymmetric periodic detector closed the run.  Trace-scan runs report
+under ``<family>.trace`` with ``phases``, ``cycles_per_phase``, and
+``state_carry_depth`` instead.
 
 Legacy front-ends (``flitsim.sweep*``, ``memsys.catalog_grid`` /
 ``approach_grid``, ``selector.rank_grid``,

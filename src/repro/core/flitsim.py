@@ -473,6 +473,98 @@ def _pipelining_grid(ks, ucie_line_uis, device_line_uis, *, max_k: int,
     return over_kud(ks, ucie_line_uis, device_line_uis)
 
 
+# -- trace-scan cores (the DesignSpace ``trace`` axis) ------------------------
+#
+# A trace is a sequence of (read_fraction, backlog) phases; the trace-scan
+# cores run the phases BACK TO BACK through the shared single-cycle step
+# kernels, carrying the queue/credit state across every phase boundary —
+# a write-buffer filled by a prefill burst drains INTO the next decode
+# phase instead of being reset, so backlog transients are simulated, not
+# assumed away.  Every phase runs the same static ``cycles`` count (one
+# executable per (grid shape, phase count, cycles)); phase DURATIONS are
+# aggregation weights applied host-side by the design space.
+#
+# Accounting resets per phase; phase 0 keeps the fixed engine's quarter
+# warm-up (so a SINGLE-phase trace is bit-identical to the fixed static
+# cell) and later phases count every cycle — their "warm-up" is the real
+# carried transient.
+
+
+def _symmetric_trace_point(p, xs, ys, bls, *, n_phases: int, cycles: int):
+    """Per-phase efficiency ``[N]`` of one symmetric cell over a phase
+    sequence ``xs / ys / bls`` ``[N]``, queue/credit state carried."""
+
+    def phase(core, inp):
+        x, yv, b, thresh = inp
+        kernel = _symmetric_stepfn(p, x, yv, b)
+
+        def step(carry, _):
+            c, data_slots, warm_slots, warm = carry
+            c, new_data = kernel(c)
+            warm = warm + 1
+            is_warm = (warm > thresh).astype(jnp.float32)
+            data_slots = data_slots + new_data * is_warm
+            warm_slots = warm_slots + is_warm
+            return (c, data_slots, warm_slots, warm), None
+
+        init = (core, jnp.zeros((), jnp.float32),
+                jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32))
+        (core, data_slots, warm_slots, _), _ = jax.lax.scan(
+            step, init, None, length=cycles)
+        data_bits = data_slots * 128.0
+        cap_bits = 2.0 * warm_slots * _f32(p.flit_bits)
+        return core, data_bits / cap_bits
+
+    threshs = jnp.concatenate([
+        jnp.full((1,), cycles // 4, jnp.int32),
+        jnp.zeros((n_phases - 1,), jnp.int32)])
+    _, effs = jax.lax.scan(phase, _symmetric_core_init(),
+                           (xs, ys, bls, threshs))
+    return effs
+
+
+def _symmetric_trace_grid(pstack, xs, ys, bls, *, n_phases: int,
+                          cycles: int):
+    """[P params] x [T traces] -> per-phase efficiency [P, T, N]."""
+    point = lambda p, xr, yr, br: _symmetric_trace_point(
+        p, xr, yr, br, n_phases=n_phases, cycles=cycles)
+    over_t = jax.vmap(point, in_axes=(None, 0, 0, 0))
+    return jax.vmap(over_t, in_axes=(0, None, None, None))(pstack, xs, ys,
+                                                           bls)
+
+
+def _asymmetric_trace_point(p, xs, ys, *, n_phases: int, cycles: int):
+    """Per-phase efficiency ``[N]`` of one asymmetric cell: lane clocks
+    and the read/write credit accumulator carry across phases; each
+    phase's efficiency comes from its lane-time DELTA."""
+
+    def phase(carry, inp):
+        core, t_prev = carry
+        x, yv = inp
+        kernel = _asymmetric_stepfn(p, x, yv)
+
+        def step(c, _):
+            return kernel(c), None
+
+        core, _ = jax.lax.scan(step, core, None, length=cycles)
+        t_r, t_w, t_c, _ = core
+        t_total = jnp.maximum(jnp.maximum(t_r, t_w), t_c)
+        eff = 512.0 * cycles / (p.total_lanes * (t_total - t_prev))
+        return (core, t_total), eff
+
+    init = ((jnp.zeros((), jnp.float32),) * 4, jnp.zeros((), jnp.float32))
+    _, effs = jax.lax.scan(phase, init, (xs, ys))
+    return effs
+
+
+def _asymmetric_trace_grid(pstack, xs, ys, *, n_phases: int, cycles: int):
+    """[P params] x [T traces] -> per-phase efficiency [P, T, N]."""
+    point = lambda p, xr, yr: _asymmetric_trace_point(
+        p, xr, yr, n_phases=n_phases, cycles=cycles)
+    over_t = jax.vmap(point, in_axes=(None, 0, 0))
+    return jax.vmap(over_t, in_axes=(0, None, None))(pstack, xs, ys)
+
+
 # -- convergence-adaptive chunked cores (SimConfig mode="adaptive") -----------
 #
 # Each adaptive core is a ``lax.while_loop`` over chunks of C cycles (inner
@@ -845,6 +937,11 @@ def last_run_info() -> Dict[str, Dict[str, Any]]:
     out: Dict[str, Dict[str, Any]] = {}
     for fam, info in _LAST_RUN_INFO.items():
         d = {k: v for k, v in info.items() if not k.startswith("_")}
+        if d.get("mode") == "trace":
+            # trace-scan runs (``family.trace`` keys) report phase counts
+            # and state-carry depth directly; no convergence histogram
+            out[fam] = d
+            continue
         chunk = d["chunk"]
         conv_at = np.asarray(info["_conv_at"]).reshape(-1)
         d["cycles_run"] = int(np.asarray(info["_k_exit"])) * chunk
@@ -877,6 +974,22 @@ def _record_adaptive(family: str, horizon: int, chunk: int, k_exit,
         "stragglers": int(stragglers), "engine": engine,
         "launches": int(launches), "elapsed_s": elapsed_s,
         "_k_exit": k_exit, "_conv_at": conv_at, "_periods": periods,
+    }
+
+
+def _record_trace(family: str, phases: int, cycles: int,
+                  cells: int) -> None:
+    """Telemetry for a trace-scan run, keyed ``family + ".trace"`` so it
+    never clobbers the same family's adaptive record: per-phase cycle
+    count, total cycles, grid cells simulated, and the state-carry depth
+    (cycles whose initial state came from a PREVIOUS phase)."""
+    _LAST_RUN_INFO[family + ".trace"] = {
+        "mode": "trace", "phases": int(phases),
+        "cycles_per_phase": int(cycles),
+        "cycles_run": int(phases) * int(cycles),
+        "trace_cells": int(cells),
+        "state_carry_depth": (int(phases) - 1) * int(cycles),
+        "engine": "xla",
     }
 
 
@@ -1306,6 +1419,37 @@ def _run_pipelining(ks, ucie_line_uis, device_line_uis, max_k: int,
     return rep
 
 
+def _run_symmetric_trace(pstack, xs, ys, bls, cycles: int,
+                         sim: SimConfig):
+    """Trace-scan runner: ``xs/ys/bls`` are ``[T, N]`` phase grids;
+    returns per-phase efficiency ``[P, T, N]``.  Shapes (not phase data)
+    key the cache, so alternating same-shaped traces stays warm."""
+    P = pstack.flit_bits.shape[0]
+    T, N = xs.shape
+    fn = cached_program(
+        "flitsim.symmetric", ("trace", P, T, N, cycles) + sim.key(),
+        functools.partial(_symmetric_trace_grid, n_phases=N,
+                          cycles=cycles),
+        (pstack, xs, ys, bls))
+    rep = fn(pstack, xs, ys, bls)
+    _record_trace("flitsim.symmetric", N, cycles, P * T)
+    return rep
+
+
+def _run_asymmetric_trace(pstack, xs, ys, cycles: int, sim: SimConfig):
+    """Trace-scan runner for the asymmetric family: ``[P, T, N]``."""
+    P = pstack.total_lanes.shape[0]
+    T, N = xs.shape
+    fn = cached_program(
+        "flitsim.asymmetric", ("trace", P, T, N, cycles) + sim.key(),
+        functools.partial(_asymmetric_trace_grid, n_phases=N,
+                          cycles=cycles),
+        (pstack, xs, ys))
+    rep = fn(pstack, xs, ys)
+    _record_trace("flitsim.asymmetric", N, cycles, P * T)
+    return rep
+
+
 # -- engine entry point (what DesignSpace lowers onto) ------------------------
 
 
@@ -1380,6 +1524,83 @@ def simulate_grid(protocols: Sequence[str], x, y, backlogs, *,
             per_key[k] = jnp.broadcast_to(grid[:, i, None, :],
                                           (n_q, n_b, n_m))
     return jnp.stack([per_key[k] for k in keys], axis=1)   # [Q, P, B, M]
+
+
+def simulate_trace_grid(protocols: Sequence[str], xs, ys, backlogs, *,
+                        perturbations: Optional[
+                            Sequence[Mapping[str, float]]] = None,
+                        n_flits: int = 2048, n_accesses: int = 4096,
+                        sim: Optional[SimConfig] = None) -> jnp.ndarray:
+    """Evaluate ``T`` traffic traces of ``N`` phases each through the
+    trace-scan cores: per-PHASE efficiency ``[Q, P, T, N]``.
+
+    ``xs`` / ``ys`` / ``backlogs`` are ``[T, N]`` phase grids (read /
+    write mix percentages and queue backlog per phase).  Queue and credit
+    state carries across phase boundaries inside each (protocol, trace)
+    cell, so phase ``n``'s efficiency includes the transient inherited
+    from phase ``n-1``; a single-phase trace is bit-identical to the
+    fixed static cell at the same (mix, backlog).  Asymmetric protocols
+    ignore the backlog grid, exactly as in :func:`simulate_grid`.
+
+    Every phase runs ``sim.trace_cycles`` cycles (default: the family's
+    static horizon — ``n_flits`` symmetric, ``n_accesses`` asymmetric).
+    Phase DURATIONS are not consumed here: the design space applies them
+    as aggregation weights over the returned per-phase grid.
+    """
+    sim = sim if sim is not None else FIXED_SIM
+    keys = tuple(protocols)
+    unknown = sorted(k for k in keys
+                     if k not in SYMMETRIC_PARAMS
+                     and k not in ASYMMETRIC_PARAMS)
+    if unknown:
+        raise ValueError(f"unknown protocol keys {unknown}; "
+                         f"choose from {sorted(SIMULATORS)}")
+    perts = [dict(p) for p in (perturbations or [{}])]
+    active_fields: set = set()
+    if any(k in SYMMETRIC_PARAMS for k in keys):
+        active_fields |= {f.name
+                          for f in dataclasses.fields(SymmetricFlitParams)}
+    if any(k in ASYMMETRIC_PARAMS for k in keys):
+        active_fields |= {f.name
+                          for f in dataclasses.fields(AsymmetricLaneParams)}
+    for p in perts:
+        _check_perturbation(p)
+        if p and not set(p) & active_fields:
+            raise ValueError(
+                f"perturbation {p} applies to no parameter of the selected "
+                f"protocols {keys}; applicable fields: "
+                f"{sorted(active_fields)}")
+    xs = _f32(np.asarray(xs))
+    ys = _f32(np.asarray(ys))
+    bls = _f32(np.asarray(backlogs))
+    if xs.ndim != 2 or xs.shape != ys.shape or xs.shape != bls.shape:
+        raise ValueError(
+            f"trace phase grids must share one [T, N] shape; got "
+            f"xs {xs.shape}, ys {ys.shape}, backlogs {bls.shape}")
+    n_q, (n_t, n_p) = len(perts), xs.shape
+
+    per_key: Dict[str, jnp.ndarray] = {}            # key -> [Q, T, N]
+    sym_keys = [k for k in keys if k in SYMMETRIC_PARAMS]
+    if sym_keys:
+        cycles = int(sim.trace_cycles or n_flits)
+        pstack = SymmetricFlitParams.stack(
+            [SYMMETRIC_PARAMS[k].perturbed(p) for p in perts
+             for k in sym_keys])
+        grid = _run_symmetric_trace(pstack, xs, ys, bls, cycles, sim)
+        grid = grid.reshape((n_q, len(sym_keys), n_t, n_p))
+        for i, k in enumerate(sym_keys):
+            per_key[k] = grid[:, i]
+    asym_keys = [k for k in keys if k in ASYMMETRIC_PARAMS]
+    if asym_keys:
+        cycles = int(sim.trace_cycles or n_accesses)
+        pstack = AsymmetricLaneParams.stack(
+            [ASYMMETRIC_PARAMS[k].perturbed(p) for p in perts
+             for k in asym_keys])
+        grid = _run_asymmetric_trace(pstack, xs, ys, cycles, sim)
+        grid = grid.reshape((n_q, len(asym_keys), n_t, n_p))
+        for i, k in enumerate(asym_keys):
+            per_key[k] = grid[:, i]
+    return jnp.stack([per_key[k] for k in keys], axis=1)   # [Q, P, T, N]
 
 
 # -- scalar entry points (thin wrappers over a [1, 1, 1] grid) ----------------

@@ -147,6 +147,10 @@ class SimConfig:
     tol: float = 1e-3
     max_cycles: Optional[int] = None
     engine: str = "xla"
+    #: cycles simulated per trace PHASE (``trace``-axis evaluations only);
+    #: ``None`` uses the family's static horizon, which makes a default
+    #: single-phase trace bit-identical to its static (mix, backlog) cell
+    trace_cycles: Optional[int] = None
 
     def __post_init__(self):
         if self.mode not in ("fixed", "adaptive"):
@@ -171,6 +175,9 @@ class SimConfig:
         if self.max_cycles is not None and int(self.max_cycles) < 1:
             raise ValueError(f"SimConfig.max_cycles must be >= 1, got "
                              f"{self.max_cycles}")
+        if self.trace_cycles is not None and int(self.trace_cycles) < 8:
+            raise ValueError(f"SimConfig.trace_cycles must be >= 8, got "
+                             f"{self.trace_cycles}")
 
     def horizon(self, default: int) -> int:
         """Resolved horizon for a family whose fixed length is ``default``.
@@ -184,11 +191,16 @@ class SimConfig:
 
     def key(self) -> Tuple:
         """Static cache-key component — distinct configs get distinct
-        compiled executables; re-using a config re-uses its executable."""
+        compiled executables; re-using a config re-uses its executable.
+
+        ``trace_cycles`` appends only when set, keeping the default keys
+        (and every golden pinned on them) unchanged."""
+        trace = () if self.trace_cycles is None \
+            else (int(self.trace_cycles),)
         if self.mode == "fixed":
-            return ("fixed",)
+            return ("fixed",) + trace
         return ("adaptive", int(self.chunk), int(self.unroll),
-                float(self.tol), self.max_cycles, self.engine)
+                float(self.tol), self.max_cycles, self.engine) + trace
 
 
 #: the default config: bit-identical fixed-horizon simulation
@@ -274,8 +286,8 @@ OWN_MIX = "own"
 #: ``backlog``)
 AXIS_ORDER: Tuple[str, ...] = (
     "catalog_param", "phy", "protocol_param", "protocol", "backlog",
-    "workload_config", "mix", "read_fraction", "shoreline_mm", "k",
-    "ucie_line_ui", "device_line_ui")
+    "trace", "workload_config", "mix", "read_fraction", "shoreline_mm",
+    "k", "ucie_line_ui", "device_line_ui")
 
 _MIX_LIKE = ("mix", "read_fraction")
 
@@ -405,6 +417,18 @@ def axis(name: str, values: Sequence[Any],
     elif name == "protocol":
         norm = [str(v) for v in vals]
         labs = list(norm)
+    elif name == "trace":
+        from repro.traces.trace import TrafficTrace, pad_traces
+        bad = [v for v in vals if not isinstance(v, TrafficTrace)]
+        if bad:
+            raise ValueError(f"axis 'trace' values must be TrafficTrace "
+                             f"instances, got {bad}")
+        # pad to one shared phase count so the whole axis runs as ONE
+        # [T, N] grid through one compiled executable
+        norm = list(pad_traces(vals))
+        labs = [t.name for t in norm]
+        if len(set(labs)) != len(labs):
+            raise ValueError(f"duplicate trace names on the axis: {labs}")
     elif name == "protocol_param":
         norm = [_as_perturbation(v) for v in vals]
         labs = [lab for lab, _ in norm]
@@ -443,6 +467,13 @@ class AxisSet:
         if "mix" in names and "read_fraction" in names:
             raise ValueError("axes 'mix' and 'read_fraction' are mutually "
                              "exclusive — both name the traffic-mix axis")
+        if "trace" in names:
+            clash = sorted(set(names) & {"backlog", "mix", "read_fraction",
+                                         "workload_config"})
+            if clash:
+                raise ValueError(
+                    f"axis 'trace' is exclusive with {clash}: a trace's "
+                    "phases already carry the mix and backlog trajectory")
         self._axes: Dict[str, Axis] = {
             name: next(a for a in flat if a.name == name)
             for name in sorted(names, key=AXIS_ORDER.index)}
@@ -900,6 +931,16 @@ APPROACH_METRICS: Tuple[str, ...] = (
     "linear_density_gbs_mm", "areal_density_gbs_mm2", "approach_pj_per_bit")
 #: Fig-13 pipelining metric (dims: k [x ucie_line_ui] [x device_line_ui])
 PIPELINE_METRICS: Tuple[str, ...] = ("utilization",)
+#: trace-scan metrics (need a ``trace`` axis): duration-weighted
+#: efficiency over the phase sequence (dims: [pert x] protocol x trace)
+#: and the raw per-phase grid (... x phase) with state carried across
+#: phase boundaries
+TRACE_METRICS: Tuple[str, ...] = ("trace_efficiency",
+                                  "trace_phase_efficiency")
+#: PHY-absolute trace metric (needs a ``phy`` axis or
+#: ``DesignSpace(phy=...)``): duration-weighted efficiency x raw link
+#: bandwidth -> delivered GB/s over the serving trace
+TRACE_PHY_METRICS: Tuple[str, ...] = ("trace_bandwidth_gbs",)
 
 
 class DesignSpace:
@@ -1015,13 +1056,17 @@ class DesignSpace:
                 out += list(SIM_METRICS)
                 if "phy" in names or self.phy is not None:
                     out += list(SIM_PHY_METRICS)
+        if "trace" in names:
+            out += list(TRACE_METRICS)
+            if "phy" in names or self.phy is not None:
+                out += list(TRACE_PHY_METRICS)
         if "k" in names:
             out += list(PIPELINE_METRICS)
         if not out:
             raise ValueError(
                 f"no metric is evaluable over axes {names}; add a traffic "
-                "axis (mix/read_fraction/workload_config) or a pipelining "
-                "axis (k)")
+                "axis (mix/read_fraction/workload_config), a trace axis, "
+                "or a pipelining axis (k)")
         return tuple(out)
 
     # -- evaluation ---------------------------------------------------------
@@ -1039,7 +1084,8 @@ class DesignSpace:
         wanted = tuple(metrics) if metrics is not None else \
             self._default_metrics()
         known = (ANALYTIC_METRICS + SYSTEM_METRICS + SIM_METRICS
-                 + SIM_PHY_METRICS + APPROACH_METRICS + PIPELINE_METRICS)
+                 + SIM_PHY_METRICS + APPROACH_METRICS + PIPELINE_METRICS
+                 + TRACE_METRICS + TRACE_PHY_METRICS)
         unknown = [m for m in wanted if m not in known]
         if unknown:
             raise ValueError(f"unknown metrics {unknown}; choose from "
@@ -1051,6 +1097,8 @@ class DesignSpace:
             arrays.update(self._eval_approaches(wanted))
         if any(m in wanted for m in SIM_METRICS + SIM_PHY_METRICS):
             arrays.update(self._eval_sim(wanted, cfg))
+        if any(m in wanted for m in TRACE_METRICS + TRACE_PHY_METRICS):
+            arrays.update(self._eval_trace(wanted, cfg))
         if any(m in wanted for m in PIPELINE_METRICS):
             arrays.update(self._eval_pipelining(wanted, cfg))
         return SpaceResult(axes=self.axes, arrays=arrays, sim=cfg)
@@ -1262,6 +1310,76 @@ class DesignSpace:
             out["analytic_efficiency"] = SpaceArray(adims, acoords, an)
         return out
 
+    def _eval_trace(self, wanted, sim: SimConfig) -> Dict[str, SpaceArray]:
+        from repro.core import flitsim
+        tr_ax = self.axes.get("trace")
+        if tr_ax is None:
+            raise ValueError("trace metrics ('trace_efficiency', ...) "
+                             "need a 'trace' axis")
+        keys = self._sim_protocols()
+        traces = tr_ax.values           # axis() padded them to a common N
+        xs = np.asarray([[100.0 * r for r in t.read_fractions]
+                         for t in traces], np.float32)
+        ys = 100.0 - xs
+        bls = np.asarray([t.backlogs for t in traces], np.float32)
+        pert_ax = self.axes.get("protocol_param")
+        perts = ([dict(p) for _, p in pert_ax.values]
+                 if pert_ax is not None else [{}])
+        eff = np.asarray(flitsim.simulate_trace_grid(
+            keys, xs, ys, bls, perturbations=perts,
+            n_flits=self.n_flits, n_accesses=self.n_accesses, sim=sim))
+        # eff: per-phase [Q, P, T, N]; the duration-weighted aggregate is
+        # computed host-side in f64 with per-trace normalized weights, so
+        # a single-phase trace (w == d/d == 1.0 exactly) stays
+        # bit-identical to its static cell through the f32 round-trip
+        d = np.asarray([t.durations for t in traces], np.float64)
+        w = d / d.sum(axis=1, keepdims=True)                    # [T, N]
+        agg = np.einsum("qptn,tn->qpt", eff.astype(np.float64),
+                        w).astype(np.float32)
+        dims: List[str] = ["protocol_param", "protocol", "trace"]
+        coords: List[Tuple] = [
+            pert_ax.labels if pert_ax is not None else ("baseline",),
+            keys, tr_ax.labels]
+        if pert_ax is None:
+            eff, agg = eff[0], agg[0]
+            dims, coords = dims[1:], coords[1:]
+        out: Dict[str, SpaceArray] = {}
+        if "trace_efficiency" in wanted:
+            out["trace_efficiency"] = SpaceArray(
+                tuple(dims), tuple(coords), agg)
+        if "trace_phase_efficiency" in wanted:
+            out["trace_phase_efficiency"] = SpaceArray(
+                tuple(dims) + ("phase",),
+                tuple(coords) + (tuple(range(eff.shape[-1])),), eff)
+        if "trace_bandwidth_gbs" in wanted:
+            phy_ax = self.axes.get("phy")
+            if phy_ax is not None:
+                phys = list(phy_ax.values)
+            elif self.phy is not None:
+                phys = [self.phy]
+            else:
+                raise ValueError(
+                    "the 'trace_bandwidth_gbs' metric threads the PHY's "
+                    "raw link bandwidth into the trace-scan efficiency — "
+                    "add a 'phy' axis or pass DesignSpace(phy=...)")
+            raw = np.asarray([p.raw_bandwidth_gbs for p in phys],
+                             np.float32)
+            ax_p = dims.index("protocol")
+            v = (np.expand_dims(np.asarray(agg), ax_p + 1)
+                 * raw.reshape((len(raw),)
+                               + (1,) * (np.ndim(agg) - ax_p - 1)))
+            bdims = tuple(dims[:ax_p + 1]) + ("phy",) \
+                + tuple(dims[ax_p + 1:])
+            bcoords = tuple(coords[:ax_p + 1]) \
+                + (tuple(p.name for p in phys),) \
+                + tuple(coords[ax_p + 1:])
+            if phy_ax is None:          # DesignSpace(phy=...): no phy dim
+                v = np.take(v, 0, axis=ax_p + 1)
+                bdims = bdims[:ax_p + 1] + bdims[ax_p + 2:]
+                bcoords = bcoords[:ax_p + 1] + bcoords[ax_p + 2:]
+            out["trace_bandwidth_gbs"] = SpaceArray(bdims, bcoords, v)
+        return out
+
     def _eval_pipelining(self, wanted, sim: SimConfig
                          ) -> Dict[str, SpaceArray]:
         from repro.core import flitsim
@@ -1291,6 +1409,25 @@ class DesignSpace:
             return {}
         return {"utilization": SpaceArray(tuple(dims), tuple(coords),
                                           util)}
+
+    # -- serving frontier ---------------------------------------------------
+
+    @staticmethod
+    def serving_frontier(models=None, qps_points=None,
+                         **kwargs) -> Dict[str, Any]:
+        """Per-(model, QPS) serving frontier: synthetic serving traces
+        evaluated through the ``trace`` axis, winners mapped to catalog
+        memory approaches.  Delegates to
+        :func:`repro.traces.frontier.serving_frontier` (see there for the
+        knobs); this is the entry point ``dryrun --all`` and the explorer
+        ``--serving`` mode persist as the ``serving_frontier`` section of
+        ``design_space.json``."""
+        from repro.traces.frontier import (DEFAULT_MODELS, DEFAULT_QPS,
+                                           serving_frontier)
+        return serving_frontier(
+            models if models is not None else DEFAULT_MODELS,
+            qps_points if qps_points is not None else DEFAULT_QPS,
+            **kwargs)
 
 
 # =========================================================================

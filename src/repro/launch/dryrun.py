@@ -279,8 +279,12 @@ def main():
             # analytic-vs-simulated frontier alongside the per-workload
             # bridge, so downstream consumers see where the cycle-level
             # simulation overrules the closed forms.
-            from repro.core.space import joint_frontier
+            from repro.core.space import DesignSpace, joint_frontier
             ds["joint_frontier"] = joint_frontier()
+            # the serving-trace frontier rides along: which memory
+            # approach wins at which (model, QPS) point, from synthetic
+            # serving traces evaluated through the trace axis
+            ds["serving_frontier"] = DesignSpace.serving_frontier()
             os.makedirs(args.out, exist_ok=True)
             with open(os.path.join(args.out, analysis.DESIGN_SPACE_JSON),
                       "w") as f:

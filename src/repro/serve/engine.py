@@ -8,6 +8,12 @@ active slots.  Completed sequences (EOS or max tokens) free their slot.
 Per-slot absolute positions let sequences of different lengths share one
 decode batch (the decode path takes positions [B, 1]).  KV caches live
 packed per slot in one [*, B, max_len, ...] buffer set.
+
+An optional ``recorder`` (``repro.traces.TraceRecorder``) observes every
+prefill, decode batch, and tick boundary, turning a serving run into a
+phase-resolved memory-traffic trace for the design space's ``trace``
+axis.  The hooks see token counts and context lengths only, so recording
+adds no device work to the serving hot path.
 """
 from __future__ import annotations
 
@@ -37,13 +43,14 @@ class Request:
 class ServingEngine:
     def __init__(self, model: Model, params, ctx: ShardingCtx,
                  batch_slots: int = 4, max_len: int = 256,
-                 greedy: bool = True):
+                 greedy: bool = True, recorder: Any = None):
         self.model = model
         self.params = params
         self.ctx = ctx
         self.b = batch_slots
         self.max_len = max_len
         self.greedy = greedy
+        self.recorder = recorder
         cfg = model.cfg
 
         self.caches = model.init_decode_caches(batch_slots, max_len)
@@ -57,6 +64,15 @@ class ServingEngine:
 
     # -- request lifecycle ------------------------------------------------
     def submit(self, req: Request):
+        # a prompt at max_len - 1 leaves no room for even one decoded
+        # token; past max_len the prefill would overflow the packed KV
+        # slot and silently corrupt whatever sequence shares the buffer
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} "
+                f"does not fit the engine's max_len={self.max_len} KV "
+                f"slots (need prompt length < max_len); truncate the "
+                f"prompt or build the engine with a larger max_len")
         self.queue.append(req)
 
     def _prefill_into_slot(self, slot: int, req: Request):
@@ -78,6 +94,15 @@ class ServingEngine:
         self.active[slot] = req
         self.positions[slot] = len(req.prompt)
         self.last_token[slot] = tok
+        if self.recorder is not None:
+            self.recorder.on_prefill(len(req.prompt))
+
+    def _free_slot(self, slot: int):
+        """Release a slot and reset its scalar state — stale positions /
+        last_token must never leak into the next request admitted here."""
+        self.active[slot] = None
+        self.positions[slot] = 0
+        self.last_token[slot] = 0
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.active) if r is None]
@@ -93,7 +118,12 @@ class ServingEngine:
 
         active_idx = [i for i, r in enumerate(self.active) if r is not None]
         if not active_idx:
+            if self.recorder is not None:
+                self.recorder.on_tick(len(self.queue), 0)
             return 0
+        if self.recorder is not None:
+            self.recorder.on_decode([int(self.positions[i])
+                                     for i in active_idx])
 
         tokens = jnp.asarray(self.last_token, jnp.int32)[:, None]
         positions = jnp.asarray(self.positions, jnp.int32)[:, None]
@@ -112,7 +142,11 @@ class ServingEngine:
                     or self.positions[i] >= self.max_len - 1):
                 req.done = True
                 self.finished.append(req)
-                self.active[i] = None
+                self._free_slot(i)
+        if self.recorder is not None:
+            self.recorder.on_tick(
+                len(self.queue),
+                sum(r is not None for r in self.active))
         return len(active_idx)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:

@@ -1,0 +1,41 @@
+"""repro.traces — serving-trace traffic: time-varying memory load.
+
+The subsystem that closes the loop between the LLM serving stack and the
+flit simulators.  Per-tick traffic is recorded from live
+``ServingEngine`` runs (:class:`TraceRecorder`) or replayed synthetically
+from config shapes alone (:func:`synthetic_serving_trace` — no weights,
+the tier-1 path), compiled into :class:`TrafficTrace` phase sequences,
+and evaluated through the design space's ``trace`` axis, where the
+simulators carry queue/credit state across phase boundaries.
+:func:`serving_frontier` is the headline report: the winning memory
+approach per (model, QPS) point.
+
+See ``src/repro/traces/README.md`` for the phase format, the arrival
+processes, and the state-carry semantics.
+"""
+from repro.traces.arrival import (bursty_arrivals, diurnal_arrivals,
+                                  diurnal_rate, poisson_arrivals,
+                                  rate_from_users)
+from repro.traces.frontier import (DEFAULT_MODELS, DEFAULT_QPS,
+                                   serving_frontier)
+from repro.traces.model_traffic import ModelTrafficSpec
+from repro.traces.recorder import TraceRecorder
+from repro.traces.synthetic import synthetic_serving_trace
+from repro.traces.trace import (MIN_BACKLOG, TrafficTrace, pad_traces)
+
+__all__ = [
+    "MIN_BACKLOG",
+    "DEFAULT_MODELS",
+    "DEFAULT_QPS",
+    "ModelTrafficSpec",
+    "TraceRecorder",
+    "TrafficTrace",
+    "bursty_arrivals",
+    "diurnal_arrivals",
+    "diurnal_rate",
+    "pad_traces",
+    "poisson_arrivals",
+    "rate_from_users",
+    "serving_frontier",
+    "synthetic_serving_trace",
+]

@@ -64,6 +64,43 @@ class TestServingEngine:
         done = eng.run_until_drained()
         assert len(done[0].generated) < 50
 
+    def test_rejects_prompt_longer_than_max_len(self, setup):
+        """A prompt that cannot fit the packed KV slot must be rejected
+        at submit() with a clear error, not silently corrupt the slot."""
+        cfg, model, params = setup
+        eng = ServingEngine(model, params, CTX, batch_slots=2, max_len=16)
+        with pytest.raises(ValueError, match="max_len"):
+            eng.submit(Request(rid=0, prompt=np.arange(16) % 50,
+                               max_new_tokens=2))
+        with pytest.raises(ValueError, match="max_len"):
+            eng.submit(Request(rid=1, prompt=np.arange(40) % 50,
+                               max_new_tokens=2))
+        # the rejected requests never entered the queue; the engine still
+        # serves in-range work untouched
+        assert not eng.queue
+        eng.submit(Request(rid=2, prompt=np.arange(8) % 50,
+                           max_new_tokens=3))
+        assert [r.rid for r in eng.run_until_drained()] == [2]
+
+    def test_freed_slot_state_fully_reset(self, setup):
+        """Freeing a slot must clear its position and last token — reuse
+        of a slot must not inherit the previous occupant's state, and a
+        recycled slot must decode exactly what a fresh engine decodes."""
+        cfg, model, params = setup
+        eng = ServingEngine(model, params, CTX, batch_slots=1, max_len=64)
+        eng.submit(Request(rid=0, prompt=(np.arange(9) * 5) % 50,
+                           max_new_tokens=7))
+        eng.run_until_drained()
+        assert eng.positions[0] == 0
+        assert eng.last_token[0] == 0
+
+        probe = np.arange(4) % 50
+        ref = ServingEngine(model, params, CTX, batch_slots=1, max_len=64)
+        ref.submit(Request(rid=1, prompt=probe, max_new_tokens=6))
+        expect = ref.run_until_drained()[0].generated
+        eng.submit(Request(rid=2, prompt=probe, max_new_tokens=6))
+        assert eng.run_until_drained()[-1].generated == expect
+
     def test_ssm_engine_round(self):
         cfg = get("mamba2-2.7b").reduced()
         model = build(cfg)

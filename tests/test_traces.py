@@ -1,0 +1,367 @@
+"""Serving-trace subsystem tests: trace compilation, arrival processes,
+the ``trace`` axis, trace-scan numerics (state carry + bit-identity),
+compile-cache behavior, telemetry, and the serving frontier."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import flitsim
+from repro.core.space import (AXIS_ORDER, FIXED_SIM, AxisSet, DesignSpace,
+                              SimConfig, axis)
+from repro.lint.runtime import no_retrace
+from repro.traces import (MIN_BACKLOG, ModelTrafficSpec, TraceRecorder,
+                          TrafficTrace, bursty_arrivals, diurnal_arrivals,
+                          pad_traces, poisson_arrivals, serving_frontier,
+                          synthetic_serving_trace)
+
+#: small horizons keep every trace-scan test in the milliseconds
+FAST = dict(n_flits=128, n_accesses=128)
+FAST_TRACE = SimConfig(trace_cycles=128)
+
+
+class TestTrafficTrace:
+    def test_phase_validation(self):
+        with pytest.raises(ValueError, match="length"):
+            TrafficTrace("t", (1.0, 1.0), (0.5,), (4.0, 4.0))
+        with pytest.raises(ValueError, match="positive sum"):
+            TrafficTrace("t", (0.0,), (0.5,), (4.0,))
+        with pytest.raises(ValueError, match=r"outside \[0, 1\]"):
+            TrafficTrace("t", (1.0,), (1.5,), (4.0,))
+        with pytest.raises(ValueError, match="backlog"):
+            TrafficTrace("t", (1.0,), (0.5,), (0.0,))
+
+    def test_padded_preserves_aggregate_weighting(self):
+        t = TrafficTrace("t", (3.0, 1.0), (0.8, 0.2), (4.0, 32.0))
+        p = t.padded(5)
+        assert p.n_phases == 5
+        assert p.durations == (3.0, 1.0, 0.0, 0.0, 0.0)
+        assert p.read_fractions[2:] == (0.2,) * 3
+        assert t.padded(2) is t
+        with pytest.raises(ValueError, match="cannot pad"):
+            t.padded(1)
+
+    def test_from_ticks_compiles_byte_weighted_phases(self):
+        # 4 ticks -> 2 phases: all-read then all-write, backlog ramps
+        tr = TrafficTrace.from_ticks(
+            "t", read_bytes=[10, 10, 0, 0], write_bytes=[0, 0, 10, 10],
+            backlogs=[2, 4, 6, 8], n_phases=2)
+        assert tr.durations == (2.0, 2.0)
+        assert tr.read_fractions == (1.0, 0.0)
+        assert tr.backlogs == (3.0, 7.0)
+
+    def test_from_ticks_idle_segment_inherits_global_share(self):
+        tr = TrafficTrace.from_ticks(
+            "t", read_bytes=[30, 0], write_bytes=[10, 0],
+            backlogs=[4, 0], n_phases=2)
+        assert tr.read_fractions[1] == pytest.approx(0.75)
+        assert tr.backlogs[1] == MIN_BACKLOG
+        with pytest.raises(ValueError, match="no bytes"):
+            TrafficTrace.from_ticks("t", [0.0], [0.0], [1.0])
+
+    def test_pad_traces_to_common_phase_count(self):
+        a = TrafficTrace.steady("a", 0.5, 4.0)
+        b = TrafficTrace("b", (1.0, 1.0, 1.0), (0.9, 0.5, 0.1),
+                         (2.0, 8.0, 32.0))
+        pa, pb = pad_traces([a, b])
+        assert pa.n_phases == pb.n_phases == 3
+        assert pb is b
+
+    def test_trace_is_a_pytree(self):
+        t = TrafficTrace("t", (1.0, 2.0), (0.5, 0.25), (4.0, 8.0))
+        leaves, treedef = jax.tree_util.tree_flatten(t)
+        assert len(leaves) == 6
+        assert jax.tree_util.tree_unflatten(treedef, leaves) == t
+
+
+class TestArrivals:
+    def test_processes_are_deterministic_in_seed(self):
+        for fn in (poisson_arrivals, diurnal_arrivals, bursty_arrivals):
+            a = fn(2.0, 64, seed=3)
+            b = fn(2.0, 64, seed=3)
+            c = fn(2.0, 64, seed=4)
+            assert a.shape == (64,) and a.dtype == np.int64
+            assert np.array_equal(a, b)
+            assert not np.array_equal(a, c)
+
+    def test_rates_track_the_mean(self):
+        n = 20_000
+        for fn in (poisson_arrivals, diurnal_arrivals):
+            assert fn(3.0, n, seed=0).mean() == pytest.approx(3.0,
+                                                              rel=0.1)
+
+    def test_bursty_is_overdispersed(self):
+        a = bursty_arrivals(2.0, 20_000, seed=0)
+        p = poisson_arrivals(a.mean(), 20_000, seed=0)
+        assert a.var() > 2.0 * p.var()
+
+
+class TestModelTraffic:
+    def test_decode_is_read_heavy_and_context_dependent(self):
+        spec = ModelTrafficSpec.from_name("smollm-360m")
+        r1, w1 = spec.decode_bytes(128)
+        r2, w2 = spec.decode_bytes(1024)
+        assert r2 > r1                      # KV reads grow with context
+        assert w2 == w1                     # one token's writes do not
+        assert r1 > w1
+
+    def test_prefill_is_write_balanced(self):
+        spec = ModelTrafficSpec.from_name("smollm-360m")
+        r, w = spec.prefill_bytes(256)
+        assert r == w > 0
+
+    def test_moe_and_ssm_specs_diverge(self):
+        moe = ModelTrafficSpec.from_name("olmoe-1b-7b")
+        ssm = ModelTrafficSpec.from_name("mamba2-2.7b")
+        assert moe.moe_shuffle_bytes_per_token > 0
+        assert ssm.moe_shuffle_bytes_per_token == 0
+        assert ssm.state_bytes_per_token > 0
+        # SSM state is context-independent: decode reads are flat
+        assert ssm.decode_bytes(64)[0] == ssm.decode_bytes(4096)[0]
+
+
+class TestSyntheticTrace:
+    def test_backlog_grows_with_qps(self):
+        spec = ModelTrafficSpec.from_name("smollm-360m")
+        lo = synthetic_serving_trace(spec, qps=0.1, n_ticks=128,
+                                     batch_slots=4)
+        hi = synthetic_serving_trace(spec, qps=8.0, n_ticks=128,
+                                     batch_slots=4)
+        assert max(hi.backlogs) > 4.0 * max(lo.backlogs)
+
+    def test_arrival_and_qps_validation(self):
+        spec = ModelTrafficSpec.from_name("smollm-360m")
+        with pytest.raises(ValueError, match="arrival"):
+            synthetic_serving_trace(spec, qps=1.0, arrival="nope")
+        with pytest.raises(ValueError, match="qps"):
+            synthetic_serving_trace(spec, qps=-1.0)
+
+    def test_deterministic_and_named(self):
+        spec = ModelTrafficSpec.from_name("smollm-360m")
+        a = synthetic_serving_trace(spec, qps=1.0, n_ticks=64, seed=5)
+        b = synthetic_serving_trace(spec, qps=1.0, n_ticks=64, seed=5)
+        assert a == b
+        assert a.name == "smollm-360m@qps1-diurnal"
+
+
+class TestTraceAxis:
+    def test_axis_order_and_normalization(self):
+        assert "trace" in AXIS_ORDER
+        ax = axis("trace", [TrafficTrace.steady("a", 0.5, 4.0),
+                            TrafficTrace("b", (1.0, 1.0), (0.9, 0.1),
+                                         (2.0, 32.0))])
+        assert ax.labels == ("a", "b")
+        # padded to a common phase count at axis build time
+        assert all(t.n_phases == 2 for t in ax.values)
+        assert ax.index("b") == 1
+
+    def test_axis_rejects_non_traces_and_duplicates(self):
+        with pytest.raises(ValueError, match="TrafficTrace"):
+            axis("trace", [0.5])
+        t = TrafficTrace.steady("a", 0.5, 4.0)
+        with pytest.raises(ValueError, match="duplicate"):
+            axis("trace", [t, TrafficTrace.steady("a", 0.9, 8.0)])
+
+    def test_trace_excludes_mix_and_backlog_axes(self):
+        t = axis("trace", [TrafficTrace.steady("a", 0.5, 4.0)])
+        for other in (axis("backlog", [4.0]),
+                      axis("read_fraction", [0.5]),
+                      axis("mix", [(2, 1)])):
+            with pytest.raises(ValueError, match="exclusive"):
+                AxisSet([t, other])
+
+    def test_sim_config_trace_cycles_key(self):
+        # the default keys — and every golden pinned on them — unchanged
+        assert FIXED_SIM.key() == ("fixed",)
+        assert SimConfig(trace_cycles=128).key() == ("fixed", 128)
+        adaptive = SimConfig(mode="adaptive", trace_cycles=128).key()
+        assert adaptive[0] == "adaptive" and adaptive[-1] == 128
+        with pytest.raises(ValueError, match="trace_cycles"):
+            SimConfig(trace_cycles=4)
+
+
+class TestTraceScanNumerics:
+    def test_single_phase_bit_identical_to_static_cell(self):
+        """A steady trace IS the static cell: same kernel, same cycle
+        count, same warm-up — bitwise, for every protocol family."""
+        ds_t = DesignSpace([axis("trace",
+                                 [TrafficTrace.steady("s", 0.7, 16.0)])],
+                           sim=FAST_TRACE, **FAST)
+        eff_t = ds_t.evaluate(metrics=("trace_efficiency",))
+        ds_s = DesignSpace([axis("read_fraction", [0.7]),
+                            axis("backlog", [16.0])], **FAST)
+        eff_s = ds_s.evaluate(metrics=("sim_efficiency",))
+        np.testing.assert_array_equal(
+            eff_t["trace_efficiency"].values[:, 0],
+            eff_s["sim_efficiency"].values[:, 0, 0])
+
+    def test_state_carries_across_phase_boundaries(self):
+        """Phase 2 of a burst->drain trace must differ from the same
+        phase started cold: the carried queue state is the point."""
+        burst = TrafficTrace("burst", (1.0, 1.0), (0.1, 0.9),
+                             (64.0, 2.0))
+        cold = TrafficTrace.steady("cold", 0.9, 2.0)
+        res = DesignSpace([axis("trace", [burst, cold])],
+                          sim=FAST_TRACE, **FAST).evaluate(
+            metrics=("trace_phase_efficiency",))
+        phase = res["trace_phase_efficiency"]
+        assert phase.dims[-1] == "phase"
+        carried = phase.values[:, 0, 1]     # burst trace, phase 2
+        fresh = phase.values[:, 1, 0]       # cold steady state
+        sym = [i for i, k in enumerate(phase.coord("protocol"))
+               if k in flitsim.SYMMETRIC_PARAMS]
+        assert not np.allclose(carried[sym], fresh[sym])
+
+    def test_duration_weighting(self):
+        """The aggregate is the duration-weighted mean of phase cells."""
+        t = TrafficTrace("t", (3.0, 1.0), (0.9, 0.2), (4.0, 32.0))
+        res = DesignSpace([axis("trace", [t])], sim=FAST_TRACE,
+                          **FAST).evaluate(
+            metrics=("trace_efficiency", "trace_phase_efficiency"))
+        per = res["trace_phase_efficiency"].values[:, 0].astype(np.float64)
+        agg = res["trace_efficiency"].values[:, 0]
+        np.testing.assert_allclose(agg, (0.75 * per[:, 0]
+                                         + 0.25 * per[:, 1]).astype(
+                                             np.float32), rtol=1e-6)
+
+    def test_trace_bandwidth_threads_the_phy(self):
+        from repro.core import UCIE_A_32G_55U
+        t = TrafficTrace.steady("s", 0.7, 16.0)
+        res = DesignSpace([axis("trace", [t])], phy=UCIE_A_32G_55U,
+                          sim=FAST_TRACE, **FAST).evaluate()
+        bw = res["trace_bandwidth_gbs"]
+        eff = res["trace_efficiency"]
+        np.testing.assert_allclose(
+            bw.values, eff.values * UCIE_A_32G_55U.raw_bandwidth_gbs,
+            rtol=1e-6)
+        with pytest.raises(ValueError, match="phy"):
+            DesignSpace([axis("trace", [t])], **FAST).evaluate(
+                metrics=("trace_bandwidth_gbs",))
+
+    def test_protocol_param_perturbations_on_trace_axis(self):
+        t = TrafficTrace.steady("s", 0.6, 8.0)
+        res = DesignSpace(
+            [axis("protocol_param", [{}, {"flit_bits": 2.0}]),
+             axis("protocol", ["cxl_opt", "chi"]),
+             axis("trace", [t])],
+            sim=FAST_TRACE, **FAST).evaluate(
+            metrics=("trace_efficiency",))
+        eff = res["trace_efficiency"]
+        assert eff.dims == ("protocol_param", "protocol", "trace")
+        assert not np.allclose(eff.values[0], eff.values[1])
+
+
+class TestTraceCompileCaching:
+    def test_alternating_trace_shapes_do_not_retrace(self):
+        """Two different trace SETS of one shape share the executables;
+        alternating evaluate() calls must hit the warm cache."""
+        t_a = TrafficTrace("a", (1.0, 2.0), (0.9, 0.5), (4.0, 64.0))
+        t_b = TrafficTrace("b", (2.0, 1.0), (0.3, 0.8), (32.0, 8.0))
+        t_c = TrafficTrace("c", (1.0, 1.0), (0.6, 0.6), (16.0, 16.0))
+        ds1 = DesignSpace([axis("trace", [t_a, t_b])], sim=FAST_TRACE,
+                          **FAST)
+        ds2 = DesignSpace([axis("trace", [t_b, t_c])], sim=FAST_TRACE,
+                          **FAST)
+        ds1.evaluate(metrics=("trace_efficiency",))         # warm both
+        ds2.evaluate(metrics=("trace_efficiency",))
+        with no_retrace():
+            for _ in range(3):
+                r1 = ds1.evaluate(metrics=("trace_efficiency",))
+                r2 = ds2.evaluate(metrics=("trace_efficiency",))
+        # the shared trace rides in both sets at different positions
+        np.testing.assert_array_equal(
+            r1["trace_efficiency"].sel(trace="b").values,
+            r2["trace_efficiency"].sel(trace="b").values)
+
+    def test_trace_and_static_keys_do_not_collide(self):
+        t = TrafficTrace.steady("s", 0.5, 8.0)
+        ds = DesignSpace([axis("trace", [t])], sim=FAST_TRACE, **FAST)
+        ds.evaluate(metrics=("trace_efficiency",))
+        st = DesignSpace([axis("read_fraction", [0.5]),
+                          axis("backlog", [8.0])], **FAST)
+        st.evaluate(metrics=("sim_efficiency",))
+        with no_retrace():      # both executables stay warm side by side
+            ds.evaluate(metrics=("trace_efficiency",))
+            st.evaluate(metrics=("sim_efficiency",))
+
+    def test_telemetry_reports_trace_mode(self):
+        t = TrafficTrace("t", (1.0, 1.0, 1.0), (0.9, 0.5, 0.1),
+                         (2.0, 8.0, 32.0))
+        DesignSpace([axis("trace", [t])], sim=FAST_TRACE,
+                    **FAST).evaluate(metrics=("trace_efficiency",))
+        info = flitsim.last_run_info()
+        for fam in ("flitsim.symmetric.trace", "flitsim.asymmetric.trace"):
+            d = info[fam]
+            assert d["mode"] == "trace"
+            assert d["phases"] == 3
+            assert d["cycles_per_phase"] == 128
+            assert d["cycles_run"] == 384
+            assert d["state_carry_depth"] == 256
+            assert d["trace_cells"] > 0
+
+
+class TestServingFrontier:
+    def test_frontier_report_shape_and_vocabulary(self):
+        from repro.core.selector import SIM_APPROACH_KEYS
+        rep = serving_frontier(
+            models=("smollm-360m", "mamba2-2.7b"), qps_points=(0.25, 4.0),
+            n_ticks=96, n_phases=4, sim=SimConfig(trace_cycles=256))
+        assert rep["models"] == ["smollm-360m", "mamba2-2.7b"]
+        labels = set(SIM_APPROACH_KEYS.values())
+        for m in rep["models"]:
+            assert set(rep["winner_by_model_qps"][m]) == {"0.25", "4"}
+            assert set(rep["winner_by_model_qps"][m].values()) <= labels
+            for v in rep["winner_gbs_by_model_qps"][m].values():
+                assert v > 0.0
+        assert set(rep["telemetry"]) == {"flitsim.symmetric.trace",
+                                         "flitsim.asymmetric.trace"}
+        assert rep["compiles"] >= 0
+
+    def test_design_space_entry_point(self):
+        rep = DesignSpace.serving_frontier(
+            models=("smollm-360m",), qps_points=(1.0,), n_ticks=48,
+            n_phases=3, sim=SimConfig(trace_cycles=128))
+        assert rep["trace_names"] == ["smollm-360m@q1"]
+        assert rep["n_phases"] == 3
+
+
+class TestTraceRecorder:
+    def test_recorder_prices_ticks(self):
+        spec = ModelTrafficSpec.from_name("smollm-360m")
+        rec = TraceRecorder(spec)
+        rec.on_prefill(8)
+        rec.on_decode([8, 4])
+        rec.on_tick(queue_depth=3, active=2)
+        rec.on_decode([9, 5])
+        rec.on_tick(queue_depth=0, active=2)
+        assert rec.n_ticks == 2
+        assert rec.prefill_tokens_per_tick == [8, 0]
+        assert rec.decode_tokens_per_tick == [2, 2]
+        tr = rec.trace(n_phases=2, name="r")
+        assert tr.n_phases == 2
+        assert tr.backlogs == (5.0, 2.0)
+        with pytest.raises(ValueError, match="no ticks"):
+            TraceRecorder(spec).trace()
+
+    def test_recorded_engine_run_compiles_to_a_trace(self):
+        """End to end: a live ServingEngine run through the recorder
+        yields a trace the design space can evaluate."""
+        from repro.configs import get
+        from repro.models import ShardingCtx, build
+        from repro.serve import Request, ServingEngine
+        cfg = get("smollm-360m").reduced()
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        rec = TraceRecorder.for_model(cfg)
+        eng = ServingEngine(model, params, ShardingCtx(), batch_slots=2,
+                            max_len=32, recorder=rec)
+        for i in range(4):
+            eng.submit(Request(rid=i, prompt=np.arange(3 + i) % 50,
+                               max_new_tokens=4))
+        eng.run_until_drained()
+        assert rec.n_ticks > 0
+        assert sum(rec.prefill_tokens_per_tick) == 3 + 4 + 5 + 6
+        assert sum(rec.decode_tokens_per_tick) > 0
+        tr = rec.trace(n_phases=4)
+        res = DesignSpace([axis("trace", [tr])], sim=FAST_TRACE,
+                          **FAST).evaluate(metrics=("trace_efficiency",))
+        assert np.all(res["trace_efficiency"].values > 0.0)

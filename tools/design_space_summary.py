@@ -72,6 +72,19 @@ def summarize(ds: dict) -> dict:
                 for phy, by_bl in sorted(
                     spf["regimes_by_phy_backlog"].items())},
         }
+    sf = ds.get("serving_frontier")
+    if sf is not None:
+        # winner labels per (model, QPS) only — delivered GB/s, trace
+        # phase floats, and telemetry are excluded by design
+        out["serving_frontier"] = {
+            "models": sf["models"],
+            "phy": sf["phy"],
+            "arrival": sf["arrival"],
+            "winner_by_model_qps": {
+                m: dict(sorted(w.items()))
+                for m, w in sorted(sf["winner_by_model_qps"].items())},
+            "qps_sensitive": dict(sorted(sf["qps_sensitive"].items())),
+        }
     return out
 
 
