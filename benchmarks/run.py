@@ -32,7 +32,7 @@ def main() -> None:
     rows = []
     from benchmarks import (
         bench_flitsim, bench_kernels, bench_lint, bench_paper_figures,
-        bench_roofline, bench_serving, bench_train_loop,
+        bench_roofline, bench_serving, bench_streaming, bench_train_loop,
     )
     suites = [
         # lint first: the same pass gates CI, and the row keeps its
@@ -40,6 +40,7 @@ def main() -> None:
         ("lint", bench_lint.run),
         ("paper_figures", bench_paper_figures.run),
         ("flitsim", bench_flitsim.run),
+        ("streaming", bench_streaming.run),
         ("kernels", bench_kernels.run),
         ("train_loop", bench_train_loop.run),
         ("serving", bench_serving.run),

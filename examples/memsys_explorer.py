@@ -123,21 +123,24 @@ def sweep_mode(n_fracs: int = 41, backlogs=(1, 2, 4, 8, 16, 32, 64, 128)):
     few non-converging straggler cells re-simulated exactly.
     """
     from repro.core import ADAPTIVE_SIM, flitsim, mix_grid
-    from repro.core.selector import rank_grid
+    from repro.core.space import DesignSpace, axis
 
     x, y = mix_grid(n_fracs)
-    mixes = list(zip(np.asarray(x).tolist(), np.asarray(y).tolist()))
     fracs = np.asarray(x) / 100.0
 
     t0 = time.perf_counter()
-    res = flitsim.sweep(mixes=mixes, backlogs=list(backlogs),
-                        sim=ADAPTIVE_SIM)
-    eff = np.asarray(res.efficiency)              # [P, B, M]
+    res = DesignSpace([
+        axis("backlog", list(backlogs)),
+        axis("read_fraction", fracs),
+    ], sim=ADAPTIVE_SIM).evaluate(metrics=("sim_efficiency",))
+    sa = res["sim_efficiency"]
+    protocols = list(sa.coord("protocol"))
+    eff = np.asarray(sa.values)                   # [P, B, M]
     t_sim = time.perf_counter() - t0
     n_pts = eff.size
     stats = flitsim.compile_cache_stats()
     print(f"flit-simulated {n_pts} grid points "
-          f"({len(res.protocols)} protocols x {len(backlogs)} backlogs x "
+          f"({len(protocols)} protocols x {len(backlogs)} backlogs x "
           f"{n_fracs} read fractions) in {t_sim:.2f}s "
           f"[{stats.misses} compiles, {stats.hits} cache hits]")
     for fam, info in sorted(flitsim.last_run_info().items()):
@@ -151,7 +154,7 @@ def sweep_mode(n_fracs: int = 41, backlogs=(1, 2, 4, 8, 16, 32, 64, 128)):
     print(f"\nsimulated data efficiency at backlog={backlogs[bl_ref]} "
           f"(read fraction 0 / 0.5 / 1):")
     mid = n_fracs // 2
-    for i, key in enumerate(res.protocols):
+    for i, key in enumerate(protocols):
         e = eff[i, bl_ref]
         sens = float(np.max(eff[i, :, mid]) - np.min(eff[i, :, mid]))
         print(f"    {key:12s} {e[0]:.3f} / {e[mid]:.3f} / {e[-1]:.3f}   "
@@ -163,18 +166,20 @@ def sweep_mode(n_fracs: int = 41, backlogs=(1, 2, 4, 8, 16, 32, 64, 128)):
     start = 0
     for j in range(1, n_fracs + 1):
         if j == n_fracs or best[j] != best[start]:
-            key = res.protocols[best[start]]
+            key = protocols[best[start]]
             print(f"    read fraction {fracs[start]:.2f}-"
                   f"{fracs[j - 1]:.2f}: {key}")
             start = j
 
     # catalog ranking over the same read-fraction axis, one compiled call
     t0 = time.perf_counter()
-    g = rank_grid(x, y)
-    keys = g.best_keys()
+    cres = DesignSpace([axis("read_fraction", fracs)]).evaluate(
+        metrics=("bandwidth_gbs",))
+    keys = cres.frontier("bandwidth_gbs").values
+    n_sys = len(cres["bandwidth_gbs"].coord("system"))
     t_rank = time.perf_counter() - t0
     print(f"\ncatalog ranking over {n_fracs} read fractions "
-          f"({len(g.keys)} systems) in {t_rank*1e3:.1f} ms:")
+          f"({n_sys} systems) in {t_rank*1e3:.1f} ms:")
     start = 0
     for j in range(1, n_fracs + 1):
         if j == n_fracs or keys[j] != keys[start]:
@@ -196,131 +201,31 @@ REPRESENTATIVE_WORKLOADS = {
 def phy_frontier_report(n_fracs: int = 21, shorelines=(4.0, 8.0, 16.0)):
     """First-class ``phy`` axis: the catalog across UCIe-A/UCIe-S at 32G
     plus the forward-looking 48G (UCIe 2.0 scaling) points, in ONE
-    PHY-stacked evaluation.  Returns a JSON-able report for the CI
-    design-space artifact."""
-    from repro.core import (
-        UCIE_A_32G_55U, UCIE_A_48G_45U, UCIE_S_32G, UCIE_S_48G_110U,
-    )
-    from repro.core.memsys import grid_cache_stats
-    from repro.core.space import DesignSpace, axis, regimes
+    PHY-stacked evaluation.  Thin wrapper over the unified report API
+    (:func:`repro.core.report.build_report`, section ``"phy"``); returns
+    the JSON-able report section for the CI design-space artifact."""
+    from repro.core.report import ReportSpec, build_report
 
-    phys = [UCIE_S_32G, UCIE_A_32G_55U, UCIE_S_48G_110U, UCIE_A_48G_45U]
-    fracs = np.linspace(0.0, 1.0, n_fracs)
-    before = grid_cache_stats()
-    t0 = time.perf_counter()
-    res = DesignSpace([
-        axis("phy", phys),
-        axis("read_fraction", fracs),
-        axis("shoreline_mm", shorelines),
-    ]).evaluate(metrics=("bandwidth_gbs", "gbs_per_watt"))
-    dt = time.perf_counter() - t0
-    after = grid_cache_stats()
-    bw = res["bandwidth_gbs"]          # [S, F, M, L]
-    n_pts = int(np.prod(bw.shape))
-    print(f"phy axis: {len(phys)} PHYs x {len(bw.coord('system'))} "
-          f"approaches x {n_fracs} mixes x {len(shorelines)} shorelines "
-          f"= {n_pts} points in {dt:.2f}s "
-          f"[{after.misses - before.misses} compiles]")
-    report = {"phys": [p.name for p in phys],
-              "read_fractions": fracs.tolist(),
-              "shorelines": [float(s) for s in shorelines],
-              "best_approach_by_phy": {}, "regimes_by_phy": {}}
-    for p in phys:
-        front = res.frontier("bandwidth_gbs").sel(phy=p.name,
-                                                  shoreline_mm=8.0)
-        regs = regimes(front.values.tolist(), fracs)
-        report["regimes_by_phy"][p.name] = [
-            {"read_fraction_lo": lo, "read_fraction_hi": hi,
-             "best": str(lab)} for lo, hi, lab in regs]
-        at70 = front.values[int(round(0.7 * (n_fracs - 1)))]
-        report["best_approach_by_phy"][p.name] = str(at70)
-        peak = float(bw.sel(phy=p.name, shoreline_mm=8.0).values.max())
-        print(f"    {p.name:18s} best@70R30W {at70:24s} "
-              f"peak {peak:6.0f} GB/s @ 8 mm")
-    # §V scaling check surfaced in the artifact: at the SAME bump pitch
-    # (both UCIe-S points are 110um) 48G carries exactly 48/32 = 1.5x the
-    # bandwidth at identical pJ/b.  (The advanced 48G point above stacks a
-    # further 55/45 pitch gain on top, hence its larger peak.)
-    g32 = float(bw.sel(phy=UCIE_S_32G.name).values.max())
-    g48 = float(bw.sel(phy=UCIE_S_48G_110U.name).values.max())
-    report["bw_gain_48g_vs_32g_same_pitch"] = g48 / g32
-    print(f"    48G vs 32G same-pitch bandwidth gain: "
-          f"x{g48 / g32:.2f} at constant pJ/b")
-    return report
+    spec = ReportSpec(sections=("phy",), verbose=True,
+                      options={"phy": {"n_fracs": n_fracs,
+                                       "shorelines": shorelines}})
+    return build_report(spec)["phy"].payload
 
 
 def sim_phy_frontier_report(n_fracs: int = 21, backlogs=(2.0, 64.0)):
     """Simulation-corrected PHY-absolute frontier: the flit simulators'
     data efficiency threaded onto each PHY generation's raw link bandwidth
     (``sim_bandwidth_gbs`` = sim efficiency x ``UCIePhy.raw_bandwidth_gbs``)
-    — the cycle-level counterpart of the analytic ``phy_frontier``, and the
-    first one that can disagree with it per queue depth.  Runs the
-    convergence-adaptive engine; returns a JSON-able report for the CI
-    design-space artifact."""
-    from repro.core import (
-        ADAPTIVE_SIM, UCIE_A_32G_55U, UCIE_A_48G_45U, UCIE_S_32G,
-        UCIE_S_48G_110U, flitsim,
-    )
-    from repro.core.selector import approach_key_for
-    from repro.core.space import DesignSpace, axis, regimes
+    — the cycle-level counterpart of the analytic ``phy_frontier``.  Thin
+    wrapper over the unified report API (section ``"sim_phy"``); runs the
+    convergence-adaptive engine and returns the JSON-able report section
+    for the CI design-space artifact."""
+    from repro.core.report import ReportSpec, build_report
 
-    phys = [UCIE_S_32G, UCIE_A_32G_55U, UCIE_S_48G_110U, UCIE_A_48G_45U]
-    fracs = np.linspace(0.0, 1.0, n_fracs)
-    before = flitsim.compile_cache_stats()
-    t0 = time.perf_counter()
-    res = DesignSpace([
-        axis("phy", phys),
-        axis("read_fraction", fracs),
-        axis("backlog", backlogs),
-    ], sim=ADAPTIVE_SIM).evaluate(
-        metrics=("sim_efficiency", "sim_bandwidth_gbs"))
-    dt = time.perf_counter() - t0
-    after = flitsim.compile_cache_stats()
-    bw = res["sim_bandwidth_gbs"]      # [protocol, phy, backlog, mix]
-    info = flitsim.last_run_info()
-    cycles = {fam.split(".")[1]: info[fam]["cycles_run"] for fam in info
-              if info[fam].get("mode") == "adaptive"}
-    print(f"sim-phy frontier: {len(bw.coord('protocol'))} protocols x "
-          f"{len(phys)} PHYs x {len(backlogs)} backlogs x {n_fracs} "
-          f"read fractions = {int(np.prod(bw.shape))} points in {dt:.2f}s "
-          f"[{after.misses - before.misses} compiles; adaptive cycles "
-          f"{cycles}]")
-    report = {"phys": [p.name for p in phys],
-              "backlogs": [float(b) for b in backlogs],
-              "read_fractions": fracs.tolist(),
-              "adaptive_cycles": cycles,
-              "peak_sim_gbs_by_phy": {},
-              "best_protocol_by_phy": {},
-              "regimes_by_phy_backlog": {}}
-    for p in phys:
-        regs_by_bl = {}
-        for b in backlogs:
-            front = bw.sel(phy=p.name, backlog=b).argbest("protocol")
-            regs_by_bl[f"{b:g}"] = [
-                {"read_fraction_lo": lo, "read_fraction_hi": hi,
-                 "best": str(lab),
-                 "approach": approach_key_for(str(lab))}
-                for lo, hi, lab in regimes(front.values.tolist(), fracs)]
-        report["regimes_by_phy_backlog"][p.name] = regs_by_bl
-        deep = bw.sel(phy=p.name, backlog=backlogs[-1])
-        at70 = deep.argbest("protocol").values[
-            int(round(0.7 * (n_fracs - 1)))]
-        report["best_protocol_by_phy"][p.name] = str(at70)
-        peak = float(deep.values.max())
-        report["peak_sim_gbs_by_phy"][p.name] = peak
-        print(f"    {p.name:18s} best@70R30W {str(at70):12s} "
-              f"peak {peak:5.0f} GB/s (raw link, simulated)")
-    # the shallow-queue disagreement the closed forms cannot see: winners
-    # at backlog 2 vs saturation
-    shallow = {p.name: [r["best"]
-                        for r in report["regimes_by_phy_backlog"][p.name]
-                        [f"{backlogs[0]:g}"]] for p in phys}
-    deep_w = {p.name: [r["best"]
-                       for r in report["regimes_by_phy_backlog"][p.name]
-                       [f"{backlogs[-1]:g}"]] for p in phys}
-    report["shallow_queue_disagrees"] = {
-        name: shallow[name] != deep_w[name] for name in shallow}
-    return report
+    spec = ReportSpec(sections=("sim_phy",), verbose=True,
+                      options={"sim_phy": {"n_fracs": n_fracs,
+                                           "backlogs": backlogs}})
+    return build_report(spec)["sim_phy"].payload
 
 
 def serving_frontier_report(models=None, qps_points=None, **kwargs):
@@ -331,11 +236,14 @@ def serving_frontier_report(models=None, qps_points=None, **kwargs):
     (model, QPS) cell's winning protocol on the UCIe-A PHY is mapped to
     its catalog memory approach.  Prints the frontier plus the trace-scan
     telemetry; returns the JSON-able ``serving_frontier`` artifact
-    section."""
-    from repro.core.space import DesignSpace
+    section (sourced through the unified report API, section
+    ``"serving"``)."""
+    from repro.core.report import ReportSpec, build_report
 
     t0 = time.perf_counter()
-    rep = DesignSpace.serving_frontier(models, qps_points, **kwargs)
+    opts = dict(kwargs, models=models, qps_points=qps_points)
+    spec = ReportSpec(sections=("serving",), options={"serving": opts})
+    rep = build_report(spec)["serving"].payload
     dt = time.perf_counter() - t0
     n_cells = len(rep["models"]) * len(rep["qps_points"])
     print(f"serving frontier: {len(rep['models'])} models x "
@@ -377,7 +285,6 @@ def serving_mode():
 def bridge_mode(n_fracs: int = 41, shorelines=(2.0, 4.0, 8.0, 16.0)):
     """Batched workload->design-space bridge over all available cells."""
     from repro.core.memsys import grid_cache_stats
-    from repro.core.space import joint_frontier
     from repro.roofline.analysis import RooflineReport, bridge_design_space
 
     reports = {}
@@ -434,14 +341,9 @@ def bridge_mode(n_fracs: int = 41, shorelines=(2.0, 4.0, 8.0, 16.0)):
     # (canonical artifact grid; winner labels are gate-checked against
     # the fixed-mode golden summary).
     from repro.core import ADAPTIVE_SIM
-    t0 = time.perf_counter()
-    jf = joint_frontier(sim=ADAPTIVE_SIM)
-    dt = time.perf_counter() - t0
-    n_jf = (len(jf["read_fractions"]) * len(jf["backlogs"])
-            * len(jf["shorelines"]))
-    print(f"analytic-vs-simulated frontier: {n_jf} joint "
-          f"(mix x backlog x shoreline) points in {dt:.2f}s; winners "
-          f"disagree on {jf['disagreement_fraction']:.0%} of the space")
+    from repro.core.report import ReportSpec, build_report
+    jf = build_report(ReportSpec(sections=("joint",), sim=ADAPTIVE_SIM,
+                                 verbose=True))["joint"].payload
     errs = ", ".join(f"{k}={v:.1%}"
                      for k, v in jf["protocol_rel_err"].items())
     print(f"    worst simulated-vs-analytic efficiency error: {errs}")

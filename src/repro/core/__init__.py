@@ -48,7 +48,33 @@ cache and the same report numerics:
                         phase boundaries; ``None`` = full horizon
                         per phase (single phase bit-identical to
                         the static cell)
+    ``StreamConfig(     STREAMING shards: chunk the cell space,    10^6 -
+    chunk_cells=...,    one cached executable per chunk shape      10^8
+    devices=N)`` via    (``STREAM_FAMILIES``), ``shard_map`` the   cell
+    ``evaluate(...,     chunk batch across N devices, reduce       joint
+    stream=cfg)``       frontier/argbest/feasibility on-device —   spaces
+                        per-cell tensors never materialize; winner
+                        labels bit-identical to the materialized
+                        engine (``FIXED_SIM`` cores)
     ==================  =========================================  =======
+
+Streaming keeps peak memory at ``chunk_cells x stacked-protocol rows``
+regardless of space size: each dispatch carries running argmax codes,
+per-label win counts, and the running best value; constraints stream
+through the same reduction (``StreamConfig(constraints=...)``, with
+``"(none)"`` cells counted).  See ``docs/streaming.md`` for chunking
+semantics and the reduction contracts.
+
+The five frontier builders (``SpaceResult.frontier``,
+:func:`joint_frontier` — which now folds the PHY-absolute
+``sim_bandwidth_gbs`` subsection — the explorer's phy / sim-phy
+frontier reports, and :meth:`DesignSpace.serving_frontier`) converge on
+ONE report API: :meth:`DesignSpace.report` /
+:func:`repro.core.report.build_report` resolve a
+:class:`~repro.core.report.ReportSpec` into typed
+:class:`~repro.core.report.FrontierReport` sections (``"frontier"``,
+``"joint"``, ``"phy"``, ``"sim_phy"``, ``"serving"``) whose payloads
+are byte-identical to the legacy ``design_space.json`` sections.
 
 Time-varying serving traffic rides the ``trace`` axis
 (:mod:`repro.traces`): a :class:`~repro.traces.trace.TrafficTrace` is a
@@ -75,10 +101,11 @@ asymmetric periodic detector closed the run.  Trace-scan runs report
 under ``<family>.trace`` with ``phases``, ``cycles_per_phase``, and
 ``state_carry_depth`` instead.
 
-Legacy front-ends (``flitsim.sweep*``, ``memsys.catalog_grid`` /
-``approach_grid``, ``selector.rank_grid``,
-``analysis.bridge_design_space``) are thin compatibility wrappers over the
-same engines and cache — identical numerics, shared warm executables.
+The positional legacy front-ends (``flitsim.sweep`` /
+``sweep_pipelining``, ``memsys.catalog_grid``, ``selector.rank_grid``)
+are DEPRECATED compatibility wrappers over the same engines and cache —
+identical numerics, shared warm executables — and emit
+``DeprecationWarning``s pointing back at the migration table above.
 :func:`joint_frontier` is the first capability only the unified API can
 express: the (mix x backlog x shoreline) frontier marking where the flit
 simulation and the closed forms disagree about the best memory system.
@@ -99,9 +126,11 @@ from repro.core.latency import (
 )
 from repro.core.space import (
     ADAPTIVE_SIM, Axis, AxisSet, DesignSpace, FIXED_SIM, OWN_MIX,
-    PALLAS_SIM, SimConfig, SpaceArray, SpaceResult, axis, cache_stats,
-    clear_cache, joint_frontier, regimes,
+    PALLAS_SIM, STREAM_FAMILIES, SimConfig, SpaceArray, SpaceResult,
+    StreamConfig, axis, cache_stats, clear_cache, joint_frontier, regimes,
 )
+from repro.core.report import FrontierReport, ReportSpec, build_report
+from repro.core.streaming import StreamResult
 from repro.core.memsys import (
     CatalogGrid, MemorySystem, catalog_grid, grid_cache_stats,
     standard_catalog,

@@ -1692,33 +1692,13 @@ def _normalize_mixes(mixes) -> Tuple[Tuple[float, float], ...]:
     return tuple(out)
 
 
-def sweep(protocols: Optional[Sequence[str]] = None,
-          mixes=None,
-          backlogs: Union[None, float, Sequence[float]] = None,
-          *, n_flits: int = 2048, n_accesses: int = 4096,
-          sim: Optional[SimConfig] = None) -> SweepResult:
-    """Evaluate a full ``protocols x backlogs x mixes`` grid in one compiled
-    call per simulator family.
-
-    Compatibility wrapper over the shared design-space engine
-    (:func:`simulate_grid` — what :class:`repro.core.space.DesignSpace`
-    lowers onto): identical numerics, identical compile-cache keys.
-
-    Args:
-      protocols: keys from :data:`SIMULATORS` (default: all five).
-      mixes: sequence of ``(x, y)`` tuples or ``TrafficMix`` objects
-        (default: the five canonical mixes).
-      backlogs: ``None`` (default 64), a scalar, or a sequence.  A sequence
-        adds a ``B`` axis; backlog only affects the symmetric family (the
-        asymmetric rows are broadcast across it).
-      n_flits / n_accesses: static simulation lengths per family.
-      sim: execution config — :data:`FIXED_SIM` (default) or
-        :data:`ADAPTIVE_SIM` (chunked early-exit; the benchmarks/explorer
-        default).
-
-    Returns a :class:`SweepResult` whose ``efficiency`` grid is directly
-    comparable to ``ANALYTIC[key].bw_eff(x, y)``.
-    """
+def _sweep_impl(protocols: Optional[Sequence[str]] = None,
+                mixes=None,
+                backlogs: Union[None, float, Sequence[float]] = None,
+                *, n_flits: int = 2048, n_accesses: int = 4096,
+                sim: Optional[SimConfig] = None) -> SweepResult:
+    """Engine body behind the deprecated :func:`sweep` front-end — internal
+    callers (``backlog_knees``) use this directly, warning-free."""
     keys = tuple(protocols) if protocols is not None else tuple(SIMULATORS)
     if not keys:
         raise ValueError("sweep() needs at least one protocol key")
@@ -1741,6 +1721,47 @@ def sweep(protocols: Optional[Sequence[str]] = None,
                            efficiency=eff[:, 0, :])
     return SweepResult(protocols=keys, mixes=mix_tuples,
                        backlogs=backlog_vals, efficiency=eff)
+
+
+def sweep(protocols: Optional[Sequence[str]] = None,
+          mixes=None,
+          backlogs: Union[None, float, Sequence[float]] = None,
+          *, n_flits: int = 2048, n_accesses: int = 4096,
+          sim: Optional[SimConfig] = None) -> SweepResult:
+    """Evaluate a full ``protocols x backlogs x mixes`` grid in one compiled
+    call per simulator family.
+
+    .. deprecated:: PR 9
+        Positional legacy front-end; declare the same grid axes-first —
+        ``DesignSpace([axis("protocol", keys), axis("backlog", ...),
+        axis("mix", ...)], sim=...).evaluate(metrics=("sim_efficiency",))``
+        — or stream it at scale via ``evaluate(..., stream=StreamConfig())``.
+
+    Compatibility wrapper over the shared design-space engine
+    (:func:`simulate_grid` — what :class:`repro.core.space.DesignSpace`
+    lowers onto): identical numerics, identical compile-cache keys.
+
+    Args:
+      protocols: keys from :data:`SIMULATORS` (default: all five).
+      mixes: sequence of ``(x, y)`` tuples or ``TrafficMix`` objects
+        (default: the five canonical mixes).
+      backlogs: ``None`` (default 64), a scalar, or a sequence.  A sequence
+        adds a ``B`` axis; backlog only affects the symmetric family (the
+        asymmetric rows are broadcast across it).
+      n_flits / n_accesses: static simulation lengths per family.
+      sim: execution config — :data:`FIXED_SIM` (default) or
+        :data:`ADAPTIVE_SIM` (chunked early-exit; the benchmarks/explorer
+        default).
+
+    Returns a :class:`SweepResult` whose ``efficiency`` grid is directly
+    comparable to ``ANALYTIC[key].bw_eff(x, y)``.
+    """
+    space_mod.warn_legacy(
+        "flitsim.sweep()",
+        "DesignSpace([axis('backlog', ...), axis('mix', ...)], sim=...)"
+        ".evaluate(metrics=('sim_efficiency',))")
+    return _sweep_impl(protocols, mixes, backlogs, n_flits=n_flits,
+                       n_accesses=n_accesses, sim=sim)
 
 
 def sweep_perturbed(perturbations: Sequence[Mapping[str, float]],
@@ -1802,7 +1823,8 @@ def backlog_knees(mixes=None,
     backlog probed.  The result feeds ``SelectionConstraints.
     max_backlog_knee``: a queue-depth budget the selector enforces.
     """
-    res = sweep(mixes=mixes, backlogs=backlogs, n_flits=n_flits, sim=sim)
+    res = _sweep_impl(mixes=mixes, backlogs=backlogs, n_flits=n_flits,
+                      sim=sim)
     eff = np.asarray(res.efficiency)                    # [P, B, M]
     b = np.asarray(res.backlogs, dtype=np.float64)
     knees: Dict[str, Any] = {}
@@ -1814,18 +1836,12 @@ def backlog_knees(mixes=None,
     return knees
 
 
-def sweep_pipelining(ks: Sequence[int], n_lines: int = 512,
-                     ucie_line_ui: Union[float, Sequence[float]] = 16,
-                     device_line_ui: Union[float, Sequence[float]] = 64,
-                     sim: Optional[SimConfig] = None) -> jnp.ndarray:
-    """Batched Fig-13 model, one compiled call.
-
-    Scalar ``ucie_line_ui`` / ``device_line_ui`` give link utilization
-    ``[K]`` over device counts ``ks`` (legacy behavior).  Passing
-    sequences sweeps the joint ``[K, U, D]`` grid — modeling faster DRAM
-    generations (smaller ``device_line_ui``) and faster UCIe links
-    (smaller ``ucie_line_ui``) behind the logic die.
-    """
+def _sweep_pipelining_impl(ks: Sequence[int], n_lines: int = 512,
+                           ucie_line_ui: Union[float, Sequence[float]] = 16,
+                           device_line_ui: Union[float, Sequence[float]] = 64,
+                           sim: Optional[SimConfig] = None) -> jnp.ndarray:
+    """Engine body behind the deprecated :func:`sweep_pipelining` front-end
+    — the ``k`` / ``ucie_line_ui`` / ``device_line_ui`` axes lower here."""
     ks = tuple(int(k) for k in ks)
     squeeze = (np.ndim(ucie_line_ui) == 0 and np.ndim(device_line_ui) == 0)
     us = _f32(np.atleast_1d(np.asarray(ucie_line_ui, dtype=np.float64)))
@@ -1834,6 +1850,32 @@ def sweep_pipelining(ks: Sequence[int], n_lines: int = 512,
     util = _run_pipelining(jnp.asarray(ks, jnp.int32), us, ds,
                            max_k, int(n_lines), sim=sim)
     return util[:, 0, 0] if squeeze else util
+
+
+def sweep_pipelining(ks: Sequence[int], n_lines: int = 512,
+                     ucie_line_ui: Union[float, Sequence[float]] = 16,
+                     device_line_ui: Union[float, Sequence[float]] = 64,
+                     sim: Optional[SimConfig] = None) -> jnp.ndarray:
+    """Batched Fig-13 model, one compiled call.
+
+    .. deprecated:: PR 9
+        Positional legacy front-end; declare the grid axes-first —
+        ``DesignSpace([axis("k", ks), axis("ucie_line_ui", ...),
+        axis("device_line_ui", ...)]).evaluate(
+        metrics=("utilization",))``.
+
+    Scalar ``ucie_line_ui`` / ``device_line_ui`` give link utilization
+    ``[K]`` over device counts ``ks`` (legacy behavior).  Passing
+    sequences sweeps the joint ``[K, U, D]`` grid — modeling faster DRAM
+    generations (smaller ``device_line_ui``) and faster UCIe links
+    (smaller ``ucie_line_ui``) behind the logic die.
+    """
+    space_mod.warn_legacy(
+        "flitsim.sweep_pipelining()",
+        "DesignSpace([axis('k', ks), ...]).evaluate("
+        "metrics=('utilization',))")
+    return _sweep_pipelining_impl(ks, n_lines, ucie_line_ui,
+                                  device_line_ui, sim=sim)
 
 
 # -- convenience: analytic counterparts for the property tests ---------------

@@ -227,21 +227,12 @@ def run_catalog_program(items: Tuple[Tuple[str, MemorySystem], ...],
     return prog(x, y, sl)
 
 
-def catalog_grid(x, y, shoreline_mm=8.0,
-                 catalog: Optional[Dict[str, MemorySystem]] = None,
-                 ) -> CatalogGrid:
-    """Evaluate every catalog system over a mix grid in one compiled call.
-
-    Compatibility wrapper over :func:`run_catalog_program` (the shared
-    design-space engine).  ``x`` / ``y`` may be scalars or arrays of any
-    (matching) shape, and ``shoreline_mm`` a scalar or an array
-    broadcastable against them (e.g. ``x``/``y`` of shape ``[R, 1]`` with
-    shorelines ``[L]`` gives metric grids ``[S, R, L]``).  The stacked
-    program is memoized per (catalog, grid shape), so repeated grids of
-    the same shape — from here, from ``rank_grid``, or from a
-    ``DesignSpace`` evaluation — reuse the warm executable
-    (``grid_cache_stats()`` exposes hit/miss counters).
-    """
+def _catalog_grid_impl(x, y, shoreline_mm=8.0,
+                       catalog: Optional[Dict[str, MemorySystem]] = None,
+                       ) -> CatalogGrid:
+    """Engine body behind the deprecated :func:`catalog_grid` front-end —
+    internal callers (``selector.rank``, the roofline bridge) use this
+    directly, warning-free."""
     items = (default_catalog_items() if catalog is None
              else tuple(catalog.items()))
     bw, pjb, pw, gpw = run_catalog_program(items, x, y, shoreline_mm)
@@ -253,6 +244,34 @@ def catalog_grid(x, y, shoreline_mm=8.0,
         relative_bit_cost=jnp.asarray(
             [ms.relative_bit_cost for _, ms in items], jnp.float32),
     )
+
+
+def catalog_grid(x, y, shoreline_mm=8.0,
+                 catalog: Optional[Dict[str, MemorySystem]] = None,
+                 ) -> CatalogGrid:
+    """Evaluate every catalog system over a mix grid in one compiled call.
+
+    .. deprecated:: PR 9
+        Positional legacy front-end; declare the grid axes-first —
+        ``DesignSpace([axis("read_fraction", ...), axis("shoreline_mm",
+        ...)]).evaluate()`` — or stream it at scale via
+        ``evaluate(..., stream=StreamConfig())``.
+
+    Compatibility wrapper over :func:`run_catalog_program` (the shared
+    design-space engine).  ``x`` / ``y`` may be scalars or arrays of any
+    (matching) shape, and ``shoreline_mm`` a scalar or an array
+    broadcastable against them (e.g. ``x``/``y`` of shape ``[R, 1]`` with
+    shorelines ``[L]`` gives metric grids ``[S, R, L]``).  The stacked
+    program is memoized per (catalog, grid shape), so repeated grids of
+    the same shape — from here, from ``rank_grid``, or from a
+    ``DesignSpace`` evaluation — reuse the warm executable
+    (``grid_cache_stats()`` exposes hit/miss counters).
+    """
+    space_mod.warn_legacy(
+        "memsys.catalog_grid()",
+        "DesignSpace([axis('read_fraction', ...), "
+        "axis('shoreline_mm', ...)]).evaluate()")
+    return _catalog_grid_impl(x, y, shoreline_mm, catalog)
 
 
 @dataclasses.dataclass(frozen=True)

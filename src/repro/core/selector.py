@@ -29,8 +29,9 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import space as space_mod
 from repro.core.memsys import (
-    CatalogGrid, MemorySystem, catalog_grid, default_catalog_items,
+    CatalogGrid, MemorySystem, _catalog_grid_impl, default_catalog_items,
 )
 from repro.core.traffic import TrafficMix
 
@@ -177,8 +178,8 @@ def rank(mix: TrafficMix,
     objective: "bandwidth" | "power" (pJ/b) | "gbs_per_watt" | "latency".
     """
     items = _catalog_items(catalog)
-    grid = catalog_grid(mix.x, mix.y, constraints.shoreline_mm,
-                        dict(items))
+    grid = _catalog_grid_impl(mix.x, mix.y, constraints.shoreline_mm,
+                              dict(items))
     if objective not in _OBJECTIVES:
         raise KeyError(objective)
     bw = np.asarray(grid.bandwidth_gbs, dtype=np.float64)
@@ -293,6 +294,12 @@ def rank_grid(x, y,
     ``x`` / ``y`` are arrays of matching shape (e.g. from ``mix_grid``);
     returns the per-point argbest plus the full masked score grid.
 
+    .. deprecated:: PR 9
+        Positional legacy front-end; use the axes-first path —
+        ``res = DesignSpace([axis("read_fraction", ...)]).evaluate()``
+        then ``res.frontier("bandwidth_gbs",
+        where=res.feasible(constraints))``.
+
     ``shoreline_mm`` (default: ``constraints.shoreline_mm``) may itself be
     an array broadcastable against ``x`` — pass ``x``/``y`` of shape
     ``[R, 1]`` and shorelines of shape ``[L]`` for a 2-D (read-fraction x
@@ -300,9 +307,13 @@ def rank_grid(x, y,
     from a single compiled evaluation.  ``valid_mask`` adds point-dependent
     admissibility (see :func:`grid_ranking`).
     """
+    space_mod.warn_legacy(
+        "selector.rank_grid()",
+        "DesignSpace([axis('read_fraction', ...)]).evaluate() with "
+        "res.frontier(..., where=res.feasible(constraints))")
     items = _catalog_items(catalog)
     if shoreline_mm is None:
         shoreline_mm = constraints.shoreline_mm
-    grid = catalog_grid(x, y, shoreline_mm, dict(items))
+    grid = _catalog_grid_impl(x, y, shoreline_mm, dict(items))
     return grid_ranking(items, grid, constraints, objective,
                         valid_mask=valid_mask)

@@ -56,6 +56,18 @@ catalog keys ``"E:cxl-mem-opt/UCIe-A"``                system ``"E:cxl-mem-opt"`
                                                        ``workload_config`` axis automatically
 ``flitsim.sweep_perturbed({field: scale})``            ``axis("protocol_param", [...])`` (flit params) /
                                                        ``axis("catalog_param", [...])`` (PHY pJ/b + densities)
+``flitsim.sweep(mixes, backlogs)``                     ``DesignSpace([axis("backlog", ...), axis("mix", ...)],
+                                                       sim=...).evaluate(metrics=("sim_efficiency",))``
+``flitsim.sweep_pipelining(ks, ...)``                  ``axis("k", ks)`` [x ``axis("ucie_line_ui", ...)`` x
+                                                       ``axis("device_line_ui", ...)``] → ``res["utilization"]``
+``memsys.catalog_grid(x, y, shorelines)``              ``axis("read_fraction", ...)`` [x ``axis("shoreline_mm",
+                                                       ...)``] → ``res["bandwidth_gbs"]`` etc.
+whole-space materialize at 10^6+ cells                 ``evaluate(metrics=(m,), stream=StreamConfig(...))`` —
+                                                       streamed chunks, running on-device frontier reductions
+                                                       (:mod:`repro.core.streaming`)
+explorer ``phy_frontier_report()`` / ``joint_frontier  ``space.report(ReportSpec(sections=...))`` /
+(...)`` / ``serving_frontier(...)`` call sites         :func:`repro.core.report.build_report` — typed
+                                                       ``FrontierReport`` sections, one API
 =====================================================  ======================
 
 Feasible-set masks are plain boolean :class:`SpaceArray` values:
@@ -89,12 +101,29 @@ triple compiles once and stays warm.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import (
     Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union,
 )
 
 import jax
 import numpy as np
+
+#: appended to every legacy front-end DeprecationWarning — points at the
+#: migration table in the :mod:`repro.core` package docstring
+MIGRATION_HINT = (
+    "see the migration table in the repro.core package docstring "
+    "(src/repro/core/__init__.py) for the axes-first DesignSpace / "
+    "report(spec) / streaming replacements")
+
+
+def warn_legacy(name: str, replacement: str) -> None:
+    """Deprecation warning for a positional legacy front-end, carrying
+    the axes-first replacement and the package migration-table hint."""
+    warnings.warn(
+        f"{name} is a deprecated positional front-end; use {replacement} "
+        f"instead — {MIGRATION_HINT}", DeprecationWarning, stacklevel=3)
+
 
 # =========================================================================
 # Shared shape-keyed compile cache
@@ -105,6 +134,14 @@ FLITSIM_FAMILIES: Tuple[str, ...] = (
     "flitsim.symmetric", "flitsim.asymmetric", "flitsim.pipelining")
 #: cache families owned by the analytic memory-system engine
 MEMSYS_FAMILIES: Tuple[str, ...] = ("memsys.catalog", "memsys.approach")
+#: cache families owned by the streaming chunk engine
+#: (:mod:`repro.core.streaming`): ONE executable per chunk shape, reused
+#: across every chunk and every dispatch of a streamed evaluation
+STREAM_FAMILIES: Tuple[str, ...] = ("stream.sim", "stream.catalog")
+#: every registered engine family — ``cache_stats(families=...)``
+#: validates against this set (plus any ad-hoc family already counted)
+KNOWN_FAMILIES: Tuple[str, ...] = (
+    FLITSIM_FAMILIES + MEMSYS_FAMILIES + STREAM_FAMILIES)
 
 
 @dataclasses.dataclass
@@ -214,6 +251,71 @@ ADAPTIVE_SIM = SimConfig(mode="adaptive")
 PALLAS_SIM = SimConfig(mode="adaptive", engine="pallas")
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Execution config for the tiled/streaming evaluation mode.
+
+    ``DesignSpace.evaluate(..., stream=StreamConfig(...))`` switches from
+    the materialized engines to the streaming engine
+    (:mod:`repro.core.streaming`): the cell space is flattened along
+    ``axis_order``, cut into chunks of at most ``chunk_cells`` cells per
+    device, and every chunk runs through ONE cached executable that is
+    ``shard_map``-ped over ``devices`` devices.  Frontier / argbest /
+    feasibility resolve as running on-device reductions, so full per-cell
+    metric tensors never exist on host or device — only the reduced
+    winner codes (one small integer per cell) come back.
+
+    * ``chunk_cells`` — the per-device, per-dispatch cell budget (the
+      peak number of cells resident at once, asserted by the streaming
+      benchmarks).  Clamped down when the space is smaller.
+    * ``axis_order`` — the chunked cell-axis order (default: canonical
+      :data:`AXIS_ORDER`).  Must be a permutation of the space's cell
+      axes; it changes the dispatch order only, never the result.
+    * ``devices`` — shard width (default: every local device; CPU runs
+      expose more via ``XLA_FLAGS=--xla_force_host_platform_device_count``).
+    * ``mode`` — argbest direction; ``None`` picks the metric's natural
+      direction (``min`` for ``pj_per_bit`` / ``power_w``, else ``max``).
+    * ``constraints`` — optional
+      :class:`repro.core.selector.SelectionConstraints` folded into the
+      on-device reduction for analytic metrics (cells with no admissible
+      system read ``"(none)"``, matching the materialized frontier).
+    """
+
+    chunk_cells: int = 4096
+    axis_order: Optional[Tuple[str, ...]] = None
+    devices: Optional[int] = None
+    mode: Optional[str] = None
+    constraints: Any = None
+
+    def __post_init__(self):
+        if int(self.chunk_cells) < 1:
+            raise ValueError(f"StreamConfig.chunk_cells must be >= 1, got "
+                             f"{self.chunk_cells}")
+        if self.devices is not None and int(self.devices) < 1:
+            raise ValueError(f"StreamConfig.devices must be >= 1, got "
+                             f"{self.devices}")
+        if self.mode not in (None, "max", "min"):
+            raise ValueError(f"StreamConfig.mode must be None, 'max' or "
+                             f"'min', got {self.mode!r}")
+        if self.axis_order is not None:
+            object.__setattr__(self, "axis_order",
+                               tuple(str(a) for a in self.axis_order))
+
+    def key(self) -> Tuple:
+        """Static cache-key component (constraint VALUES are traced
+        inputs, so changing a threshold reuses the warm executable; the
+        constraint STRUCTURE — which checks are active — is static)."""
+        cons = self.constraints
+        cons_key = None if cons is None else (
+            cons.packaging, cons.max_relative_bit_cost is not None,
+            cons.max_backlog_knee is not None,
+            cons.max_power_w is not None,
+            cons.required_bandwidth_gbs is not None)
+        return (int(self.chunk_cells), self.axis_order,
+                None if self.devices is None else int(self.devices),
+                self.mode, cons_key)
+
+
 _PROGRAMS: Dict[Tuple, Any] = {}
 _FAMILY_STATS: Dict[str, CacheStats] = {}
 #: executables retained per engine family; oldest-inserted evicted beyond
@@ -253,7 +355,18 @@ def cached_program(family: str, key: Tuple, build_fn: Callable,
 
 
 def cache_stats(families: Optional[Sequence[str]] = None) -> CacheStats:
-    """Aggregate hit/miss counters, optionally restricted to ``families``."""
+    """Aggregate hit/miss counters, optionally restricted to ``families``.
+
+    Unknown family names raise ``KeyError`` — they used to aggregate
+    nothing, so a typo like ``"flitsim.symetric"`` silently reported zero
+    compiles instead of failing the assertion that cited it.
+    """
+    if families is not None:
+        known = set(KNOWN_FAMILIES) | set(_FAMILY_STATS)
+        bad = sorted(set(families) - known)
+        if bad:
+            raise KeyError(f"unknown cache families {bad}; choose from "
+                           f"{sorted(known)}")
     out = CacheStats()
     for fam, st in _FAMILY_STATS.items():
         if families is None or fam in families:
@@ -1072,14 +1185,31 @@ class DesignSpace:
     # -- evaluation ---------------------------------------------------------
 
     def evaluate(self, metrics: Optional[Sequence[str]] = None, *,
-                 sim: Optional[SimConfig] = None) -> SpaceResult:
+                 sim: Optional[SimConfig] = None,
+                 stream: Optional[StreamConfig] = None):
         """Resolve the requested metrics over the full joint axis space.
 
         ``sim`` overrides the ``DesignSpace(sim=...)`` config for this
         evaluation only — the flit-simulated metrics run fixed-horizon or
         convergence-adaptive accordingly (analytic metrics are closed
         forms and unaffected).
+
+        ``stream`` (a :class:`StreamConfig`) switches to the tiled /
+        streaming engine for 10^6–10^8-cell spaces: the cell space is
+        chunked along the configured axis order, every chunk runs through
+        ONE cached executable ``shard_map``-ped across devices, and
+        frontier / argbest / feasibility resolve as running on-device
+        reductions (full per-cell tensors never exist).  Streaming
+        reduces exactly ONE metric per call and returns a
+        :class:`repro.core.streaming.StreamResult` (winner labels
+        bit-identical to the materialized path) instead of a
+        :class:`SpaceResult`.
         """
+        if stream is not None:
+            from repro.core import streaming
+            return streaming.stream_evaluate(
+                self, metrics, sim if sim is not None else self.sim,
+                stream)
         cfg = sim if sim is not None else self.sim
         wanted = tuple(metrics) if metrics is not None else \
             self._default_metrics()
@@ -1390,7 +1520,7 @@ class DesignSpace:
         d_ax = self.axes.get("device_line_ui")
         us = tuple(u_ax.values) if u_ax is not None else (16.0,)
         ds = tuple(d_ax.values) if d_ax is not None else (64.0,)
-        util = np.asarray(flitsim.sweep_pipelining(
+        util = np.asarray(flitsim._sweep_pipelining_impl(
             k_ax.values, n_lines=self.n_lines, ucie_line_ui=us,
             device_line_ui=ds, sim=sim))        # [K, U, D]
         dims: List[str] = ["k"]
@@ -1409,6 +1539,24 @@ class DesignSpace:
             return {}
         return {"utilization": SpaceArray(tuple(dims), tuple(coords),
                                           util)}
+
+    # -- unified frontier reports -------------------------------------------
+
+    def report(self, spec=None) -> Dict[str, Any]:
+        """ONE entry point for every frontier report.
+
+        ``spec`` is a :class:`repro.core.report.ReportSpec` naming the
+        sections to build — ``"joint"`` (:func:`joint_frontier`),
+        ``"phy"`` / ``"sim_phy"`` (the PHY-stacked analytic and
+        simulation-corrected frontiers), ``"serving"``
+        (:meth:`serving_frontier`), and ``"frontier"`` (this instance's
+        own metric frontier over its axes).  Returns ``{section:``
+        :class:`repro.core.report.FrontierReport` ``}``; each payload is
+        byte-identical to the legacy builder it replaces (the
+        ``design_space.json`` sections are unchanged).
+        """
+        from repro.core.report import build_report
+        return build_report(spec, space=self)
 
     # -- serving frontier ---------------------------------------------------
 
@@ -1441,7 +1589,8 @@ def joint_frontier(n_fracs: int = 21,
                    catalog: Optional[Dict[str, Any]] = None,
                    n_flits: int = 2048,
                    constraints=None,
-                   sim: Optional[SimConfig] = None) -> Dict[str, Any]:
+                   sim: Optional[SimConfig] = None,
+                   phys: Optional[Sequence[Any]] = None) -> Dict[str, Any]:
     """Joint (mix x backlog x shoreline) frontier merging the flit-simulated
     efficiency grid with the analytic catalog grid.
 
@@ -1467,6 +1616,12 @@ def joint_frontier(n_fracs: int = 21,
     ``sim`` selects the flit-simulation config (:data:`FIXED_SIM`
     default; pass :data:`ADAPTIVE_SIM` for the convergence-adaptive
     early-exit engine — what the benchmarks and the explorer use).
+
+    The report folds in a ``sim_bandwidth_gbs`` section: the SAME
+    simulated-efficiency grid threaded onto each PHY generation's raw
+    link bandwidth (``phys`` — default UCIe-A/S at 32G plus the 48G
+    points), so PHY generations, queue depths and simulation corrections
+    land in ONE frontier section with zero extra compiles.
     """
     from repro.core.selector import sim_key_for
     fracs = np.linspace(0.0, 1.0, n_fracs)
@@ -1524,6 +1679,40 @@ def joint_frontier(n_fracs: int = 21,
                         "read_fraction_lo": lo, "read_fraction_hi": hi,
                         "analytic_best": str(pair[0]),
                         "simulated_best": str(pair[1])})
+    # -- folded PHY-absolute section ------------------------------------
+    # the same simulated-efficiency grid threaded onto each PHY's raw
+    # link bandwidth: winner regimes per (phy, backlog) with no extra
+    # simulation or compile (raw bandwidth is a per-PHY scale)
+    from repro.core.selector import approach_key_for
+    if phys is None:
+        from repro.core.ucie import (
+            UCIE_A_32G_55U, UCIE_A_48G_45U, UCIE_S_32G, UCIE_S_48G_110U)
+        phys = [UCIE_S_32G, UCIE_A_32G_55U, UCIE_S_48G_110U,
+                UCIE_A_48G_45U]
+    proto_arr = np.asarray(protocols, dtype=object)
+    sim_section: Dict[str, Any] = {
+        "phys": [p.name for p in phys],
+        "backlogs": [float(b) for b in backlogs],
+        "read_fractions": fracs.tolist(),
+        "peak_gbs_by_phy": {},
+        "best_protocol_by_phy": {},
+        "regimes_by_phy_backlog": {},
+    }
+    for p in phys:
+        gbs = sim.values * np.float32(p.raw_bandwidth_gbs)   # [P, B, M]
+        regs_by_bl = {}
+        for b, bl in enumerate(sim.coord("backlog")):
+            win = proto_arr[np.argmax(gbs[:, b, :], axis=0)]
+            regs_by_bl[f"{bl:g}"] = [
+                {"read_fraction_lo": lo, "read_fraction_hi": hi,
+                 "best": str(lab), "approach": approach_key_for(str(lab))}
+                for lo, hi, lab in regimes(win.tolist(), fracs)]
+        sim_section["regimes_by_phy_backlog"][p.name] = regs_by_bl
+        at70 = proto_arr[int(np.argmax(
+            gbs[:, -1, int(round(0.7 * (n_fracs - 1)))]))]
+        sim_section["best_protocol_by_phy"][p.name] = str(at70)
+        sim_section["peak_gbs_by_phy"][p.name] = float(gbs.max())
+
     return {
         "read_fractions": fracs.tolist(),
         "backlogs": [float(b) for b in backlogs],
@@ -1534,4 +1723,5 @@ def joint_frontier(n_fracs: int = 21,
         "simulated_best": sim_best.astype(str).tolist(),
         "disagreement_fraction": float(disagree.mean()),
         "disagreement_regions": regions,
+        "sim_bandwidth_gbs": sim_section,
     }

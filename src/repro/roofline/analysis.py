@@ -283,7 +283,7 @@ def memsys_bridge(report: RooflineReport, shoreline_mm: float = 8.0,
     :func:`repro.core.memsys.catalog_grid` program — one compiled call,
     not a per-system Python loop."""
     from repro.core import TrafficMix
-    from repro.core.memsys import catalog_grid
+    from repro.core.memsys import _catalog_grid_impl as catalog_grid
     mix = TrafficMix.from_bytes(report.read_bytes_per_chip,
                                 report.write_bytes_per_chip)
     grid = catalog_grid(mix.x, mix.y, shoreline_mm)

@@ -49,6 +49,19 @@ def summarize(ds: dict) -> dict:
             "disagreeing_backlogs": sorted(
                 {r["backlog"] for r in jf["disagreement_regions"]}),
         }
+        sbs = jf.get("sim_bandwidth_gbs")
+        if sbs is not None:
+            # the folded PHY-absolute subsection: winner labels only
+            # (peak GB/s floats excluded by design)
+            out["joint_frontier"]["sim_bandwidth_gbs"] = {
+                "phys": sbs["phys"],
+                "best_protocol_by_phy": sbs["best_protocol_by_phy"],
+                "regime_winners_by_phy_backlog": {
+                    phy: {bl: [r["best"] for r in regs]
+                          for bl, regs in sorted(by_bl.items())}
+                    for phy, by_bl in sorted(
+                        sbs["regimes_by_phy_backlog"].items())},
+            }
     pf = ds.get("phy_frontier")
     if pf is not None:
         out["phy_frontier"] = {
