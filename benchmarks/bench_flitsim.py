@@ -22,8 +22,10 @@ from benchmarks.common import time_us
 from repro.core import flitsim, mix_grid
 from repro.core.flitsim import (
     ADAPTIVE_SIM, ANALYTIC, PALLAS_SIM, SIMULATORS, SYMMETRIC_PARAMS,
-    simulate_grid, sweep, sweep_perturbed, sweep_pipelining,
+    simulate_grid, sweep_perturbed,
 )
+from repro.core.flitsim import _sweep_impl as sweep
+from repro.core.flitsim import _sweep_pipelining_impl as sweep_pipelining
 
 
 def _per_point_grid(mixes):
@@ -166,6 +168,46 @@ def run(rows: list):
                  f"cycles_run={vi['cycles_run']}/{vi['horizon']};"
                  f"stragglers={vi['stragglers']};"
                  f"n_periods={len(vi.get('periods', {}))}"))
+
+    # -- period-exact symmetric cut: dense drained-backlog grid -------------
+    # [3 symmetric protocols x 3 drained backlogs x 33 mixes]; drained
+    # credit pools settle into an exactly-repeating f32 core state, so the
+    # symmetric detector certifies the period inside its SYM_PERIOD_OBS
+    # observation window and extrapolates the warm-window delivery sum
+    # BITWISE to the 2048-flit horizon — agreement is exact, not approx
+    gx33, gy33 = mix_grid(33)
+    sym_mixes = list(zip(gx33.tolist(), gy33.tolist()))
+    sym_bls = [1.0, 1.5, 2.0]
+    sym_cells = len(SYMMETRIC_PARAMS) * len(sym_bls) * 33
+
+    def _dense_sym(sim=None):
+        return np.asarray(sweep(protocols=tuple(SYMMETRIC_PARAMS),
+                                mixes=sym_mixes, backlogs=sym_bls,
+                                sim=sim).efficiency)
+
+    eff_fixed_s, eff_pallas_s = _dense_sym(), _dense_sym(PALLAS_SIM)
+    dev_s = float(np.max(np.abs(eff_fixed_s - eff_pallas_s)))
+    assert dev_s == 0.0, (
+        f"symmetric period-exact engine deviates {dev_s:.2e} from the "
+        f"fixed engine on the drained dense grid (expected BITWISE)")
+    assert (eff_fixed_s.argmax(axis=0)
+            == eff_pallas_s.argmax(axis=0)).all(), (
+        "symmetric period-exact engine flips a protocol winner")
+    us_fixed_s = time_us(_dense_sym, warmup=1, iters=3)
+    us_pallas_s = time_us(lambda: _dense_sym(PALLAS_SIM), warmup=1, iters=3)
+    speedup_s = us_fixed_s / us_pallas_s
+    if not common.SMOKE:
+        assert speedup_s >= 2.0, (
+            f"symmetric period-exact cut only x{speedup_s:.2f} vs fixed "
+            f"XLA on the {sym_cells}-cell grid (expected >= x2.0)")
+    vs = flitsim.last_run_info()["flitsim.symmetric"]
+    rows.append(("flitsim/pallas_dense_sym_periodic", us_pallas_s,
+                 f"cells={sym_cells};fixed_us={us_fixed_s:.0f};"
+                 f"wall_speedup=x{speedup_s:.2f};"
+                 f"max_dev_vs_fixed={dev_s:.1e};"
+                 f"cycles_run={vs['cycles_run']}/{vs['horizon']};"
+                 f"stragglers={vs['stragglers']};"
+                 f"n_periods={len(vs.get('periods', {}))}"))
 
     # -- million-cell asymmetric grid: cycles/sec/cell per engine -----------
     # the fixed engine is rate-measured at a reduced 256-access horizon

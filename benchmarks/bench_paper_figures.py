@@ -25,7 +25,7 @@ from repro.core import (
     mixes_named, table1,
 )
 from repro.core.memsys import approach_grid
-from repro.core.selector import rank_grid
+from repro.core.selector import _rank_grid_impl as rank_grid
 
 
 def bench_table1(rows):

@@ -73,12 +73,14 @@ def main() -> None:
         print(f"# wrote {args.json}", file=sys.stderr)
         # repo-root flit-simulation trend file: batched-sweep us, the
         # adaptive-vs-fixed speedup, the cycles-to-convergence
-        # histograms, and the serving trace-capacity rows (tokens/sec
-        # tied to sim_bandwidth_gbs) — the perf trajectory tracked
-        # in-repo (and uploaded per CI matrix cell)
+        # histograms, the streaming sharded-sweep rows (async prefetch
+        # speedup + overlap fraction), and the serving trace-capacity
+        # rows (tokens/sec tied to sim_bandwidth_gbs) — the perf
+        # trajectory tracked in-repo (and uploaded per CI matrix cell)
         flit_rows = [{"name": n, "us_per_call": us, "derived": d}
                      for n, us, d in rows
-                     if n.startswith(("flitsim/", "serving/"))]
+                     if n.startswith(("flitsim/", "streaming/",
+                                      "serving/"))]
         if flit_rows:
             trend = os.path.join(os.path.dirname(os.path.dirname(
                 os.path.abspath(__file__))), "BENCH_flitsim.json")

@@ -103,9 +103,16 @@ under ``<family>.trace`` with ``phases``, ``cycles_per_phase``, and
 
 The positional legacy front-ends (``flitsim.sweep`` /
 ``sweep_pipelining``, ``memsys.catalog_grid``, ``selector.rank_grid``)
-are DEPRECATED compatibility wrappers over the same engines and cache —
-identical numerics, shared warm executables — and emit
-``DeprecationWarning``s pointing back at the migration table above.
+were RETIRED in PR 10 after warning since PR 9; the migration table in
+:mod:`repro.core.space` maps each retired idiom to its axes-first
+replacement, and the engines live on as the private ``_*_impl``
+functions the unified API lowers onto (identical numerics, shared warm
+executables).
+
+``flitsim.last_run_info()["stream.sim" / "stream.catalog"]`` reports the
+streaming engine's async dispatch telemetry — ``dispatches``,
+``prefetch`` (bounded in-flight depth), ``pad_cells``, and
+``overlap_frac`` (marshal time overlapped with in-flight device work).
 :func:`joint_frontier` is the first capability only the unified API can
 express: the (mix x backlog x shoreline) frontier marking where the flit
 simulation and the closed forms disagree about the best memory system.
@@ -132,10 +139,9 @@ from repro.core.space import (
 from repro.core.report import FrontierReport, ReportSpec, build_report
 from repro.core.streaming import StreamResult
 from repro.core.memsys import (
-    CatalogGrid, MemorySystem, catalog_grid, grid_cache_stats,
-    standard_catalog,
+    CatalogGrid, MemorySystem, grid_cache_stats, standard_catalog,
 )
 from repro.core.selector import (
-    GridRanking, RankedSystem, SelectionConstraints, best, rank, rank_grid,
+    GridRanking, RankedSystem, SelectionConstraints, best, rank,
 )
 from repro.core import cost, flitsim, space

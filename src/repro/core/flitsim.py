@@ -23,28 +23,29 @@ so parameter *stacks* (one leading axis per protocol, optionally folded with
 a perturbation axis) flow straight through ``jax.vmap``.  One jitted
 ``lax.scan`` evaluates an entire ``[P protocols, B backlogs, M mixes]`` grid
 in a single compiled program.  :func:`simulate_grid` is the engine entry
-point the axes-first :class:`repro.core.space.DesignSpace` lowers onto; the
-legacy front-ends are thin wrappers over it:
+point the axes-first :class:`repro.core.space.DesignSpace` lowers onto;
+the retired ``sweep`` front-end survives as the private ``_sweep_impl``
+engine body:
 
-    res = flitsim.sweep()                       # 5 protocols x 5 mixes
-    res = flitsim.sweep(mixes=grid, backlogs=[16, 64, 128])
+    res = _sweep_impl()                         # 5 protocols x 5 mixes
+    res = _sweep_impl(mixes=grid, backlogs=[16, 64, 128])
     res.efficiency                              # [P, B, M] (or [P, M])
     flitsim.sweep_perturbed([{}, {"credit_lines": 0.5}])   # sensitivity
 
-``sweep_pipelining`` batches the Fig-13 model over device counts — and,
+``_sweep_pipelining_impl`` batches the Fig-13 model over device counts — and,
 when ``ucie_line_ui`` / ``device_line_ui`` are sequences, over the full
 ``[k x ucie_line_ui x device_line_ui]`` joint grid (faster DRAM generations
 behind the logic die).  Compiled executables are memoized in the SHARED
 design-space cache (:mod:`repro.core.space`) keyed on (family, grid shape,
 static lengths, :class:`repro.core.space.SimConfig`) — a second
-identically-shaped sweep from ANY front-end (``sweep``, a ``DesignSpace``
+identically-shaped sweep from ANY front-end (a ``DesignSpace``
 evaluation, a scalar ``simulate_*`` call) reuses the warm executable with
 zero retracing, and alternating sim configs never invalidates other
 configs' entries.  ``compile_cache_stats()`` exposes this module's slice
 of the shared counters; the scalar entry points ``simulate_symmetric`` /
 ``simulate_asymmetric`` / ``simulate_lpddr6_pipelining`` are thin wrappers
 over a ``[1, 1, 1]`` grid, so they share the same cache and numerics
-bit-for-bit with ``sweep()``.
+bit-for-bit with the batched grid.
 
 Convergence-adaptive execution (``sim=ADAPTIVE_SIM``)
 -----------------------------------------------------
@@ -931,15 +932,28 @@ def last_run_info() -> Dict[str, Dict[str, Any]]:
     The asymmetric periodic detector additionally reports a ``periods``
     histogram ({detected credit period: cell count}).
 
+    Streaming dispatch telemetry (PR 10): ``stream.*`` families carry a
+    ``stream`` record — ``dispatches``, ``prefetch`` (bounded in-flight
+    depth), ``pad_cells`` (replicated tail cells across all dispatches)
+    and ``overlap_frac`` (fraction of host marshalling wall time spent
+    while at least one dispatch was in flight on the device).
+
     Fixed-mode runs do not update it.  The raw arrays are kept lazily on
     device so the hot path pays no host sync; this accessor materializes
-    them."""
+    them ONCE per recorded run (the materialized view is memoized, so
+    polling telemetry from a dispatch loop never re-syncs)."""
     out: Dict[str, Dict[str, Any]] = {}
     for fam, info in _LAST_RUN_INFO.items():
+        cached = info.get("_materialized")
+        if cached is not None:
+            out[fam] = cached
+            continue
         d = {k: v for k, v in info.items() if not k.startswith("_")}
-        if d.get("mode") == "trace":
-            # trace-scan runs (``family.trace`` keys) report phase counts
-            # and state-carry depth directly; no convergence histogram
+        if d.get("mode") in ("trace", "stream"):
+            # trace-scan runs (``family.trace`` keys) and streaming
+            # dispatch runs report their counters directly; no
+            # convergence histogram
+            info["_materialized"] = d
             out[fam] = d
             continue
         chunk = d["chunk"]
@@ -961,6 +975,7 @@ def last_run_info() -> Dict[str, Dict[str, Any]]:
             p = np.asarray(info["_periods"]).reshape(-1)
             pv, pc = np.unique(p[p > 0], return_counts=True)
             d["periods"] = {int(v): int(c) for v, c in zip(pv, pc)}
+        info["_materialized"] = d
         out[fam] = d
     return out
 
@@ -974,6 +989,25 @@ def _record_adaptive(family: str, horizon: int, chunk: int, k_exit,
         "stragglers": int(stragglers), "engine": engine,
         "launches": int(launches), "elapsed_s": elapsed_s,
         "_k_exit": k_exit, "_conv_at": conv_at, "_periods": periods,
+    }
+
+
+def _record_stream(family: str, *, dispatches: int, prefetch: int,
+                   pad_cells: int, overlap_frac: float, cells: int,
+                   elapsed_s: Optional[float] = None,
+                   marshal_s: Optional[float] = None) -> None:
+    """Telemetry for a streaming dispatch run (``stream.*`` families):
+    dispatch count, bounded in-flight depth, replicated pad-cell total,
+    and the marshal-vs-device overlap fraction (how much of the host's
+    index-marshalling wall time ran while a previous chunk was still in
+    flight — the async win over the strictly sequential loop).
+    ``marshal_s`` is the total host marshalling wall time, so
+    ``marshal_s / elapsed_s`` bounds the async win available."""
+    _LAST_RUN_INFO[family] = {
+        "mode": "stream", "dispatches": int(dispatches),
+        "prefetch": int(prefetch), "pad_cells": int(pad_cells),
+        "overlap_frac": float(overlap_frac), "cells": int(cells),
+        "elapsed_s": elapsed_s, "marshal_s": marshal_s,
     }
 
 
@@ -1053,6 +1087,16 @@ def _pad_pow2(idx: np.ndarray) -> np.ndarray:
 # horizon, and escalates the (rare) undetected cells through the usual
 # exact full-horizon path — closing the asymmetric warm window at ~128
 # steps instead of the chunked core's ~1280/4096.
+#
+# The symmetric family mirrors it (PR 10) with a stricter certificate:
+# the pool/credit core's proportional-split division breaks bitwise
+# orbits at saturated backlogs, so the detector requires an EXACT f32
+# match of the full 7-component core against the lagged observation row
+# plus an integer-valued delivery window.  Where that holds (low-backlog
+# and degenerate-mix cells lock into period <= PERIOD_MAX orbits) the
+# warm-window delivery sum extrapolates in closed form BIT-IDENTICALLY
+# to the fixed engine; saturated grids are mostly undetected and fall
+# through to the chunked adaptive core unchanged.
 
 
 def _sym_param_rows(pstack, x, y, backlogs):
@@ -1147,6 +1191,64 @@ def _run_asymmetric_periodic(pstack, x, y, horizon: int, sim: SimConfig):
     conv_at = np.where(det_np, 1, -1).astype(np.int32).reshape(P, M)
     _record_adaptive("flitsim.asymmetric", horizon, fs_ref.PERIOD_OBS, 1,
                      conv_at, undet, engine=sim.engine, launches=launches,
+                     elapsed_s=time.perf_counter() - t0,
+                     periods=out[2, :cells])
+    return rep
+
+
+def _run_symmetric_periodic(pstack, x, y, backlogs, horizon: int,
+                            sim: SimConfig):
+    """Period-exact symmetric run (one launch + exact escalation of
+    undetected cells).  Detection is an EXACT f32 match of the full
+    7-component pool/credit core against a lagged observation row — a
+    trajectory certificate, so detected cells reproduce the fixed
+    engine's report bit-for-bit.  Returns the report grid, or ``None``
+    when the grid is mostly aperiodic (saturated backlogs) and the
+    chunked core is the better tool."""
+    from repro.kernels.flit_sim import ops as fs_ops
+    from repro.kernels.flit_sim import ref as fs_ref
+    P, B, M = pstack.g_slots.shape[0], backlogs.shape[0], x.shape[0]
+    cells = P * B * M
+    t0 = time.perf_counter()
+    # the row-stacking runs INSIDE the cached program: the whole periodic
+    # run is one dispatch from the host's point of view
+    if sim.engine == "pallas":
+        tile, cpad = fs_ops.tile_for(cells, fs_ops.SYM_PERIODIC_MAX_TILE)
+
+        def build(ps, xs, ys, bs):
+            rows = fs_ops.pad_cells(_sym_param_rows(ps, xs, ys, bs), cpad)
+            return fs_ops.symmetric_periodic_launch(
+                rows, n_flits=horizon, tile=tile, cells=cells)[0]
+    else:
+        def build(ps, xs, ys, bs):
+            return fs_ref.symmetric_periodic_compute(
+                _sym_param_rows(ps, xs, ys, bs), n_flits=horizon)
+    fn = cached_program("flitsim.symmetric",
+                        (P, B, M, horizon, "periodic") + sim.key(),
+                        build, (pstack, x, y, backlogs))
+    out = fn(pstack, x, y, backlogs)
+    det_np = np.asarray(out[1, :cells]) > 0.5
+    undet = int((~det_np).sum())
+    if undet > max(cells // 4, 8):
+        return None
+    rep = out[0, :cells].reshape(P, B, M)
+    launches = 1
+    if undet:
+        conv_np = det_np.reshape(P, B, M)
+        rep = _escalate_stragglers(
+            "flitsim.symmetric",
+            functools.partial(_symmetric_cells_grid, n_flits=horizon),
+            horizon, rep, conv_np,
+            lambda idx: (_gather_cells(pstack, idx[:, 0]),
+                         jnp.asarray(np.asarray(x)[idx[:, 2]]),
+                         jnp.asarray(np.asarray(y)[idx[:, 2]]),
+                         jnp.asarray(np.asarray(backlogs)[idx[:, 1]])))
+        launches += 1
+    jax.block_until_ready(rep)
+    conv_at = np.where(det_np, 1, -1).astype(np.int32).reshape(P, B, M)
+    _record_adaptive("flitsim.symmetric", horizon, fs_ref.SYM_PERIOD_OBS,
+                     1, conv_at, undet, engine=sim.engine,
+                     launches=launches,
                      elapsed_s=time.perf_counter() - t0,
                      periods=out[2, :cells])
     return rep
@@ -1296,6 +1398,21 @@ def _run_symmetric(pstack, x, y, backlogs, n_flits: int,
     if chunk < 8:               # divisor-poor horizon: adaptive degrades
         return _run_symmetric(pstack, x, y, backlogs, horizon,
                               sim=FIXED_SIM)
+    from repro.kernels.flit_sim.ref import (
+        SYM_PERIOD_OBS, SYM_PERIODIC_MAX_BACKLOG,
+    )
+    if (horizon // 4 >= SYM_PERIOD_OBS
+            and float(np.max(np.asarray(backlogs)))
+            <= SYM_PERIODIC_MAX_BACKLOG):
+        # period-exact cut (both engines): observe the pool-state window
+        # before the warm window opens and extrapolate bitwise; falls
+        # through to the chunked core on mostly aperiodic grids (None).
+        # Saturated grids skip the probe outright (see the
+        # SYM_PERIODIC_MAX_BACKLOG note in kernels/flit_sim/ref.py)
+        rep = _run_symmetric_periodic(pstack, x, y, backlogs, horizon,
+                                      sim)
+        if rep is not None:
+            return rep
     if sim.engine == "pallas":
         return _run_symmetric_pallas(pstack, x, y, backlogs, horizon,
                                      chunk, sim)
@@ -1697,7 +1814,7 @@ def _sweep_impl(protocols: Optional[Sequence[str]] = None,
                 backlogs: Union[None, float, Sequence[float]] = None,
                 *, n_flits: int = 2048, n_accesses: int = 4096,
                 sim: Optional[SimConfig] = None) -> SweepResult:
-    """Engine body behind the deprecated :func:`sweep` front-end — internal
+    """Engine body of the retired ``sweep`` front-end — internal
     callers (``backlog_knees``) use this directly, warning-free."""
     keys = tuple(protocols) if protocols is not None else tuple(SIMULATORS)
     if not keys:
@@ -1721,47 +1838,6 @@ def _sweep_impl(protocols: Optional[Sequence[str]] = None,
                            efficiency=eff[:, 0, :])
     return SweepResult(protocols=keys, mixes=mix_tuples,
                        backlogs=backlog_vals, efficiency=eff)
-
-
-def sweep(protocols: Optional[Sequence[str]] = None,
-          mixes=None,
-          backlogs: Union[None, float, Sequence[float]] = None,
-          *, n_flits: int = 2048, n_accesses: int = 4096,
-          sim: Optional[SimConfig] = None) -> SweepResult:
-    """Evaluate a full ``protocols x backlogs x mixes`` grid in one compiled
-    call per simulator family.
-
-    .. deprecated:: PR 9
-        Positional legacy front-end; declare the same grid axes-first —
-        ``DesignSpace([axis("protocol", keys), axis("backlog", ...),
-        axis("mix", ...)], sim=...).evaluate(metrics=("sim_efficiency",))``
-        — or stream it at scale via ``evaluate(..., stream=StreamConfig())``.
-
-    Compatibility wrapper over the shared design-space engine
-    (:func:`simulate_grid` — what :class:`repro.core.space.DesignSpace`
-    lowers onto): identical numerics, identical compile-cache keys.
-
-    Args:
-      protocols: keys from :data:`SIMULATORS` (default: all five).
-      mixes: sequence of ``(x, y)`` tuples or ``TrafficMix`` objects
-        (default: the five canonical mixes).
-      backlogs: ``None`` (default 64), a scalar, or a sequence.  A sequence
-        adds a ``B`` axis; backlog only affects the symmetric family (the
-        asymmetric rows are broadcast across it).
-      n_flits / n_accesses: static simulation lengths per family.
-      sim: execution config — :data:`FIXED_SIM` (default) or
-        :data:`ADAPTIVE_SIM` (chunked early-exit; the benchmarks/explorer
-        default).
-
-    Returns a :class:`SweepResult` whose ``efficiency`` grid is directly
-    comparable to ``ANALYTIC[key].bw_eff(x, y)``.
-    """
-    space_mod.warn_legacy(
-        "flitsim.sweep()",
-        "DesignSpace([axis('backlog', ...), axis('mix', ...)], sim=...)"
-        ".evaluate(metrics=('sim_efficiency',))")
-    return _sweep_impl(protocols, mixes, backlogs, n_flits=n_flits,
-                       n_accesses=n_accesses, sim=sim)
 
 
 def sweep_perturbed(perturbations: Sequence[Mapping[str, float]],
@@ -1840,7 +1916,7 @@ def _sweep_pipelining_impl(ks: Sequence[int], n_lines: int = 512,
                            ucie_line_ui: Union[float, Sequence[float]] = 16,
                            device_line_ui: Union[float, Sequence[float]] = 64,
                            sim: Optional[SimConfig] = None) -> jnp.ndarray:
-    """Engine body behind the deprecated :func:`sweep_pipelining` front-end
+    """Engine body of the retired ``sweep_pipelining`` front-end
     — the ``k`` / ``ucie_line_ui`` / ``device_line_ui`` axes lower here."""
     ks = tuple(int(k) for k in ks)
     squeeze = (np.ndim(ucie_line_ui) == 0 and np.ndim(device_line_ui) == 0)
@@ -1850,32 +1926,6 @@ def _sweep_pipelining_impl(ks: Sequence[int], n_lines: int = 512,
     util = _run_pipelining(jnp.asarray(ks, jnp.int32), us, ds,
                            max_k, int(n_lines), sim=sim)
     return util[:, 0, 0] if squeeze else util
-
-
-def sweep_pipelining(ks: Sequence[int], n_lines: int = 512,
-                     ucie_line_ui: Union[float, Sequence[float]] = 16,
-                     device_line_ui: Union[float, Sequence[float]] = 64,
-                     sim: Optional[SimConfig] = None) -> jnp.ndarray:
-    """Batched Fig-13 model, one compiled call.
-
-    .. deprecated:: PR 9
-        Positional legacy front-end; declare the grid axes-first —
-        ``DesignSpace([axis("k", ks), axis("ucie_line_ui", ...),
-        axis("device_line_ui", ...)]).evaluate(
-        metrics=("utilization",))``.
-
-    Scalar ``ucie_line_ui`` / ``device_line_ui`` give link utilization
-    ``[K]`` over device counts ``ks`` (legacy behavior).  Passing
-    sequences sweeps the joint ``[K, U, D]`` grid — modeling faster DRAM
-    generations (smaller ``device_line_ui``) and faster UCIe links
-    (smaller ``ucie_line_ui``) behind the logic die.
-    """
-    space_mod.warn_legacy(
-        "flitsim.sweep_pipelining()",
-        "DesignSpace([axis('k', ks), ...]).evaluate("
-        "metrics=('utilization',))")
-    return _sweep_pipelining_impl(ks, n_lines, ucie_line_ui,
-                                  device_line_ui, sim=sim)
 
 
 # -- convenience: analytic counterparts for the property tests ---------------

@@ -10,9 +10,9 @@ closed-form metrics into ``[S, ...]`` arrays produced by a single compiled
 (and memoized) program — this is the analytic engine the axes-first
 :class:`repro.core.space.DesignSpace` lowers onto.  Executables live in the
 SHARED design-space compile cache (:mod:`repro.core.space`), keyed on
-(catalog, grid shapes): any front-end — ``catalog_grid``, ``rank_grid``,
+(catalog, grid shapes): any front-end — ``_catalog_grid_impl``,
 ``bridge_design_space``, or a ``DesignSpace`` evaluation — that requests an
-identically-shaped grid runs the warm executable.  :func:`catalog_grid` and
+identically-shaped grid runs the warm executable.  ``_catalog_grid_impl`` and
 :func:`approach_grid` remain as compatibility wrappers returning the legacy
 stacked dataclasses.
 
@@ -230,7 +230,7 @@ def run_catalog_program(items: Tuple[Tuple[str, MemorySystem], ...],
 def _catalog_grid_impl(x, y, shoreline_mm=8.0,
                        catalog: Optional[Dict[str, MemorySystem]] = None,
                        ) -> CatalogGrid:
-    """Engine body behind the deprecated :func:`catalog_grid` front-end —
+    """Engine body of the retired ``catalog_grid`` front-end —
     internal callers (``selector.rank``, the roofline bridge) use this
     directly, warning-free."""
     items = (default_catalog_items() if catalog is None
@@ -244,34 +244,6 @@ def _catalog_grid_impl(x, y, shoreline_mm=8.0,
         relative_bit_cost=jnp.asarray(
             [ms.relative_bit_cost for _, ms in items], jnp.float32),
     )
-
-
-def catalog_grid(x, y, shoreline_mm=8.0,
-                 catalog: Optional[Dict[str, MemorySystem]] = None,
-                 ) -> CatalogGrid:
-    """Evaluate every catalog system over a mix grid in one compiled call.
-
-    .. deprecated:: PR 9
-        Positional legacy front-end; declare the grid axes-first —
-        ``DesignSpace([axis("read_fraction", ...), axis("shoreline_mm",
-        ...)]).evaluate()`` — or stream it at scale via
-        ``evaluate(..., stream=StreamConfig())``.
-
-    Compatibility wrapper over :func:`run_catalog_program` (the shared
-    design-space engine).  ``x`` / ``y`` may be scalars or arrays of any
-    (matching) shape, and ``shoreline_mm`` a scalar or an array
-    broadcastable against them (e.g. ``x``/``y`` of shape ``[R, 1]`` with
-    shorelines ``[L]`` gives metric grids ``[S, R, L]``).  The stacked
-    program is memoized per (catalog, grid shape), so repeated grids of
-    the same shape — from here, from ``rank_grid``, or from a
-    ``DesignSpace`` evaluation — reuse the warm executable
-    (``grid_cache_stats()`` exposes hit/miss counters).
-    """
-    space_mod.warn_legacy(
-        "memsys.catalog_grid()",
-        "DesignSpace([axis('read_fraction', ...), "
-        "axis('shoreline_mm', ...)]).evaluate()")
-    return _catalog_grid_impl(x, y, shoreline_mm, catalog)
 
 
 @dataclasses.dataclass(frozen=True)

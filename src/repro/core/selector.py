@@ -8,9 +8,9 @@ UCIe offers the best power-efficient performance" — falls out of this
 ranking, and the tests assert it does.
 
 Ranking consumes the batched catalog grid (:func:`repro.core.memsys.
-catalog_grid` — itself a wrapper over the shared design-space engine in
+_catalog_grid_impl` — the shared design-space engine in
 :mod:`repro.core.space`): every system's metrics come from one stacked,
-compiled call, and :func:`rank_grid` extends the same program to dense mix
+compiled call, and ``_rank_grid_impl`` extends the same program to dense mix
 grids — the best system for hundreds of (x, y) points resolves in a single
 compiled evaluation instead of a per-point Python loop.  The masking /
 argbest core is :func:`grid_ranking`; its static per-system admissibility
@@ -280,25 +280,21 @@ def grid_ranking(items, grid: CatalogGrid,
                        score=masked, valid=valid, grid=grid)
 
 
-def rank_grid(x, y,
-              constraints: SelectionConstraints = SelectionConstraints(),
-              catalog: Optional[Dict[str, MemorySystem]] = None,
-              objective: str = "bandwidth",
-              shoreline_mm=None,
-              valid_mask=None) -> GridRanking:
-    """Rank the whole catalog over a dense mix grid in one compiled call.
-
-    Compatibility wrapper: one :func:`catalog_grid` evaluation (shared
-    design-space engine) followed by :func:`grid_ranking`.
+def _rank_grid_impl(x, y,
+                    constraints: SelectionConstraints = SelectionConstraints(),
+                    catalog: Optional[Dict[str, MemorySystem]] = None,
+                    objective: str = "bandwidth",
+                    shoreline_mm=None,
+                    valid_mask=None) -> GridRanking:
+    """Rank the whole catalog over a dense mix grid in one compiled call:
+    one :func:`repro.core.memsys._catalog_grid_impl` evaluation (shared
+    design-space engine) followed by :func:`grid_ranking`.  The
+    composition engine behind the axes-first path — prefer
+    ``res = DesignSpace([axis("read_fraction", ...)]).evaluate()`` then
+    ``res.frontier("bandwidth_gbs", where=res.feasible(constraints))``.
 
     ``x`` / ``y`` are arrays of matching shape (e.g. from ``mix_grid``);
     returns the per-point argbest plus the full masked score grid.
-
-    .. deprecated:: PR 9
-        Positional legacy front-end; use the axes-first path —
-        ``res = DesignSpace([axis("read_fraction", ...)]).evaluate()``
-        then ``res.frontier("bandwidth_gbs",
-        where=res.feasible(constraints))``.
 
     ``shoreline_mm`` (default: ``constraints.shoreline_mm``) may itself be
     an array broadcastable against ``x`` — pass ``x``/``y`` of shape
@@ -307,10 +303,6 @@ def rank_grid(x, y,
     from a single compiled evaluation.  ``valid_mask`` adds point-dependent
     admissibility (see :func:`grid_ranking`).
     """
-    space_mod.warn_legacy(
-        "selector.rank_grid()",
-        "DesignSpace([axis('read_fraction', ...)]).evaluate() with "
-        "res.frontier(..., where=res.feasible(constraints))")
     items = _catalog_items(catalog)
     if shoreline_mm is None:
         shoreline_mm = constraints.shoreline_mm

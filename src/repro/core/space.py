@@ -23,11 +23,13 @@ front door to those sweeps:
     flit-simulated efficiency grid with the analytic catalog grid and
     reports where simulation and the closed forms disagree.
 
-The legacy entry points (``flitsim.sweep`` / ``sweep_pipelining``,
-``memsys.catalog_grid`` / ``approach_grid``, ``selector.rank_grid``,
-``analysis.bridge_design_space``) remain as thin compatibility wrappers
-over this module; they share the cache below, so warming the space through
-one front-end warms every other.
+The deprecated positional front-ends (``flitsim.sweep`` /
+``sweep_pipelining``, ``memsys.catalog_grid``, ``selector.rank_grid``)
+were retired in PR 10 after a deprecation cycle; their engines live on
+as the private ``_sweep_impl`` / ``_sweep_pipelining_impl`` /
+``_catalog_grid_impl`` / ``_rank_grid_impl`` functions this module
+lowers onto, sharing the cache below — the migration table further down
+maps each retired idiom to its axes-first replacement.
 
 Shared compile cache
 --------------------
@@ -36,7 +38,7 @@ Every batched engine memoizes its compiled executable here, keyed on
 stack and every grid shape and static length.  ``cache_stats()`` exposes
 hit/miss counters globally or per family — one miss == one trace+compile;
 tests assert the full joint space compiles exactly once per engine family
-and that legacy wrappers run warm against a space-primed cache.
+and that the ``_*_impl`` engines run warm against a space-primed cache.
 
 Migration: PHY sweeps and feasibility masking
 ---------------------------------------------
@@ -81,7 +83,7 @@ Simulation execution config (:class:`SimConfig`)
 ------------------------------------------------
 The flit simulators run in one of two modes, selected by a
 :class:`SimConfig` threaded through ``DesignSpace(sim=...)`` /
-``evaluate(sim=...)`` and every legacy front-end (``flitsim.sweep*``,
+``evaluate(sim=...)`` and every engine entry point (``_sweep_impl``,
 ``backlog_knees``, ``joint_frontier``, ``bridge_design_space``):
 
 * ``mode="fixed"`` (default) — the full fixed-horizon ``lax.scan``
@@ -101,29 +103,12 @@ triple compiles once and stays warm.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import (
     Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union,
 )
 
 import jax
 import numpy as np
-
-#: appended to every legacy front-end DeprecationWarning — points at the
-#: migration table in the :mod:`repro.core` package docstring
-MIGRATION_HINT = (
-    "see the migration table in the repro.core package docstring "
-    "(src/repro/core/__init__.py) for the axes-first DesignSpace / "
-    "report(spec) / streaming replacements")
-
-
-def warn_legacy(name: str, replacement: str) -> None:
-    """Deprecation warning for a positional legacy front-end, carrying
-    the axes-first replacement and the package migration-table hint."""
-    warnings.warn(
-        f"{name} is a deprecated positional front-end; use {replacement} "
-        f"instead — {MIGRATION_HINT}", DeprecationWarning, stacklevel=3)
-
 
 # =========================================================================
 # Shared shape-keyed compile cache
@@ -279,6 +264,13 @@ class StreamConfig:
       :class:`repro.core.selector.SelectionConstraints` folded into the
       on-device reduction for analytic metrics (cells with no admissible
       system read ``"(none)"``, matching the materialized frontier).
+    * ``prefetch`` — bounded in-flight dispatch depth of the async
+      double-buffered loop: the host marshals chunk ``t+1``'s cell
+      indices (pure numpy) while up to ``prefetch`` earlier chunks are
+      still executing on the device, and retires results strictly FIFO
+      so the running reductions fold in the SAME order as the
+      sequential loop (``prefetch=1``) — winners stay bit-identical at
+      every depth.
     """
 
     chunk_cells: int = 4096
@@ -286,11 +278,15 @@ class StreamConfig:
     devices: Optional[int] = None
     mode: Optional[str] = None
     constraints: Any = None
+    prefetch: int = 2
 
     def __post_init__(self):
         if int(self.chunk_cells) < 1:
             raise ValueError(f"StreamConfig.chunk_cells must be >= 1, got "
                              f"{self.chunk_cells}")
+        if int(self.prefetch) < 1:
+            raise ValueError(f"StreamConfig.prefetch must be >= 1, got "
+                             f"{self.prefetch}")
         if self.devices is not None and int(self.devices) < 1:
             raise ValueError(f"StreamConfig.devices must be >= 1, got "
                              f"{self.devices}")
@@ -313,7 +309,7 @@ class StreamConfig:
             cons.required_bandwidth_gbs is not None)
         return (int(self.chunk_cells), self.axis_order,
                 None if self.devices is None else int(self.devices),
-                self.mode, cons_key)
+                self.mode, int(self.prefetch), cons_key)
 
 
 _PROGRAMS: Dict[Tuple, Any] = {}

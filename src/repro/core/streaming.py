@@ -32,10 +32,25 @@ Simulated metrics stream under the FIXED engine only (the adaptive cores'
 early-exit schedule depends on batch shape, which would break the
 bit-identity contract across chunk sizes); control cost via
 ``DesignSpace(n_flits=..., n_accesses=...)`` instead.
+
+Async double-buffered dispatch: the per-dispatch loop marshals chunk
+``t+1``'s cell indices (pure numpy — ``_chunk_ids`` plus the
+mix/backlog/perturbation gathers) while up to ``StreamConfig.prefetch``
+earlier chunks are still in flight on the device, and blocks only when
+the in-flight window is full.  Results retire strictly FIFO, so the
+running host-side folds (winner-code scatter, count sums, best maxima)
+execute in EXACTLY the order of the sequential loop — ``prefetch=1``
+reduces to the sequential schedule, and every depth produces
+bit-identical ``StreamResult`` contents.  The FIFO retire is the one
+audited host sync of the loop (see the RL004 suppressions); per-run
+dispatch/overlap telemetry lands in
+``flitsim.last_run_info()["stream.*"]``.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import time
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -340,7 +355,26 @@ def _stream_sim(space, metric: str, sim, stream) -> StreamResult:
     a_sym = np.arange(p_sym, dtype=np.int64)
     a_asym = np.arange(p_asym, dtype=np.int64)
     prog = None
+    prefetch = int(stream.prefetch)
+    t0 = time.perf_counter()
+    marshal_s = overlap_s = 0.0
+    inflight: Any = collections.deque()    # FIFO of (lo, live, results)
+
+    def retire():
+        # the ONE audited host sync of the dispatch loop: the OLDEST
+        # in-flight chunk blocks here, so folds run in sequential order
+        lo, live, (codes, counts, best) = inflight.popleft()
+        # repro-lint: disable=RL004  (audited FIFO retire sync)
+        codes_np, counts_np, best_np = (np.asarray(codes),
+                                        np.asarray(counts),
+                                        np.asarray(best))
+        codes_out[lo:lo + live] = codes_np[:live]
+        counts_total[...] += counts_np.astype(np.int64)
+        np.maximum(best_total, best_np.astype(np.float64),
+                   out=best_total)
+
     for t in range(n_dispatch):
+        m0 = time.perf_counter()
         lo = t * step
         ids, valid, live = _chunk_ids(lo, step, n_cells)
         multi = np.unravel_index(ids, shape_perm)
@@ -362,13 +396,24 @@ def _stream_sim(space, metric: str, sim, stream) -> StreamResult:
             jax.tree_util.tree_map(lambda l: l[rows_asym], asym_host),
             np.repeat(xf[m_idx], p_asym), np.repeat(yf[m_idx], p_asym),
             raw, valid)
+        dm = time.perf_counter() - m0
+        marshal_s += dm
+        if inflight:                # marshalled while a chunk was in flight
+            overlap_s += dm
         if prog is None:
             prog = space_mod.cached_program("stream.sim", key, chunk_fn,
                                             args)
-        codes, counts, best = prog(*args)
-        codes_out[lo:lo + live] = np.asarray(codes)[:live]
-        counts_total += np.asarray(counts, np.int64)
-        best_total = np.maximum(best_total, np.asarray(best, np.float64))
+        inflight.append((lo, live, prog(*args)))
+        while len(inflight) >= prefetch:
+            retire()
+    while inflight:
+        retire()
+    flitsim._record_stream(
+        "stream.sim", dispatches=n_dispatch, prefetch=prefetch,
+        pad_cells=n_dispatch * step - n_cells,
+        overlap_frac=overlap_s / marshal_s if marshal_s else 0.0,
+        cells=n_cells, elapsed_s=time.perf_counter() - t0,
+        marshal_s=marshal_s)
 
     pert_labels = (tuple(pert_ax.labels) if pert_ax is not None
                    else ("baseline",))
@@ -534,11 +579,31 @@ def _stream_catalog(space, metric: str, sim, stream) -> StreamResult:
     misses0 = _stream_misses()
     codes_out = np.empty(n_cells, np.int16)
     counts_total = np.zeros(n_systems, np.int64)
-    none_total = 0
+    none_total = np.zeros((), np.int64)
     best_total = np.full(n_systems, -np.inf if is_max else np.inf,
                          np.float64)
     prog = None
+    prefetch = int(stream.prefetch)
+    t0 = time.perf_counter()
+    marshal_s = overlap_s = 0.0
+    inflight: Any = collections.deque()    # FIFO of (lo, live, results)
+    acc = np.maximum if is_max else np.minimum
+
+    def retire():
+        # the ONE audited host sync of the dispatch loop: the OLDEST
+        # in-flight chunk blocks here, so folds run in sequential order
+        lo, live, (codes, counts, best, none_ct) = inflight.popleft()
+        # repro-lint: disable=RL004  (audited FIFO retire sync)
+        codes_np, counts_np, best_np, none_np = (
+            np.asarray(codes), np.asarray(counts), np.asarray(best),
+            np.asarray(none_ct))
+        codes_out[lo:lo + live] = codes_np[:live]
+        counts_total[...] += counts_np.astype(np.int64)
+        none_total[...] += np.int64(none_np)
+        acc(best_total, best_np.astype(np.float64), out=best_total)
+
     for t in range(n_dispatch):
+        m0 = time.perf_counter()
         lo = t * step
         ids, valid, live = _chunk_ids(lo, step, n_cells)
         multi = np.unravel_index(ids, shape_perm)
@@ -555,15 +620,25 @@ def _stream_catalog(space, metric: str, sim, stream) -> StreamResult:
         adm = (static[None, :]
                & knee_adm[:, k_idx].T).astype(np.int32)     # [step, S]
         args = (xf[m_idx], yf[m_idx], sls[l_idx], adm, thr, valid)
+        dm = time.perf_counter() - m0
+        marshal_s += dm
+        if inflight:                # marshalled while a chunk was in flight
+            overlap_s += dm
         if prog is None:
             prog = space_mod.cached_program("stream.catalog", key,
                                             chunk_fn, args)
-        codes, counts, best, none_ct = prog(*args)
-        codes_out[lo:lo + live] = np.asarray(codes)[:live]
-        counts_total += np.asarray(counts, np.int64)
-        none_total += int(none_ct)
-        acc = np.maximum if is_max else np.minimum
-        best_total = acc(best_total, np.asarray(best, np.float64))
+        inflight.append((lo, live, prog(*args)))
+        while len(inflight) >= prefetch:
+            retire()
+    while inflight:
+        retire()
+    from repro.core import flitsim
+    flitsim._record_stream(
+        "stream.catalog", dispatches=n_dispatch, prefetch=prefetch,
+        pad_cells=n_dispatch * step - n_cells,
+        overlap_frac=overlap_s / marshal_s if marshal_s else 0.0,
+        cells=n_cells, elapsed_s=time.perf_counter() - t0,
+        marshal_s=marshal_s)
 
     full = [(d, True, tuple(space.axes[d].labels)) for d in mix_dims]
     sl_labels = (tuple(sl_ax.labels) if sl_ax is not None
@@ -573,7 +648,7 @@ def _stream_catalog(space, metric: str, sim, stream) -> StreamResult:
                             np.asarray(keys + ("(none)",), dtype=object))
     win_counts = {k: int(counts_total[i]) for i, k in enumerate(keys)}
     if cons is not None:
-        win_counts["(none)"] = none_total
+        win_counts["(none)"] = int(none_total)
     fill64 = np.float64(fill)
     return StreamResult(
         metric=metric, reduce_dim="system", mode=mode, labels=keys,

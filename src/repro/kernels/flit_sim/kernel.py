@@ -27,9 +27,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.flit_sim.ref import (
-    ASYM_ROWS, PIPE_ROWS, SCAL_COLS, SYM_ROWS,
+    ASYM_ROWS, PIPE_ROWS, SCAL_COLS, SYM_PERIODIC_ROWS, SYM_ROWS,
     asymmetric_periodic_compute, pipelining_chunk_compute,
-    symmetric_chunk_compute,
+    symmetric_chunk_compute, symmetric_periodic_compute,
 )
 
 #: jax renamed TPUCompilerParams -> CompilerParams; support both so the
@@ -42,11 +42,16 @@ _CompilerParams = getattr(pltpu, "CompilerParams",
 MAX_TILE = 8192
 LANE = 128
 
+#: the symmetric periodic observer holds 8 PERIOD_WINDOW-row bands
+#: (~520 rows of f32) per tile, so its cell tile is capped lower than
+#: the chunk kernels' to keep the window ring inside VMEM
+SYM_PERIODIC_MAX_TILE = 2048
 
-def tile_for(cells: int) -> tuple:
+
+def tile_for(cells: int, max_tile: int = MAX_TILE) -> tuple:
     """(tile, padded cell count) for a cell axis of ``cells``."""
     pad = -(-max(cells, 1) // LANE) * LANE
-    tile = min(MAX_TILE, pad)
+    tile = min(max_tile, pad)
     pad = -(-pad // tile) * tile
     return tile, pad
 
@@ -108,6 +113,29 @@ def asymmetric_periodic(params, *, n_accesses: int, tile: int,
         in_specs=_row_specs(tile, (ASYM_ROWS,), 0),
         out_specs=pl.BlockSpec((ASYM_ROWS, tile), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((ASYM_ROWS, c), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(params)
+
+
+def _sym_periodic_kernel(params_ref, out_ref, *, n_flits: int):
+    out_ref[...] = symmetric_periodic_compute(
+        params_ref[...], n_flits=n_flits)
+
+
+def symmetric_periodic(params, *, n_flits: int, tile: int,
+                       interpret: bool = False):
+    """Whole symmetric grid in ONE launch: observe the pool-state window,
+    detect exact f32 state periods, extrapolate the warm-window delivery
+    sum bitwise to the horizon."""
+    c = params.shape[1]
+    return pl.pallas_call(
+        functools.partial(_sym_periodic_kernel, n_flits=n_flits),
+        grid=(c // tile,),
+        in_specs=_row_specs(tile, (SYM_ROWS,), 0),
+        out_specs=pl.BlockSpec((SYM_PERIODIC_ROWS, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((SYM_PERIODIC_ROWS, c), jnp.float32),
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,

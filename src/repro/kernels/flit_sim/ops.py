@@ -20,11 +20,12 @@ import jax
 from repro.kernels.flit_sim import kernel as _k
 from repro.kernels.flit_sim.ref import (  # noqa: F401  (re-exported)
     ASYM_ROWS, PERIOD_EPS, PERIOD_MAX, PERIOD_OBS, PIPE_MAX_K, PIPE_ROWS,
-    SCAL_COLS, SYM_ROWS,
+    SCAL_COLS, SYM_PERIOD_OBS, SYM_PERIODIC_ROWS, SYM_ROWS,
 )
 
 pad_cells = _k.pad_cells
 tile_for = _k.tile_for
+SYM_PERIODIC_MAX_TILE = _k.SYM_PERIODIC_MAX_TILE
 
 
 def default_interpret() -> bool:
@@ -49,6 +50,14 @@ def asymmetric_periodic_launch(params, *, n_accesses: int, tile: int,
     """One-launch periodic run; returns (out_rows, detected [cells])."""
     out = _k.asymmetric_periodic(params, n_accesses=n_accesses, tile=tile,
                                  interpret=_resolve(interpret))
+    return out, out[1, :cells] > 0.5
+
+
+def symmetric_periodic_launch(params, *, n_flits: int, tile: int,
+                              cells: int, interpret=None):
+    """One-launch periodic run; returns (out_rows, detected [cells])."""
+    out = _k.symmetric_periodic(params, n_flits=n_flits, tile=tile,
+                                interpret=_resolve(interpret))
     return out, out[1, :cells] > 0.5
 
 

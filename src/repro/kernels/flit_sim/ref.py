@@ -40,6 +40,9 @@ asymmetric ``params`` [8, C]: AsymmetricLaneParams fields in dataclass
 order (total_lanes .. access_bits) then 6 x, 7 y.  Output [8, C]:
 0 rep, 1 detected, 2 period.
 
+symmetric periodic: input is the symmetric ``params`` [16, C] stack;
+output [8, C]: 0 rep, 1 detected, 2 period (pad rows zero).
+
 pipelining ``params`` [8, C]: 0 k_devices, 1 ucie_line_ui,
 2 device_line_ui.  ``state`` [16, C]: 0..7 dev_ready (padded to 8
 devices), 8 link_free, 9 idx, 10 rep; output adds 11 conv.  ``hist``
@@ -74,6 +77,24 @@ PERIOD_OBS = PERIOD_WARM + PERIOD_WINDOW
 #: accumulation noise (~1e-5 over the window) while non-matches differ by
 #: a multiple of 1/PERIOD_MAX >= 1.5e-2
 PERIOD_EPS = 1e-4
+
+#: symmetric periodic detector: same warm/window geometry as the
+#: asymmetric one, but the match predicate is EXACT f32 equality of the
+#: whole 7-component pool/credit core against the lagged observation row
+#: (plus an integer-valued delivery window, so every f32 sum below is
+#: exact) — a state match is a trajectory certificate, so extrapolation
+#: is bit-identical to the fixed engine wherever the cell detects
+SYM_PERIOD_OBS = PERIOD_WARM + PERIOD_WINDOW
+#: output rows of the symmetric periodic contract (0 rep, 1 detected,
+#: 2 period; pad rows zero)
+SYM_PERIODIC_ROWS = 8
+#: probe-attempt gate: saturated pools re-round the proportional
+#: read/write split every step, so their state period always exceeds
+#: PERIOD_MAX and the observation probe is guaranteed wasted work (an
+#: extra compiled program + SYM_PERIOD_OBS cycles).  Grids whose max
+#: backlog exceeds this skip straight to the chunked core.  Purely a
+#: cost heuristic — detection itself stays an exact state match.
+SYM_PERIODIC_MAX_BACKLOG = 4.0
 
 #: device-ready table width shared with flitsim._PIPELINING_PAD_K
 PIPE_MAX_K = 8
@@ -207,6 +228,98 @@ def asymmetric_periodic_compute(params, *, n_accesses: int):
                      + [pad] * (ASYM_ROWS - 3))
 
 
+def symmetric_periodic_compute(params, *, n_flits: int):
+    """One-launch period-exact symmetric evaluation.
+
+    Runs the SYM_PERIOD_OBS-cycle observation (warm prefix, then a
+    PERIOD_WINDOW ring of per-cycle core states and data-slot
+    deliveries), detects each cell's pool-state period by EXACT f32
+    equality of the full 7-component core against the lagged rows, and
+    extrapolates the warm-window delivery sum in closed form to the full
+    horizon::
+
+        S(W0..N) = g(N - n0) - g(W0 - n0)
+        g(M)     = (M // d) * P + C[M mod d]          n0 = SYM_PERIOD_OBS
+
+    where ``P`` is the delivery sum over the last detected period of the
+    window and ``C`` its prefix sums.  A state match is a trajectory
+    certificate (the step map is state-only), so every future delivery
+    repeats bit-for-bit; requiring the window deliveries to be
+    integer-valued makes all the f32 sums above exact, and the report
+    reproduces the fixed engine's sequential accumulation BITWISE.
+    Undetected cells (aperiodic in f32, period > PERIOD_MAX, fractional
+    deliveries, or still transient) are flagged for exact escalation by
+    the caller.  Callers must keep ``n_flits // 4 >= SYM_PERIOD_OBS`` so
+    the warm window opens after the observation ends.
+    """
+    W = PERIOD_WINDOW
+    cells = params.shape[1]
+    p = SymmetricFlitParams(*[params[i] for i in range(11)])
+    x, y, backlog = params[11], params[12], params[13]
+    step = _symmetric_stepfn(p, x, y, backlog)
+
+    core = tuple(jnp.zeros((cells,), jnp.float32) for _ in range(7))
+    core = jax.lax.fori_loop(0, PERIOD_WARM,
+                             lambda _, c: step(c)[0], core)
+
+    # observation window: 8 stacked W-row bands — the 7 core components
+    # after each observed cycle plus that cycle's data-slot delivery
+    def obs(i, carry):
+        core, win = carry
+        core, nd = step(core)
+        for band, v in enumerate(core + (nd,)):
+            win = jax.lax.dynamic_update_slice(
+                win, v[None, :], (band * W + i, 0))
+        return core, win
+
+    win0 = jnp.zeros((8 * W, cells), jnp.float32)
+    core, win = jax.lax.fori_loop(0, W, obs, (core, win0))
+    dwin = win[7 * W:8 * W]
+
+    # smallest lag d whose full core matches EXACTLY; the core alone
+    # determines the whole future trajectory, so an exact match repeats
+    # the delivery window verbatim forever
+    ok = None
+    for c in range(7):
+        band = win[c * W:(c + 1) * W]
+        lag = band[W - 1 - PERIOD_MAX:W - 1][::-1]    # row j <-> d = j+1
+        eq = band[W - 1][None, :] == lag
+        ok = eq if ok is None else ok & eq
+    # integer-delivery gate: all f32 partial sums of an integer window
+    # below 2^24 are exact, so the closed form equals the fixed engine's
+    # sequential fold bit-for-bit
+    is_int = (jnp.floor(dwin) == dwin).astype(jnp.float32)
+    suffix = jnp.cumsum(is_int[::-1], axis=0)         # rows from the end
+    need = jax.lax.broadcasted_iota(
+        jnp.float32, (PERIOD_MAX, cells), 0) + 1.0
+    ok = ok & (suffix[:PERIOD_MAX] == need)
+    detected = jnp.any(ok, axis=0)
+    d = jnp.argmax(ok, axis=0).astype(jnp.int32) + 1
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (W, cells), 0)
+    in_period = rows >= (W - d)[None, :]              # last d deliveries
+    psum = jnp.sum(jnp.where(in_period, dwin, 0.0), axis=0)
+
+    def g(M):                                         # M static >= 0
+        m = M // d
+        r = M - m * d
+        pref = in_period & (rows < (W - d + r)[None, :])
+        return (m.astype(jnp.float32) * psum
+                + jnp.sum(jnp.where(pref, dwin, 0.0), axis=0))
+
+    W0 = n_flits // 4
+    S = g(n_flits - SYM_PERIOD_OBS) - g(W0 - SYM_PERIOD_OBS)
+
+    # same expression order as flitsim._symmetric_efficiency
+    data_bits = S * 128.0
+    cap_bits = 2.0 * jnp.float32(n_flits - W0) * p.flit_bits
+    rep = jnp.where(detected, data_bits / cap_bits, 0.0)
+    pad = jnp.zeros_like(rep)
+    return jnp.stack([rep, detected.astype(jnp.float32),
+                      jnp.where(detected, d, 0).astype(jnp.float32)]
+                     + [pad] * (SYM_PERIODIC_ROWS - 3))
+
+
 def pipelining_chunk_compute(params, state, hist, scal, *, chunk: int):
     """Per-chunk body of the adaptive Fig-13 pipelining core, row-stacked.
 
@@ -259,6 +372,10 @@ def symmetric_chunk_ref(params, state, hist, scal, *, chunk: int):
 
 def asymmetric_periodic_ref(params, *, n_accesses: int):
     return asymmetric_periodic_compute(params, n_accesses=n_accesses)
+
+
+def symmetric_periodic_ref(params, *, n_flits: int):
+    return symmetric_periodic_compute(params, n_flits=n_flits)
 
 
 def pipelining_chunk_ref(params, state, hist, scal, *, chunk: int):

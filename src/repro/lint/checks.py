@@ -344,11 +344,14 @@ _TRACED_ENTRY = {"pallas_call": (0,), "scan": (0,), "while_loop": (0, 1),
 #: traced value is safe, so taint does not flow through them
 _STATIC_ATTRS = {"shape", "dtype", "ndim", "size"}
 
+#: FIFO mutators through which in-flight taint enters a container
+_QUEUE_PUSH = {"append", "appendleft", "extend"}
+
 
 def check_rl004(sources: List[Source]) -> Iterable[Finding]:
     """Traced-control-flow / sync-point detector.
 
-    A *traced scope* is a function passed (directly or through
+    (a) A *traced scope* is a function passed (directly or through
     ``functools.partial``) to ``pl.pallas_call`` or to
     ``lax.scan/while_loop/fori_loop/cond/associative_scan``.  Inside
     such scopes the positional parameters are traced values; Python
@@ -357,10 +360,26 @@ def check_rl004(sources: List[Source]) -> Iterable[Finding]:
     either crash at trace time or silently bake one trace's value into
     the compiled program.  Keyword-only parameters are static (the
     ``functools.partial`` convention for grid constants) and stay
-    exempt, as do ``.shape``/``.dtype`` reads."""
+    exempt, as do ``.shape``/``.dtype`` reads.
+
+    (b) A *streaming dispatch loop* is a Python ``for`` loop that calls
+    a ``cached_program(...)`` executable.  Values returned by the
+    executable (and anything pulled back out of a FIFO they were pushed
+    into) are *in-flight device values*: a host sync on one —
+    ``np.asarray(...)`` / ``.block_until_ready()`` /
+    ``jax.device_get(...)`` — blocks the host until that dispatch
+    completes, serializing the marshal/device overlap the async
+    double-buffered engine exists to provide.  The one legitimate sync
+    is the bounded-FIFO retire path, which carries an audited
+    ``# repro-lint: disable=RL004`` directive."""
     findings: List[Finding] = []
     for src in sources:
         np_aliases = _numpy_aliases(src.tree)
+        seen_sync: Set[int] = set()
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.FunctionDef):
+                findings.extend(_dispatch_sync_findings(
+                    src, node, np_aliases, seen_sync))
         defs: Dict[str, List[ast.FunctionDef]] = {}
         for node in ast.walk(src.tree):
             if isinstance(node, ast.FunctionDef):
@@ -499,6 +518,84 @@ def _attr_root(node: ast.Attribute) -> Optional[str]:
     while isinstance(value, ast.Attribute):
         value = value.value
     return value.id if isinstance(value, ast.Name) else None
+
+
+def _dispatch_sync_findings(src: Source, fn: ast.FunctionDef,
+                            np_aliases: Set[str],
+                            seen: Set[int]) -> Iterable[Finding]:
+    """RL004(b): host syncs on in-flight device values inside a function
+    that drives a streaming dispatch loop (see :func:`check_rl004`)."""
+    progs = {node.targets[0].id for node in ast.walk(fn)
+             if isinstance(node, ast.Assign) and len(node.targets) == 1
+             and isinstance(node.targets[0], ast.Name)
+             and isinstance(node.value, ast.Call)
+             and _callee_name(node.value.func) == "cached_program"}
+    if not progs:
+        return
+
+    def calls_prog(tree: ast.AST) -> bool:
+        return any(isinstance(c, ast.Call) and isinstance(c.func, ast.Name)
+                   and c.func.id in progs for c in ast.walk(tree))
+
+    if not any(isinstance(n, ast.For) and calls_prog(n)
+               for n in ast.walk(fn)):
+        return
+    # in-flight taint: program results, plus any FIFO they are pushed
+    # into and everything unpacked back out of it (fixed point)
+    taint = set(progs)
+    for _ in range(16):
+        grew = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and _tainted(node.value, taint):
+                for t in node.targets:
+                    for name in _target_names(t):
+                        grew |= name not in taint
+                        taint.add(name)
+            elif isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _QUEUE_PUSH and \
+                    isinstance(node.func.value, ast.Name) and \
+                    any(_tainted(a, taint) for a in node.args):
+                name = node.func.value.id
+                grew |= name not in taint
+                taint.add(name)
+        if not grew:
+            break
+    where = f"{fn.name}() ({src.rel}:{fn.lineno})"
+    for stmt in ast.walk(fn):
+        if not isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign,
+                                 ast.Expr, ast.Return)):
+            continue
+        for call in ast.walk(stmt):
+            desc = _sync_call_desc(call, np_aliases, taint)
+            if desc and stmt.lineno not in seen:
+                seen.add(stmt.lineno)
+                yield Finding(
+                    "RL004", src.rel, stmt.lineno,
+                    f"host sync: {desc} on an in-flight device value of "
+                    f"the streaming dispatch loop in {where} — blocking "
+                    f"inside the loop serializes host marshalling against "
+                    f"device execution; retire through the bounded FIFO "
+                    f"(the audited retire path carries a suppression)")
+                break
+
+
+def _sync_call_desc(node: ast.AST, np_aliases: Set[str],
+                    taint: Set[str]) -> Optional[str]:
+    """Describe ``node`` when it is a host-sync call on a tainted value."""
+    if not (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)):
+        return None
+    attr = node.func.attr
+    if attr == "block_until_ready" and _tainted(node.func.value, taint):
+        return ".block_until_ready()"
+    if attr == "device_get" and any(_tainted(a, taint) for a in node.args):
+        return "jax.device_get()"
+    if attr in ("asarray", "array") and \
+            _attr_root(node.func) in np_aliases and \
+            any(_tainted(a, taint) for a in node.args):
+        return f"np.{attr}()"
+    return None
 
 
 # ---------------------------------------------- RL005 registry consistency

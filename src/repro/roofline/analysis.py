@@ -280,7 +280,7 @@ def memsys_bridge(report: RooflineReport, shoreline_mm: float = 8.0,
     system the paper models -> memory-term seconds + interconnect power.
 
     The whole catalog is evaluated through the stacked, jit-cached
-    :func:`repro.core.memsys.catalog_grid` program — one compiled call,
+    ``repro.core.memsys._catalog_grid_impl`` program — one compiled call,
     not a per-system Python loop."""
     from repro.core import TrafficMix
     from repro.core.memsys import _catalog_grid_impl as catalog_grid

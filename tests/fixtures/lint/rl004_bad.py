@@ -1,5 +1,6 @@
 """RL004 bad: Python control flow, host syncs and stray numpy on traced
-values inside a lax.scan step."""
+values inside a lax.scan step; a host sync on an in-flight device value
+inside a streaming dispatch loop."""
 import jax
 import numpy as np
 
@@ -16,3 +17,17 @@ def step(carry, x):
 
 def run(xs):
     return jax.lax.scan(step, 0.0, xs)
+
+
+def cached_program(family, key, fn, args):
+    return fn
+
+
+def stream(chunks):
+    prog = cached_program("demo.sim", (), run, chunks[0])
+    out = []
+    for chunk in chunks:
+        res = prog(chunk)
+        out.append(np.asarray(res))   # sync inside the dispatch loop:
+        # the host blocks on chunk t before marshalling chunk t+1
+    return out

@@ -1,7 +1,11 @@
 """RL004 good: traced step uses jnp.where; branches only on static
-keyword-only parameters and shapes."""
+keyword-only parameters and shapes; the streaming dispatch loop syncs
+only through the audited bounded-FIFO retire path."""
+import collections
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def step(carry, x, *, saturate=True):
@@ -15,3 +19,25 @@ def step(carry, x, *, saturate=True):
 
 def run(xs):
     return jax.lax.scan(step, jnp.zeros(1), xs)
+
+
+def cached_program(family, key, fn, args):
+    return fn
+
+
+def stream(chunks, prefetch=2):
+    prog = cached_program("demo.sim", (), run, chunks[0])
+    inflight = collections.deque()    # FIFO of in-flight dispatches
+    out = []
+
+    def retire():
+        # repro-lint: disable=RL004  (audited FIFO retire sync)
+        out.append(np.asarray(inflight.popleft()))
+
+    for chunk in chunks:
+        inflight.append(prog(chunk))  # async dispatch, bounded depth
+        while len(inflight) >= prefetch:
+            retire()
+    while inflight:
+        retire()
+    return out

@@ -22,8 +22,10 @@ from repro.core import flitsim
 from repro.core import space as space_mod
 from repro.core.flitsim import (
     ADAPTIVE_SIM, FIXED_SIM, SYMMETRIC_PARAMS, SimConfig,
-    SymmetricFlitParams, simulate_symmetric, sweep, sweep_pipelining,
+    SymmetricFlitParams, simulate_symmetric,
 )
+from repro.core.flitsim import _sweep_impl as sweep
+from repro.core.flitsim import _sweep_pipelining_impl as sweep_pipelining
 from repro.core.space import DesignSpace, axis
 from repro.core.ucie import UCIE_A_48G_45U, UCIE_S_32G
 

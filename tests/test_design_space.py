@@ -4,10 +4,11 @@ Four contracts:
 
   * ONE evaluation covering [configs x catalog x mixes x backlogs x
     shorelines] compiles exactly once per engine family (shared-cache
-    counters), and the legacy front-ends (``sweep``, ``catalog_grid``,
-    ``rank_grid``) run WARM against a space-primed cache.
+    counters), and the retired front-ends' ``_*_impl`` engines
+    (``_sweep_impl``, ``_catalog_grid_impl``, ``_rank_grid_impl``) run
+    WARM against a space-primed cache.
   * The unified API reproduces the pinned seed goldens <= 1e-6 and is
-    bit-identical to the legacy wrappers (same executables).
+    bit-identical to the ``_*_impl`` engines (same executables).
   * The new capabilities work: per-mix backlog knees along the bridge's
     configs axis, the joint (k x ucie_line_ui x device_line_ui)
     pipelining sweep, protocol-parameter perturbations, and the joint
@@ -19,9 +20,12 @@ import pytest
 
 from repro.core import flitsim
 from repro.core import space as space_mod
-from repro.core.flitsim import CANONICAL_MIXES, sweep, sweep_pipelining
-from repro.core.memsys import catalog_grid
-from repro.core.selector import SelectionConstraints, rank_grid
+from repro.core.flitsim import CANONICAL_MIXES
+from repro.core.flitsim import _sweep_impl as sweep
+from repro.core.flitsim import _sweep_pipelining_impl as sweep_pipelining
+from repro.core.memsys import _catalog_grid_impl as catalog_grid
+from repro.core.selector import SelectionConstraints
+from repro.core.selector import _rank_grid_impl as rank_grid
 from repro.core.space import (
     OWN_MIX, AxisSet, DesignSpace, axis, joint_frontier, regimes,
 )

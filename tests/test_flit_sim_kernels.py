@@ -13,6 +13,10 @@ Contracts:
   * the period detector finds a period that DIVIDES the true rational
     credit period ``(x + y) / gcd(x, y)``, and its ~2-period
     extrapolated report matches the full-horizon fixed engine to 1e-6.
+  * the symmetric period detector (PR 10) certifies an exact f32
+    pool-state period over a short observation window and extrapolates
+    the warm-window delivery sum BITWISE to the fixed horizon; grids it
+    cannot certify (saturated backlogs) fall back to the chunked core.
   * ``last_run_info()`` reports the engine, launch count and retired
     cycle rate; the periodic run adds the detected-period histogram.
 
@@ -30,8 +34,11 @@ import jax.numpy as jnp
 from repro.core import flitsim
 from repro.core.flitsim import (
     ADAPTIVE_SIM, ASYMMETRIC_PARAMS, FIXED_SIM, PALLAS_SIM,
-    AsymmetricLaneParams, SimConfig, sweep, sweep_pipelining,
+    SYMMETRIC_PARAMS, AsymmetricLaneParams, SimConfig,
+    SymmetricFlitParams,
 )
+from repro.core.flitsim import _sweep_impl as sweep
+from repro.core.flitsim import _sweep_pipelining_impl as sweep_pipelining
 from repro.core.traffic import mix_grid
 from repro.kernels.flit_sim import kernel as fs_kernel
 from repro.kernels.flit_sim import ops as fs_ops
@@ -86,6 +93,24 @@ class TestKernelMatchesRef:
         out_k = fs_kernel.asymmetric_periodic(padded, n_accesses=4096,
                                               tile=tile, interpret=True)
         out_r = fs_ref.asymmetric_periodic_compute(padded, n_accesses=4096)
+        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+    def _sym_rows(self, backlogs=(1.0, 1.5, 2.0), n_mixes=9):
+        gx, gy = mix_grid(n_mixes)
+        pstack = SymmetricFlitParams.stack(
+            [SYMMETRIC_PARAMS[k] for k in ("cxl_opt", "chi")])
+        rows = flitsim._sym_param_rows(
+            pstack, jnp.asarray(gx), jnp.asarray(gy),
+            jnp.asarray(backlogs, jnp.float32))
+        return rows, 2 * len(backlogs) * n_mixes
+
+    def test_symmetric_periodic_bit_exact(self):
+        rows, cells = self._sym_rows()
+        tile, cpad = fs_ops.tile_for(cells, fs_ops.SYM_PERIODIC_MAX_TILE)
+        padded = fs_ops.pad_cells(rows, cpad)
+        out_k = fs_kernel.symmetric_periodic(padded, n_flits=2048,
+                                             tile=tile, interpret=True)
+        out_r = fs_ref.symmetric_periodic_compute(padded, n_flits=2048)
         np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
 
     def test_pad_cells_replicates_cell_zero(self):
@@ -216,6 +241,55 @@ class TestPeriodDetector:
             assert info["launches"] == 2
         else:       # chunked fall-back still honors the engine contract
             assert float(np.max(np.abs(a - f))) <= 1e-3
+
+
+class TestSymmetricPeriodicDetector:
+    """PR 10: exact-state symmetric period certificate + bitwise
+    warm-window extrapolation, with chunked-core fall-back."""
+
+    LOW = dict(protocols=tuple(SYMMETRIC_PARAMS),
+               mixes=_dense_mixes(9), backlogs=[1.0, 1.5, 2.0])
+
+    def test_low_backlog_grid_bitwise_vs_fixed(self):
+        f = np.asarray(sweep(**self.LOW).efficiency)
+        a = np.asarray(sweep(sim=ADAPTIVE_SIM, **self.LOW).efficiency)
+        np.testing.assert_array_equal(a, f)     # BITWISE, not approx
+        info = flitsim.last_run_info()["flitsim.symmetric"]
+        assert info["cycles_run"] == fs_ref.SYM_PERIOD_OBS
+        assert "periods" in info
+        assert sum(info["periods"].values()) + info["stragglers"] == \
+            3 * 3 * 9
+
+    def test_pallas_engine_bitwise_vs_fixed(self):
+        f = np.asarray(sweep(**self.LOW).efficiency)
+        p = np.asarray(sweep(sim=PALLAS_SIM, **self.LOW).efficiency)
+        np.testing.assert_array_equal(p, f)
+        info = flitsim.last_run_info()["flitsim.symmetric"]
+        assert info["engine"] == "pallas"
+        assert info["cycles_run"] == fs_ref.SYM_PERIOD_OBS
+
+    def test_saturated_grid_falls_back_to_chunked_core(self):
+        # saturated pools re-round the proportional split every cycle,
+        # so the exact-state certificate cannot fire; the detector must
+        # decline and the chunked core must honor its 1e-3 contract
+        kw = dict(protocols=tuple(SYMMETRIC_PARAMS),
+                  mixes=_dense_mixes(9), backlogs=[8.0, 64.0])
+        f = np.asarray(sweep(**kw).efficiency)
+        for sim in (ADAPTIVE_SIM, PALLAS_SIM):
+            a = np.asarray(sweep(sim=sim, **kw).efficiency)
+            assert float(np.max(np.abs(a - f))) <= 1e-3
+            info = flitsim.last_run_info()["flitsim.symmetric"]
+            assert "periods" not in info    # chunked core, not detector
+            assert info["cycles_run"] > fs_ref.SYM_PERIOD_OBS
+
+    def test_short_horizon_skips_detector(self):
+        # the observation window must fit inside the pre-warm quarter of
+        # the horizon: 96 // 4 < SYM_PERIOD_OBS, so the gate declines
+        kw = dict(self.LOW, n_flits=96)
+        f = np.asarray(sweep(**kw).efficiency)
+        a = np.asarray(sweep(sim=ADAPTIVE_SIM, **kw).efficiency)
+        assert float(np.max(np.abs(a - f))) <= 1e-3
+        assert "periods" not in flitsim.last_run_info()["flitsim.symmetric"]
 
 
 class TestPeriodDetectorHypothesis:

@@ -13,8 +13,9 @@ from repro.core.flitsim import (
     ANALYTIC, ASYMMETRIC_PARAMS, CANONICAL_MIXES, SIMULATORS,
     SYMMETRIC_PARAMS, AsymmetricLaneParams, SymmetricFlitParams,
     simulate_asymmetric, simulate_lpddr6_pipelining, simulate_symmetric,
-    sweep, sweep_pipelining,
 )
+from repro.core.flitsim import _sweep_impl as sweep
+from repro.core.flitsim import _sweep_pipelining_impl as sweep_pipelining
 
 
 # Golden outputs of the SEED (pre-batching) scalar simulators at the five

@@ -77,6 +77,14 @@ class TestFixtures:
         assert "Python `while`" in msgs
         assert "stray numpy" in msgs
         assert "float() on a traced value" in msgs
+        assert "in-flight device value" in msgs
+
+    def test_rl004_good_fixture_retire_sync_is_audited(self):
+        """The bounded-FIFO retire sync in the good fixture is reported
+        suppressed — audited, not invisible."""
+        rep = run_lint(FIXTURES / "rl004_good.py")
+        sup = [f for f in rep.suppressed if f.check == "RL004"]
+        assert len(sup) == 1 and "in-flight device value" in sup[0].message
 
     def test_suppression_keeps_finding_in_report(self):
         rep = run_lint(FIXTURES / "rl_suppressed.py")
@@ -100,11 +108,13 @@ class TestRealTree:
         assert rep.files > 50
         assert not rep.unsuppressed, \
             "\n".join(f.format() for f in rep.unsuppressed)
-        # the three pre-PR-6 kernels carry audited RL002 suppressions
+        # the three pre-PR-6 kernels carry audited RL002 suppressions;
+        # the two streaming retire paths carry audited RL004 ones
         assert {f.path for f in rep.suppressed} == {
             "repro/kernels/flash_attention/kernel.py",
             "repro/kernels/rglru_scan/kernel.py",
             "repro/kernels/ssd_scan/kernel.py",
+            "repro/core/streaming.py",
         }
 
     def test_cli_json_exit_zero(self):
@@ -121,7 +131,7 @@ class TestRealTree:
         assert payload["checks"] == ["RL001", "RL002", "RL003", "RL004",
                                      "RL005"]
         assert payload["counts"]["unsuppressed"] == 0
-        assert payload["counts"]["suppressed"] == 3
+        assert payload["counts"]["suppressed"] == 5
         assert payload["files"] > 50
 
     def test_cli_fails_on_bad_fixture(self):

@@ -1,6 +1,6 @@
 """Regression tests for the batched workload->design-space bridge.
 
-The rebuilt ``memsys_bridge`` (one stacked ``catalog_grid`` call) must
+The rebuilt ``memsys_bridge`` (one stacked ``_catalog_grid_impl`` call) must
 reproduce the pre-refactor scalar per-system Python loop, the batched
 ``bridge_design_space`` configs-axis path must compile exactly once per
 grid shape, and the selector's packaging / backlog-knee constraints must
@@ -13,7 +13,8 @@ from repro.core import flitsim
 from repro.core.memsys import (
     clear_grid_cache, grid_cache_stats, standard_catalog,
 )
-from repro.core.selector import SelectionConstraints, rank, rank_grid
+from repro.core.selector import SelectionConstraints, rank
+from repro.core.selector import _rank_grid_impl as rank_grid
 from repro.core.traffic import TrafficMix, mix_grid
 from repro.roofline.analysis import (
     RooflineReport, bridge_design_space, memsys_bridge,

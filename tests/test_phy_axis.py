@@ -6,9 +6,9 @@ Acceptance contracts (ISSUE 4):
   * the full [phy x mix x shoreline] catalog evaluation compiles exactly
     once per engine family (shared-cache counters);
   * UCIe-A / UCIe-S rows of the PHY-stacked space are BIT-identical to the
-    pre-axis flat catalog (``catalog_grid`` keys ``.../UCIe-A``);
+    pre-axis flat catalog (``_catalog_grid_impl`` keys ``.../UCIe-A``);
   * ``SpaceResult.frontier(..., where=mask)`` reproduces the
-    ``selector.rank_grid`` feasible-set winners on the bridge layout;
+    ``selector._rank_grid_impl`` feasible-set winners on the bridge layout;
   * UCIe-2.0 / 48G entries scale density linearly at constant pJ/b;
   * per-cell artifact consumers SKIP (not crash on) artifacts carrying the
     new ``phy`` / ``catalog_param`` dimensions.
@@ -22,12 +22,13 @@ import pytest
 
 from repro.core import space as space_mod
 from repro.core.memsys import (
-    approach_catalog_items, approach_grid, catalog_grid,
-    default_catalog_items,
+    approach_catalog_items, approach_grid, default_catalog_items,
 )
+from repro.core.memsys import _catalog_grid_impl as catalog_grid
 from repro.core.selector import (
-    SelectionConstraints, grid_ranking, rank_grid, system_mask,
+    SelectionConstraints, grid_ranking, system_mask,
 )
+from repro.core.selector import _rank_grid_impl as rank_grid
 from repro.core.space import DesignSpace, OWN_MIX, axis
 from repro.core.traffic import TrafficMix
 from repro.core.ucie import (

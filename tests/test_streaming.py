@@ -3,9 +3,13 @@
 Bit-identity contract: streamed winner labels equal the materialized
 ``argbest`` on every grid — same dims, same coords, same labels — for
 simulated and analytic metrics, with and without constraints, for any
-chunk size / axis order.  Plus: chunk-size edge cases, compile-cache
-accounting, ``cache_stats`` family validation, the legacy front-end
-deprecations, and the ``report(spec)`` byte-identity guarantees.
+chunk size / axis order — and, since PR 10, at any async ``prefetch``
+depth (the double-buffered dispatch loop overlaps host marshalling with
+in-flight device execution; the fold order is FIFO, so the running
+reductions are bit-identical to the sequential loop).  Plus: chunk-size
+edge cases, compile-cache accounting, ``cache_stats`` family validation,
+the retired positional front-ends, and the ``report(spec)``
+byte-identity guarantees.
 """
 import json
 import os
@@ -216,20 +220,115 @@ class TestStreamingCompileCache:
             cache_stats(("flitsim.symetric",))
 
 
-class TestDeprecatedFrontEnds:
-    def test_legacy_front_ends_warn_with_migration_hint(self):
-        from repro.core.memsys import catalog_grid
-        from repro.core.selector import rank_grid
-        calls = [
-            lambda: flitsim.sweep(mixes=[(50.0, 50.0)], n_flits=64,
-                                  n_accesses=64),
-            lambda: flitsim.sweep_pipelining([1, 2, 4]),
-            lambda: catalog_grid(50.0, 50.0),
-            lambda: rank_grid(np.asarray([50.0]), np.asarray([50.0])),
-        ]
-        for call in calls:
-            with pytest.warns(DeprecationWarning, match="migration table"):
-                call()
+class TestAsyncDispatch:
+    """PR 10 async double-buffered dispatch: winners, win counts and
+    running bests stay bit-identical at EVERY in-flight depth, and the
+    ``stream.*`` telemetry reports the overlap accounting."""
+
+    def _space(self, n_fracs=5):
+        return DesignSpace([
+            axis("protocol_param", [{}, {"g_slots": 2.0}]),
+            axis("phy", [UCIE_S_32G, UCIE_A_32G_55U]),
+            axis("backlog", [2.0, 64.0]),
+            axis("read_fraction", np.linspace(0.0, 1.0, n_fracs)),
+        ], **FAST)
+
+    def _eval(self, space, **kw):
+        return space.evaluate(metrics=("sim_efficiency",),
+                              stream=StreamConfig(devices=1, **kw))
+
+    def test_prefetch_depths_bit_identical(self):
+        space = self._space()
+        seq = self._eval(space, chunk_cells=3, prefetch=1)
+        for prefetch in (2, 3, 8):
+            sr = self._eval(space, chunk_cells=3, prefetch=prefetch)
+            assert_same_winners(sr, seq.winners)
+            assert sr.win_counts == seq.win_counts
+            assert sr.best_by_label == seq.best_by_label
+
+    def test_prefetch_one_is_sequential(self):
+        # depth 1 retires each dispatch before the next marshal starts:
+        # the FIFO never holds a chunk across a marshal, so no overlap
+        space = self._space()
+        self._eval(space, chunk_cells=3, prefetch=1)
+        info = flitsim.last_run_info()["stream.sim"]
+        assert info["mode"] == "stream" and info["prefetch"] == 1
+        assert info["overlap_frac"] == 0.0
+
+    def test_stream_telemetry_contents(self):
+        space = self._space()
+        sr = self._eval(space, chunk_cells=3, prefetch=2)
+        info = flitsim.last_run_info()["stream.sim"]
+        assert info["dispatches"] == sr.n_dispatches == 7
+        assert info["prefetch"] == 2
+        assert info["pad_cells"] == 7 * 3 - 20 and info["cells"] == 20
+        assert 0.0 <= info["overlap_frac"] <= 1.0
+        assert info["elapsed_s"] > 0.0
+        assert 0.0 <= info["marshal_s"] <= info["elapsed_s"]
+
+    def test_single_chunk_smaller_than_space(self):
+        # n_cells < chunk_cells: ONE dispatch; the drain loop (not the
+        # bounded-depth gate) retires it
+        space = self._space()
+        ref = space.evaluate(metrics=("sim_efficiency",))
+        sr = self._eval(space, chunk_cells=10 ** 6, prefetch=4)
+        assert sr.n_dispatches == 1
+        assert_same_winners(sr, ref["sim_efficiency"].argbest("protocol"))
+
+    def test_non_divisor_tails_under_prefetch(self):
+        space = self._space()
+        ref = space.evaluate(metrics=("sim_efficiency",))
+        for chunk in (1, 3, 7, 19):
+            sr = self._eval(space, chunk_cells=chunk, prefetch=3)
+            assert_same_winners(sr,
+                                ref["sim_efficiency"].argbest("protocol"))
+
+    def test_catalog_engine_prefetch_bit_identical(self):
+        space = DesignSpace([
+            axis("read_fraction", np.linspace(0.0, 1.0, 9)),
+            axis("shoreline_mm", [4.0, 8.0]),
+        ])
+        seq = space.evaluate(metrics=("bandwidth_gbs",),
+                             stream=StreamConfig(chunk_cells=4, devices=1,
+                                                 prefetch=1))
+        for prefetch in (2, 5):
+            sr = space.evaluate(metrics=("bandwidth_gbs",),
+                                stream=StreamConfig(chunk_cells=4,
+                                                    devices=1,
+                                                    prefetch=prefetch))
+            assert_same_winners(sr, seq.winners)
+            assert sr.win_counts == seq.win_counts
+        info = flitsim.last_run_info()["stream.catalog"]
+        assert info["mode"] == "stream" and info["prefetch"] == 5
+
+    def test_prefetch_validated(self):
+        with pytest.raises(ValueError, match="prefetch"):
+            StreamConfig(prefetch=0)
+
+    def test_prefetch_participates_in_stream_key(self):
+        assert StreamConfig(prefetch=1).key() != \
+            StreamConfig(prefetch=2).key()
+        # the constraints slot stays LAST (the catalog engine peels it)
+        assert StreamConfig(prefetch=2).key()[-1] == \
+            StreamConfig(chunk_cells=4, prefetch=3).key()[-1]
+
+
+class TestRetiredFrontEnds:
+    def test_positional_front_ends_are_gone(self):
+        """PR 10 retired the deprecated positional wrappers; only the
+        private ``_*_impl`` engines remain (axes-first API on top)."""
+        from repro.core import memsys, selector
+        for mod, gone, kept in [
+            (flitsim, "sweep", "_sweep_impl"),
+            (flitsim, "sweep_pipelining", "_sweep_pipelining_impl"),
+            (memsys, "catalog_grid", "_catalog_grid_impl"),
+            (selector, "rank_grid", "_rank_grid_impl"),
+        ]:
+            assert not hasattr(mod, gone), gone
+            assert callable(getattr(mod, kept)), kept
+        import repro.core as core
+        assert not hasattr(core, "catalog_grid")
+        assert not hasattr(core, "rank_grid")
 
     def test_internal_paths_warning_free(self):
         from repro.core import rank
